@@ -1,0 +1,184 @@
+"""Discrete-event pipeline simulator, calibrated with measured component
+latencies from this repo's real implementations.
+
+Why a simulator: this container has one CPU, so engine-level wall-clock
+cannot exhibit H100-scale overlap.  The simulator reproduces the paper's
+figures from first principles: each (stage, iteration, microbatch) event
+respects the same dependencies the real engines enforce —
+
+  stage s, microbatch m, iteration n starts when:
+    (a) stage s is free,
+    (b) stage s-1 finished (m, n)            [hidden-state dependency]
+    (c) s == 0: sampling of (m, n-1) done    [autoregressive dependency]
+
+Baseline (vLLM-like PP) costs, from the paper's measurements (§3.1):
+  stage busy   = t_prep + t_fwd              (prep on the critical path)
+  last stage  += t_sample_gpu                (in-stage sampling)
+  edge latency = t_meta + t_xfer             (sync structure-unaware send)
+
+SiPipe costs:
+  stage busy   = max(t_fwd, t_prep)          (TSEM overlaps prep)
+  sampling     = async on CPUs, latency t_sample_cpu, off the stage;
+                 gates only dependency (c)
+  edge latency = t_xfer_async                (SAT: pre-posted receives)
+
+Calibration: t_sample_cpu is *measured* from ColumnWiseSampler (and the
+baseline's t_sample_gpu share from the paper's 22–40%% last-stage excess);
+t_prep is the paper's 12–19%% share; t_meta its 1.4–2.6 ms; t_xfer 1–2 ms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class PipeCosts:
+    p: int                      # pipeline stages
+    t_fwd: float                # per-stage forward seconds
+    t_prep: float               # input preparation seconds
+    t_sample_stage: float       # in-stage sampling (baseline last stage)
+    t_sample_async: float       # async CPU sampling (SiPipe)
+    t_edge: float               # inter-stage transfer latency
+    fwd_jitter: float = 0.0     # +- fractional per-stage variation (Obs. 3)
+
+    def stage_time(self, s: int, overlap: bool, sampling_async: bool) -> float:
+        base = max(self.t_fwd, self.t_prep) if overlap else self.t_fwd + self.t_prep
+        if self.fwd_jitter:
+            # deterministic alternating jitter models the 3-7% std-dev
+            base *= 1.0 + self.fwd_jitter * (1 if s % 2 else -1)
+        if s == self.p - 1 and not sampling_async:
+            base += self.t_sample_stage   # in-stage sampling (baseline)
+        return base
+
+
+@dataclasses.dataclass
+class SimResult:
+    iters_done: int
+    wall_s: float
+    stage_busy: List[float]
+    iteration_times: List[float]
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.iters_done / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def bubble_fracs(self) -> List[float]:
+        return [max(0.0, 1 - b / self.wall_s) for b in self.stage_busy]
+
+    @property
+    def tpot_mean(self) -> float:
+        return (sum(self.iteration_times) / len(self.iteration_times)
+                if self.iteration_times else 0.0)
+
+
+def simulate(costs: PipeCosts, *, sipipe: Optional[bool] = None,
+             overlap: Optional[bool] = None,
+             sampling_async: Optional[bool] = None,
+             n_iters: int = 64, n_micro: Optional[int] = None) -> SimResult:
+    """Event-driven simulation of ``n_iters`` decode iterations for each of
+    ``n_micro`` (default p) in-flight microbatches.
+
+    ``overlap``        — TSEM: prep hidden under the forward
+    ``sampling_async`` — CPU sampling off the stage (gates only the next
+                         iteration of the same microbatch)
+    ``sipipe``         — shorthand setting both.
+    """
+    if sipipe is not None:
+        overlap = sampling_async = sipipe
+    p = costs.p
+    m_count = n_micro or p
+    stage_free = [0.0] * p
+    stage_busy = [0.0] * p
+    stage_done: List[Dict[Tuple[int, int], float]] = [dict() for _ in range(p)]
+    sample_done: Dict[Tuple[int, int], float] = {}
+    iter_finish: Dict[Tuple[int, int], float] = {}
+
+    for n in range(n_iters):
+        for m in range(m_count):
+            t_ready = 0.0 if n == 0 else sample_done[(m, n - 1)]
+            for s in range(p):
+                dep = stage_done[s - 1][(m, n)] + costs.t_edge if s else t_ready
+                start = max(stage_free[s], dep)
+                dur = costs.stage_time(s, overlap, sampling_async)
+                end = start + dur
+                stage_free[s] = end
+                stage_busy[s] += dur
+                stage_done[s][(m, n)] = end
+            last = stage_done[p - 1][(m, n)]
+            sample_done[(m, n)] = last + (
+                costs.t_sample_async if sampling_async else 0.0)
+            iter_finish[(m, n)] = sample_done[(m, n)]
+
+    wall = max(iter_finish.values())
+    itimes = []
+    for m in range(m_count):
+        for n in range(1, n_iters):
+            itimes.append(iter_finish[(m, n)] - iter_finish[(m, n - 1)])
+    return SimResult(n_iters * m_count, wall, stage_busy, itimes)
+
+
+# ---------------------------------------------------------------------------
+# Paper-shaped configurations
+# ---------------------------------------------------------------------------
+
+SAMPLER_POOL = 48  # CPU sampler processes (paper testbed: 192-core hosts,
+                   # ~8 cores pinned to input prep, the rest to sampling;
+                   # each sampler handles a column slice of the batch)
+
+
+def paper_costs(model: str, p: int, *, measured_cpu_sample_s: float,
+                sipipe: bool = False) -> PipeCosts:
+    """Per-model stage costs shaped on the paper's H100 measurements.
+
+    ``measured_cpu_sample_s`` is this repo's single-core ColumnWiseSampler
+    latency for the full batch; the pool of SAMPLER_POOL samplers splits
+    batch columns, so effective async latency divides by the pool size.
+    """
+    # total forward time per iteration (all stages), H100-ish
+    total_fwd = {
+        "llama-3.1-70b": 0.050, "qwen-2.5-72b": 0.052, "mixtral-8x7b": 0.022,
+        "deepseek-v3": 0.120, "deepseek-v2.5": 0.085, "llama-3.1-405b": 0.160,
+    }[model]
+    t_fwd = total_fwd / p
+    t_prep = 0.16 * t_fwd / (1 - 0.16)         # 12-19% of the stage (Obs. 2)
+    t_sample_stage = 0.30 * t_fwd              # 22-40% last-stage excess (Obs. 1)
+    return PipeCosts(
+        p=p, t_fwd=t_fwd, t_prep=t_prep,
+        t_sample_stage=t_sample_stage,
+        t_sample_async=measured_cpu_sample_s / SAMPLER_POOL,
+        t_edge=(0.0001 if sipipe else 0.0020 + 0.0015),  # SAT vs 2-round sync
+        fwd_jitter=0.05,
+    )
+
+
+def ablation_variants(model: str, p: int, measured_cpu_sample_s: float):
+    """Incremental feature stack for the Fig.16-style ablation.  The async
+    sampling latency is the pooled one (paper_costs divides by the pool)."""
+    base = paper_costs(model, p, measured_cpu_sample_s=measured_cpu_sample_s)
+    plus_sampling = dataclasses.replace(base, t_sample_stage=0.0)
+    plus_tsem = plus_sampling  # TSEM handled by the sipipe stage_time path
+    plus_sat = dataclasses.replace(plus_tsem, t_edge=0.0001)
+    return {
+        "baseline": (base, False),
+        "+cpu-sampling": (plus_sampling, "sampling-only"),
+        "+tsem": (plus_tsem, "tsem"),
+        "+sat": (plus_sat, True),
+    }
+
+
+def simulate_variant(costs: PipeCosts, mode, n_iters: int = 64) -> SimResult:
+    """mode: False=baseline, True=full sipipe, or partial-feature strings."""
+    if mode is False or mode is True:
+        return simulate(costs, sipipe=bool(mode), n_iters=n_iters)
+    if mode == "sampling-only":
+        # CPU sampling without TSEM: prep still serial, edges still sync
+        return simulate(costs, overlap=False, sampling_async=True,
+                        n_iters=n_iters)
+    if mode == "tsem":
+        # sampling off-stage + prep overlapped, edges still synchronous
+        return simulate(dataclasses.replace(costs, t_edge=0.0035),
+                        overlap=True, sampling_async=True, n_iters=n_iters)
+    raise ValueError(mode)

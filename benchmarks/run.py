@@ -1,0 +1,366 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Component latencies used by
+the simulator are MEASURED from this repo's real implementations (sampler,
+SAT channels, TSEM executors); the pipeline-level reproductions of the
+paper's H100 figures come from the calibrated discrete-event simulator
+(benchmarks/pp_sim.py) since this container exposes one CPU device.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only sampler,ablation
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def _time(fn: Callable, *args, reps: int = 5, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn(*args)
+    return (time.perf_counter() - t0) / reps
+
+
+# ---------------------------------------------------------------------------
+# §5.1 — column-wise CPU sampling microbenchmark (real measurement)
+# ---------------------------------------------------------------------------
+
+def bench_sampler() -> Dict[str, float]:
+    """CPU sampling cost — incremental vs naive recompute at serving scale
+    (V ~ 152k, B up to 256) and realistic history depth (512 generated +
+    prompt tokens, where the naive path's per-iteration recompute hurts)."""
+    from repro.core.sampler import ColumnWiseSampler, NaiveSampler
+    from repro.core.sampling_params import SamplingParams
+
+    out = {}
+    params = SamplingParams(temperature=0.8, top_k=50,
+                            frequency_penalty=0.5, presence_penalty=0.2)
+    HIST = 512
+    for v, b in ((151_936, 64), (151_936, 256), (32_000, 256)):
+        rng = np.random.default_rng(0)
+        z = rng.normal(size=(b, v)).astype(np.float32)
+        cw = ColumnWiseSampler(v, b, max_len=4096)
+        nv = NaiveSampler(v)
+        # seed realistic histories: incremental folds them once; naive will
+        # recompute them on every subsequent iteration
+        hist = [rng.integers(0, v, HIST) for _ in range(b)]
+        cw.seed_prompt(0, b, list(range(b)), hist)
+        nv.history[0] = [h.astype(np.int64) for h in hist]
+        t_cw = _time(lambda: cw.sample(z, params), reps=3)
+        t_nv = _time(lambda: nv.sample(z, params), reps=3)
+        emit(f"sampler/incremental_v{v}_b{b}", t_cw * 1e6,
+             f"hist={HIST} speedup_vs_naive={t_nv / t_cw:.2f}x")
+        emit(f"sampler/naive_recompute_v{v}_b{b}", t_nv * 1e6, f"hist={HIST}")
+        # penalty-path isolation (greedy: no softmax/top-k in either path)
+        g = SamplingParams(greedy=True, frequency_penalty=0.5,
+                           presence_penalty=0.2)
+        t_cwp = _time(lambda: cw.sample(z, g), reps=3)
+        t_nvp = _time(lambda: nv.sample(z, g), reps=3)
+        emit(f"sampler/penalty_only_incremental_v{v}_b{b}", t_cwp * 1e6,
+             f"speedup_vs_naive={t_nvp / t_cwp:.2f}x")
+        # transposed-shard ingestion path (§5.1(3))
+        zt = np.ascontiguousarray(z.T)
+        cw_t = ColumnWiseSampler(v, b, max_len=4096)
+        t_cwt = _time(lambda: cw_t.sample(zt, params, transposed=True), reps=3)
+        emit(f"sampler/transposed_shards_v{v}_b{b}", t_cwt * 1e6,
+             "zero-gather TP-shard concat path")
+        out[f"cw_{v}_{b}"] = t_cw
+    return out
+
+
+# ---------------------------------------------------------------------------
+# §5.3 — SAT vs structure-unaware transmission (real channel objects)
+# ---------------------------------------------------------------------------
+
+def bench_sat() -> Dict[str, float]:
+    from repro.core.sat import StructureAwareChannel, StructureUnawareChannel
+
+    b, d = 256, 8192
+    tensors = {"hidden": np.zeros((b, d), np.float16),
+               "residual": np.zeros((b, d), np.float16)}
+    round_lat = 0.0007  # 0.7 ms per synchronous round (RDMA-scale, §5.3)
+
+    def unaware_iter():
+        ch = StructureUnawareChannel(round_lat)
+        ch.send(tensors)
+        ch.recv()
+
+    aware = StructureAwareChannel(round_lat)
+    aware.send(tensors)
+    aware.recv()  # capture iteration
+
+    def aware_iter():
+        aware.send(tensors)
+        aware.recv()
+
+    t_u = _time(unaware_iter, reps=3)
+    t_a = _time(aware_iter, reps=3)
+    emit("sat/structure_unaware_per_edge", t_u * 1e6, "rounds=4")
+    emit("sat/structure_aware_per_edge", t_a * 1e6,
+         f"rounds=1 speedup={t_u / t_a:.2f}x")
+    return {"t_edge_unaware": t_u, "t_edge_aware": t_a}
+
+
+# ---------------------------------------------------------------------------
+# §5.2 — TSEM overlap (real executor threads)
+# ---------------------------------------------------------------------------
+
+def bench_tsem() -> None:
+    from repro.core.scheduler import SchedulingOutput
+    from repro.core.tsem import SynchronousExecutor, TokenSafeExecutor
+
+    PREP = EXEC = 0.004
+    N = 24
+
+    def prepare(s, bufs):
+        time.sleep(PREP)
+
+    def execute(d, bufs):
+        time.sleep(EXEC)
+        return True
+
+    def sched(it):
+        return SchedulingOutput(it, 0, [0], np.zeros(1, np.int32),
+                                np.zeros(1, np.int32), False)
+
+    sync = SynchronousExecutor(prepare, execute)
+    t0 = time.perf_counter()
+    for it in range(N):
+        sync.run(sched(it))
+    t_sync = (time.perf_counter() - t0) / N
+
+    ex = TokenSafeExecutor(prepare, execute)
+    ex.start()
+    t0 = time.perf_counter()
+    for it in range(N):
+        ex.submit(sched(it))
+    for it in range(N):
+        ex.result(it, timeout=30)
+    t_tsem = (time.perf_counter() - t0) / N
+    ex.stop()
+    emit("tsem/synchronous_per_iter", t_sync * 1e6, "prep+exec serialized")
+    emit("tsem/token_safe_per_iter", t_tsem * 1e6,
+         f"overlap_gain={t_sync / t_tsem:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 1 / 8 — throughput across engines and parallel configs (simulator)
+# ---------------------------------------------------------------------------
+
+PAPER_SAMPLE_S = 0.0015 * 48  # the paper's engineered samplers finish a
+# microbatch in 1-2 ms *per sampler*; expressed pre-pool-division
+
+
+def bench_throughput(measured: Dict[str, float]) -> None:
+    """Two calibrations of the async sampling latency:
+      paper  — the paper's engineered C-level samplers (1.5 ms pooled)
+      meas   — this repo's numpy sampler (single-core full batch / pool)
+    """
+    from benchmarks.pp_sim import paper_costs, simulate
+
+    t_meas = measured.get("cw_151936_256", 0.10)
+    for model in ("qwen-2.5-72b", "llama-3.1-70b", "mixtral-8x7b",
+                  "deepseek-v3", "llama-3.1-405b"):
+        for p in (2, 4):
+            base = simulate(paper_costs(model, p,
+                                        measured_cpu_sample_s=PAPER_SAMPLE_S),
+                            sipipe=False)
+            emit(f"throughput/{model}_p{p}_baseline",
+                 1e6 / base.tokens_per_s, f"iters_per_s={base.tokens_per_s:.1f}")
+            for calib, t_s in (("paper", PAPER_SAMPLE_S), ("meas", t_meas)):
+                sip = simulate(paper_costs(model, p, measured_cpu_sample_s=t_s,
+                                           sipipe=True), sipipe=True)
+                emit(f"throughput/{model}_p{p}_sipipe_{calib}",
+                     1e6 / sip.tokens_per_s,
+                     f"iters_per_s={sip.tokens_per_s:.1f} "
+                     f"speedup={sip.tokens_per_s / base.tokens_per_s:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 3 / 4 / 11 — per-stage bubble anatomy (simulator timelines)
+# ---------------------------------------------------------------------------
+
+def bench_bubbles(measured: Dict[str, float]) -> None:
+    from benchmarks.pp_sim import paper_costs, simulate
+
+    t_cpu = PAPER_SAMPLE_S
+    for name, sip in (("baseline", False), ("sipipe", True)):
+        r = simulate(paper_costs("deepseek-v3", 4,
+                                 measured_cpu_sample_s=t_cpu, sipipe=sip),
+                     sipipe=sip)
+        fr = " ".join(f"s{i}={f:.2f}" for i, f in enumerate(r.bubble_fracs))
+        emit(f"bubbles/deepseek-v3_p4_{name}", r.tpot_mean * 1e6,
+             f"bubble_fracs: {fr}")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9 — batch size sweep  /  Fig. 10 — GPU-count scalability
+# ---------------------------------------------------------------------------
+
+def bench_batch_sweep(measured: Dict[str, float]) -> None:
+    import dataclasses as dc
+
+    from benchmarks.pp_sim import paper_costs, simulate
+
+    t_cpu = PAPER_SAMPLE_S
+    for bs_scale, tag in ((0.5, "b256"), (1.0, "b512"), (2.0, "b1024")):
+        for sip in (False, True):
+            c = paper_costs("qwen-2.5-72b", 4, measured_cpu_sample_s=t_cpu,
+                            sipipe=sip)
+            c = dc.replace(c, t_fwd=c.t_fwd * (0.6 + 0.4 * bs_scale),
+                           t_sample_stage=c.t_sample_stage * bs_scale,
+                           t_sample_async=c.t_sample_async * bs_scale)
+            r = simulate(c, sipipe=sip)
+            emit(f"batch_sweep/qwen72b_{tag}_{'sipipe' if sip else 'baseline'}",
+                 1e6 / r.tokens_per_s, f"iters_per_s={r.tokens_per_s:.1f}")
+
+
+def bench_scalability(measured: Dict[str, float]) -> None:
+    from benchmarks.pp_sim import paper_costs, simulate
+
+    t_cpu = PAPER_SAMPLE_S
+    tput = {}
+    for p in (2, 4, 8):
+        for sip in (False, True):
+            r = simulate(paper_costs("llama-3.1-70b", p,
+                                     measured_cpu_sample_s=t_cpu, sipipe=sip),
+                         sipipe=sip)
+            key = "sipipe" if sip else "baseline"
+            tput[(key, p)] = r.tokens_per_s
+            scale = r.tokens_per_s / tput.get((key, p // 2), r.tokens_per_s)
+            emit(f"scalability/llama70b_p{p}_{key}", 1e6 / r.tokens_per_s,
+                 f"iters_per_s={r.tokens_per_s:.1f} scale_vs_half={scale:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 12 / 13 — TPOT distribution (per-iteration latency percentiles)
+# ---------------------------------------------------------------------------
+
+def bench_tpot_cdf(measured: Dict[str, float]) -> None:
+    from benchmarks.pp_sim import paper_costs, simulate
+
+    t_cpu = PAPER_SAMPLE_S
+    for model, p in (("qwen-2.5-72b", 4), ("deepseek-v3", 4)):
+        for sip in (False, True):
+            r = simulate(paper_costs(model, p, measured_cpu_sample_s=t_cpu,
+                                     sipipe=sip), sipipe=sip, n_iters=128)
+            ts = np.array(r.iteration_times)
+            pct = {q: float(np.percentile(ts, q)) for q in (50, 90, 99)}
+            emit(f"tpot/{model}_p{p}_{'sipipe' if sip else 'baseline'}",
+                 r.tpot_mean * 1e6,
+                 f"p50={pct[50]*1e3:.1f}ms p90={pct[90]*1e3:.1f}ms "
+                 f"p99={pct[99]*1e3:.1f}ms")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 16 — per-component ablation
+# ---------------------------------------------------------------------------
+
+def bench_ablation(measured: Dict[str, float]) -> None:
+    """Reproduces Fig. 16's component ordering under the paper's sampler
+    calibration (bench_throughput reports the measured calibration)."""
+    from benchmarks.pp_sim import ablation_variants, simulate_variant
+
+    for model in ("qwen-2.5-72b", "mixtral-8x7b", "deepseek-v3"):
+        variants = ablation_variants(model, 4, PAPER_SAMPLE_S)
+        base_tput = None
+        for name, (costs, mode) in variants.items():
+            r = simulate_variant(costs, mode)
+            if base_tput is None:
+                base_tput = r.tokens_per_s
+            emit(f"ablation/{model}_{name}", 1e6 / r.tokens_per_s,
+                 f"gain_vs_baseline={r.tokens_per_s / base_tput:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# Real-engine end-to-end (CPU-scale, structural validation)
+# ---------------------------------------------------------------------------
+
+def bench_engine_e2e() -> None:
+    from repro.launch.serve import run as serve_run
+
+    for engine in ("naive", "sipipe"):
+        m = serve_run("stablelm-1.6b", engine=engine, pp=2, requests=4,
+                      max_batch=2, max_new_tokens=5, n_samplers=2,
+                      verbose=False)
+        emit(f"engine_e2e/{engine}", 1e6 / max(m["throughput_tok_s"], 1e-9),
+             f"tok_per_s={m['throughput_tok_s']:.2f} "
+             f"tpot_ms={m['tpot_mean_s'] * 1e3:.0f}")
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels (interpret-mode; TPU-target timing is out of scope here)
+# ---------------------------------------------------------------------------
+
+def bench_kernels() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    ks = jax.random.split(jax.random.key(0), 3)
+    b, s, h, kv, hd = 1, 512, 8, 2, 64
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32).astype(jnp.bfloat16)
+
+    def krn():
+        ops.flash_attention_bshd(q, k, v, q_block=128,
+                                 kv_block=128).block_until_ready()
+
+    t = _time(krn, reps=2)
+    emit("kernels/flash_attention_interpret_512", t * 1e6,
+         "interpret-mode; allclose-validated vs ref in tests")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args, _ = ap.parse_known_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    print("name,us_per_call,derived")
+    measured: Dict[str, float] = {}
+    if want("sampler"):
+        measured.update(bench_sampler())
+    if want("sat"):
+        bench_sat()
+    if want("tsem"):
+        bench_tsem()
+    if want("throughput"):
+        bench_throughput(measured)
+    if want("bubbles"):
+        bench_bubbles(measured)
+    if want("batch"):
+        bench_batch_sweep(measured)
+    if want("tpot"):
+        bench_tpot_cdf(measured)
+    if want("scalability"):
+        bench_scalability(measured)
+    if want("ablation"):
+        bench_ablation(measured)
+    if want("engine"):
+        bench_engine_e2e()
+    if want("kernels"):
+        bench_kernels()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Quickstart: build an assigned architecture, run one forward pass, one
+prefill and a few decode steps through the public API.
+
+  PYTHONPATH=src python examples/quickstart.py [--arch glm4-9b]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.models import ModelOptions, ShardCtx, build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b", choices=list_archs())
+    args = ap.parse_args()
+
+    # the -smoke suffix selects the reduced same-family config (CPU-sized)
+    cfg = get_config(args.arch + "-smoke")
+    print(f"arch={cfg.name} family={cfg.family} L={cfg.num_layers} "
+          f"d={cfg.d_model} V={cfg.vocab_size}")
+
+    model = build_model(cfg, ShardCtx.single(), ModelOptions(), enc_len=32)
+    params = model.init(jax.random.key(0))
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"params: {n/1e6:.2f}M")
+
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(2, cfg.vocab_size, (1, 12))
+    batch = {"tokens": jnp.asarray(prompt, jnp.int32)}
+    if cfg.family == "vlm":
+        from repro.models.transformer import cfg_n_patches
+        batch["patches"] = jnp.zeros((1, cfg_n_patches(cfg), cfg.d_model),
+                                     jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.zeros((1, 32, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = batch["tokens"][:, :4]
+
+    logits, cache = jax.jit(model.prefill)(params, batch)
+    print(f"prefill logits: {logits.shape}, cache leaves: "
+          f"{len(jax.tree.leaves(cache))}")
+
+    dcache = model.init_cache(1, 64)
+    def pad_into(dst, src):
+        if dst.shape == src.shape:
+            return src
+        return dst.at[tuple(slice(0, d) for d in src.shape)].set(src)
+    dcache = jax.tree.map(pad_into, dcache, cache)
+
+    pos = batch["tokens"].shape[1]
+    tok = int(np.asarray(logits).argmax(-1)[0])
+    generated = [tok]
+    decode = jax.jit(model.decode)
+    for _ in range(8):
+        logits, dcache = decode(params, dcache, {
+            "token": jnp.asarray([tok], jnp.int32),
+            "positions": jnp.asarray([pos], jnp.int32)})
+        tok = int(np.asarray(logits).argmax(-1)[0])
+        generated.append(tok)
+        pos += 1
+    print("greedy continuation:", generated)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Train a ~100M-param model for a few hundred steps with the production
+substrate: sharded AdamW, WSD schedule, deterministic restartable data,
+periodic checkpoints and a simulated crash + restart.
+
+  PYTHONPATH=src python examples/train_small.py [--steps 200]
+"""
+import argparse
+import shutil
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+from repro.launch.train import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--crash-demo", action="store_true",
+                    help="simulate a mid-run crash and restart from the "
+                         "latest checkpoint")
+    args = ap.parse_args()
+
+    ckpt = tempfile.mkdtemp(prefix="repro_train_")
+    try:
+        if args.crash_demo:
+            try:
+                run("stablelm-1.6b", steps=args.steps, batch=8, seq=128,
+                    ckpt_dir=ckpt, ckpt_every=20,
+                    simulate_crash_at=args.steps // 2, schedule="wsd")
+            except RuntimeError as e:
+                print(f"[demo] crashed as requested: {e}; restarting...")
+        out = run("stablelm-1.6b", steps=args.steps, batch=8, seq=128,
+                  ckpt_dir=ckpt, ckpt_every=20, schedule="wsd")
+        first, last = out["losses"][0], out["losses"][-1]
+        print(f"loss: {first:.3f} -> {last:.3f} over {len(out['losses'])} "
+              f"steps ({out['wall_s']:.0f}s)")
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

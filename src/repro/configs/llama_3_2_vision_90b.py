@@ -1,0 +1,24 @@
+"""llama-3.2-vision-90b [vlm] — cross-attention image layers.
+
+100L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.
+Backbone only; the vision tower is a STUB (input_specs() supplies
+precomputed patch embeddings).  One cross-attention layer per 4
+self-attention layers: 100 = 20 x (4 self + 1 cross).
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    num_layers=100,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128_256,
+    head_dim=128,
+    cross_attn_every=4,
+    rope_theta=500_000.0,
+    source="hf:meta-llama/Llama-3.2-11B-Vision; unverified",
+)

@@ -1,0 +1,14 @@
+"""SiPipe core: the paper's contribution as composable modules.
+
+sampler    — column-wise incremental CPU sampling (§5.1)
+tsem       — token-safe execution model: decoupled CPU/device FSMs (§5.2)
+sat        — structure-aware stage transmission (§5.3)
+bic        — buffered IPC channels (§6)
+scheduler  — continuous batching, p in-flight microbatches (§4.2)
+engine     — SiPipeEngine / NaivePPEngine end-to-end serving (§4)
+pipeline   — shard_map pipeline-parallel step builders (dry-run regime)
+"""
+from repro.core.sampling_params import SamplingParams  # noqa: F401
+from repro.core.sampler import ColumnWiseSampler, NaiveSampler  # noqa: F401
+from repro.core.scheduler import Scheduler, SchedulingOutput  # noqa: F401
+from repro.core.sequence import Sequence, SequenceCache  # noqa: F401

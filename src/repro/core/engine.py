@@ -1,0 +1,470 @@
+"""The SiPipe serving engine (§4): scheduler + p stage workers + CPU
+sampler pool + BIC channels, running a real JAX model end-to-end.
+
+Two engines share all components:
+
+  SiPipeEngine  — CPU column-wise sampling (decoupled from the last stage),
+                  TSEM double-buffered CPU/device executors per stage, SAT
+                  structure-aware stage channels.
+  NaivePPEngine — the pipeline-agnostic baseline: in-stage sampling on the
+                  final stage's critical path, synchronous prepare-then-
+                  execute, structure-unaware stage transmission.
+
+On this container everything runs on one CPU device, so stage compute
+serializes physically; the engines still exercise the full concurrency
+structure (threads, channels, FSMs) and *measure* the bubble anatomy:
+per-stage busy intervals, prep/stall times, sampler latency.  The paper's
+H100-scale headline numbers are reproduced by the calibrated discrete-
+event simulator in benchmarks/pp_sim.py, fed with latencies measured here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.bic import LocalRing, SubSlotRing
+from repro.core.sampler import ColumnWiseSampler, NaiveSampler
+from repro.core.sampling_params import SamplingParams
+from repro.core.sat import StructureAwareChannel, StructureUnawareChannel
+from repro.core.scheduler import Scheduler, SchedulingOutput
+from repro.core.sequence import Sequence, SequenceCache
+from repro.core.tsem import (
+    BatchMetadataCache,
+    ModelInputDescriptor,
+    SynchronousExecutor,
+    TokenSafeExecutor,
+)
+from repro.models.registry import Model
+from repro.models.stacked import run_stack
+from repro.models.common import rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Stage splitting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PPStage:
+    index: int
+    n_stages: int
+    groups: Tuple[int, int]              # [lo, hi) of the blocks stack
+    params: Any
+    prefill_fn: Callable                 # (params, x_or_tokens, pos0) -> (x|logits, cache)
+    decode_fn: Callable                  # (params, cache, x_or_tokens, positions) -> (x|logits, cache)
+    init_cache: Callable                 # (rows, s_max) -> cache tree
+
+    @property
+    def is_first(self) -> bool:
+        return self.index == 0
+
+    @property
+    def is_last(self) -> bool:
+        return self.index == self.n_stages - 1
+
+
+def split_for_pp(model: Model, params: Any, p: int) -> List[PPStage]:
+    """Partition a decoder LM into p contiguous stages (layer groups)."""
+    assert set(model.stacks) == {"blocks"}, (
+        "engine PP supports single-stack decoder families (dense/moe)")
+    st = model.stacks["blocks"]
+    assert st.n >= p, f"{st.n} groups < {p} stages"
+    bounds = [round(i * st.n / p) for i in range(p + 1)]
+    stages = []
+    for i in range(p):
+        lo, hi = bounds[i], bounds[i + 1]
+        sp: Dict[str, Any] = {
+            "blocks": jax.tree.map(lambda x: x[lo:hi], params["stacks"]["blocks"])}
+        if i == 0:
+            sp["embed"] = params["embed"]
+        if i == p - 1:
+            sp["lnf"], sp["head"] = params["lnf"], params["head"]
+        stages.append(_make_stage(model, i, p, (lo, hi), sp))
+    return stages
+
+
+def _make_stage(model: Model, idx: int, p: int, bounds, sp) -> PPStage:
+    st = model.stacks["blocks"]
+    lo, hi = bounds
+    n_groups = hi - lo
+    sub = dataclasses.replace(st, n=n_groups)
+    first, last = idx == 0, idx == p - 1
+
+    def prefill_fn(params, x_or_tokens, pos0, last_idx):
+        """last_idx [B]: each sequence's final real position (ragged
+        batches are right-padded; logits must come from the true last
+        token, not the pad tail)."""
+        s = x_or_tokens.shape[1]
+        ctx = model.make_ctx("prefill", pos0 + jnp.arange(s))
+        x = model.embed_tokens({"embed": params["embed"]}, x_or_tokens) if first \
+            else x_or_tokens
+        x, cache = run_stack(sub, params["blocks"], x, ctx, remat=False)
+        if last:
+            b = x.shape[0]
+            x_last = x[jnp.arange(b), last_idx]
+            return model.lm_head(params, x_last), cache
+        return x, cache
+
+    def decode_fn(params, cache, x_or_tokens, positions):
+        ctx = model.make_ctx("decode", positions)
+        x = model.embed_tokens({"embed": params["embed"]}, x_or_tokens) if first \
+            else x_or_tokens
+        x, cache = run_stack(sub, params["blocks"], x, ctx, cache_stacked=cache,
+                             remat=False)
+        if last:
+            return model.lm_head(params, x), cache
+        return x, cache
+
+    def init_cache(rows, s_max):
+        import repro.models.stacked as stacked
+
+        abstract = stacked.abstract_cache_tree(
+            dataclasses.replace(sub, n=n_groups), rows, s_max)
+        return stacked.zeros_cache(abstract)
+
+    return PPStage(idx, p, bounds, sp, jax.jit(prefill_fn), jax.jit(decode_fn),
+                   init_cache)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EngineConfig:
+    pp_degree: int = 2
+    max_batch: int = 4              # per microbatch
+    max_seq_len: int = 128
+    n_samplers: int = 2
+    cpu_sampling: bool = True       # False -> in-stage sampling (baseline)
+    tsem: bool = True               # False -> synchronous prepare+execute
+    sat: bool = True                # False -> structure-unaware transmission
+    channel_round_latency_s: float = 0.0   # inject per-round cost for benches
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class StageMetrics:
+    busy: List[Tuple[float, float]] = dataclasses.field(default_factory=list)
+    prep_s: float = 0.0
+    exec_s: float = 0.0
+    sample_s: float = 0.0
+
+
+class _StageWorker:
+    """One pipeline stage: communicator + CPU executor + device executor."""
+
+    def __init__(self, stage: PPStage, engine: "PPEngineBase"):
+        self.stage = stage
+        self.engine = engine
+        self.metrics = StageMetrics()
+        cfg = engine.cfg
+        rows = cfg.max_batch * cfg.pp_degree
+        self.cache = stage.init_cache(rows, cfg.max_seq_len)
+        self.meta_cache = BatchMetadataCache(cfg.pp_degree)
+        ch = StructureAwareChannel if cfg.sat else StructureUnawareChannel
+        self.out_channel = ch(cfg.channel_round_latency_s) if not stage.is_last else None
+        # device step used by the executor
+        if cfg.tsem:
+            self.executor = TokenSafeExecutor(self._prepare, self._execute,
+                                              name=f"stage{stage.index}")
+            self.executor.start()
+        else:
+            self.executor = SynchronousExecutor(self._prepare, self._execute,
+                                                name=f"stage{stage.index}")
+
+    # -- CPU executor side ---------------------------------------------------
+    def _prepare(self, sched: SchedulingOutput, bufs: Dict[str, np.ndarray]):
+        rows = np.array([self.engine.seq_cache.lookup(s).cache_row
+                         for s in sched.seq_ids], np.int32)
+        meta = self.meta_cache.update(sched, rows)
+        np.copyto(bufs["tokens"], meta.tokens)
+        np.copyto(bufs["positions"], meta.positions)
+        np.copyto(bufs["rows"], meta.rows)
+
+    # -- device executor side -----------------------------------------------
+    def _execute(self, desc: ModelInputDescriptor, bufs: Dict[str, np.ndarray]):
+        t0 = time.monotonic()
+        stage, eng = self.stage, self.engine
+        rows = jnp.asarray(bufs["rows"])
+        positions = jnp.asarray(bufs["positions"])
+        x_in = (jnp.asarray(bufs["tokens"]) if stage.is_first
+                else eng.recv_hidden(stage.index, desc.iteration))
+        cache_rows = jax.tree.map(lambda c: c[:, rows], self.cache)
+        out, new_cache = stage.decode_fn(stage.params, cache_rows, x_in, positions)
+        self.cache = jax.tree.map(lambda c, n: c.at[:, rows].set(n),
+                                  self.cache, new_cache)
+        out = jax.block_until_ready(out)
+        self.metrics.busy.append((t0, time.monotonic()))
+        if stage.is_last:
+            eng.emit_logits(desc, np.asarray(out, np.float32))
+        else:
+            eng.send_hidden(stage.index, desc.iteration,
+                            np.asarray(out, np.float32))
+        return True
+
+    def run_prefill(self, seq_batch: List[Sequence], x_or_tokens, pos0: int,
+                    rows: np.ndarray, last_idx: np.ndarray):
+        """Pipeline prefill pass for newly admitted sequences."""
+        stage = self.stage
+        t0 = time.monotonic()
+        out, cache = stage.prefill_fn(stage.params, x_or_tokens, pos0,
+                                      jnp.asarray(last_idx))
+        s = cache_len = None
+        # write the prefilled cache into assigned rows, padding length
+        def write(c_all, c_new):
+            # c_all [n, rows, S_max, ...]; c_new [n, B, Sp, ...]
+            sp = c_new.shape[2]
+            return c_all.at[:, rows, :sp].set(c_new)
+        self.cache = jax.tree.map(write, self.cache, cache)
+        out = jax.block_until_ready(out)
+        self.metrics.busy.append((t0, time.monotonic()))
+        return np.asarray(out, np.float32)
+
+    def stop(self):
+        if isinstance(self.executor, TokenSafeExecutor):
+            self.executor.stop()
+        self.metrics.prep_s = self.executor.prep_time
+        self.metrics.exec_s = self.executor.exec_time
+
+
+class PPEngineBase:
+    """Shared orchestration for both engines."""
+
+    def __init__(self, model: Model, params, cfg: EngineConfig):
+        self.model = model
+        self.cfg = cfg
+        self.arch: ArchConfig = model.cfg
+        self.scheduler = Scheduler(max_batch=cfg.max_batch, pp_degree=cfg.pp_degree,
+                                   max_seq_len=cfg.max_seq_len)
+        self.seq_cache = SequenceCache(cfg.max_batch * cfg.pp_degree)
+        self.stages = [
+            _StageWorker(s, self)
+            for s in split_for_pp(model, params, cfg.pp_degree)
+        ]
+        self.bic_i = LocalRing(max(8, 2 * cfg.pp_degree), "BIC-I")
+        self.bic_o = SubSlotRing(cfg.n_samplers, max(8, 2 * cfg.pp_degree))
+        self._hidden: Dict[Tuple[int, int], Any] = {}
+        self._hcv = threading.Condition()
+        self._logits: Dict[int, np.ndarray] = {}
+        self.samplers = [
+            ColumnWiseSampler(self.arch.vocab_size, cfg.max_batch,
+                              pp_degree=cfg.pp_degree,
+                              max_len=cfg.max_seq_len, seed=cfg.seed + i)
+            if cfg.cpu_sampling else
+            NaiveSampler(self.arch.vocab_size, seed=cfg.seed + i)
+            for i in range(cfg.n_samplers)
+        ]
+        self.sample_time = 0.0
+        self.iter_done_t: Dict[int, float] = {}
+        self.t_start = 0.0
+
+    # -- inter-stage hidden-state transport ------------------------------------
+    def send_hidden(self, from_stage: int, iteration: int, h: np.ndarray):
+        ch = self.stages[from_stage].out_channel
+        ch.send({"hidden": h})
+        with self._hcv:
+            self._hidden[(from_stage + 1, iteration)] = ch
+            self._hcv.notify_all()
+
+    def recv_hidden(self, stage: int, iteration: int):
+        deadline = time.monotonic() + 60
+        with self._hcv:
+            while (stage, iteration) not in self._hidden:
+                if time.monotonic() > deadline:
+                    raise TimeoutError(f"hidden for stage {stage} iter {iteration}")
+                self._hcv.wait(1.0)
+            ch = self._hidden.pop((stage, iteration))
+        return jnp.asarray(ch.recv()["hidden"], jnp.bfloat16)
+
+    # -- sampling ----------------------------------------------------------------
+    def emit_logits(self, desc: ModelInputDescriptor, logits: np.ndarray):
+        """Final stage output; SiPipe ships via BIC-L to the sampler pool."""
+        self._dispatch_sampling(desc.sched, logits)
+
+    def _dispatch_sampling(self, sched: SchedulingOutput, logits: np.ndarray):
+        t0 = time.monotonic()
+        k = self.cfg.n_samplers
+        b = logits.shape[0]
+        parts: List[np.ndarray] = [None] * k  # type: ignore
+        sp = self._params_for(sched)
+
+        def run(j):
+            cols = np.arange(j, b, k)
+            ids = self.samplers[j].sample(
+                logits[cols], sp, slot=sched.slot,
+                seq_ids=[sched.seq_ids[c] for c in cols])
+            self.bic_o.put(sched.iteration, j, (cols, ids))
+
+        threads = [threading.Thread(target=run, args=(j,)) for j in range(k)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        out = np.zeros(b, np.int32)
+        for cols, ids in self.bic_o.get(sched.iteration):
+            out[cols] = ids
+        self.sample_time += time.monotonic() - t0
+        self._on_sampled(sched, out)
+
+    def _params_for(self, sched: SchedulingOutput) -> SamplingParams:
+        return self.scheduler.seqs[sched.seq_ids[0]].params
+
+    def _on_sampled(self, sched: SchedulingOutput, token_ids: np.ndarray):
+        now = time.monotonic()
+        self.iter_done_t[sched.iteration] = now
+        finished = self.scheduler.complete(sched.iteration, sched.seq_ids, token_ids)
+        for sid in finished:
+            self.seq_cache.release(sid)
+        for s in self.samplers:
+            if finished and isinstance(s, ColumnWiseSampler):
+                s.evict(sched.slot)  # batch recomposition -> replica rebuild
+        for sid in sched.seq_ids:
+            if sid not in finished:
+                self.seq_cache.advance(sid)
+
+    # -- public API ------------------------------------------------------------
+    def add_request(self, prompt_ids: List[int], params: SamplingParams) -> int:
+        sid = len(self.scheduler.seqs)
+        self.scheduler.add_request(Sequence(sid, list(prompt_ids), params))
+        return sid
+
+    def _admit_and_prefill(self, sched: SchedulingOutput):
+        """Prefill newly admitted sequences through all stages."""
+        new = [sid for sid in sched.seq_ids
+               if self.seq_cache.lookup(sid) is None]
+        if not new:
+            return
+        seqs = [self.scheduler.seqs[s] for s in new]
+        rows = np.array([self.seq_cache.admit(s.seq_id, len(s.prompt_ids)).cache_row
+                         for s in seqs], np.int32)
+        max_len = max(s.length for s in seqs)
+        toks = np.zeros((len(seqs), max_len), np.int32)
+        for i, s in enumerate(seqs):
+            ids = s.prompt_ids + s.output_ids
+            toks[i, :len(ids)] = ids  # right-pad (positions mask the tail)
+        last_idx = np.array([s.length - 1 for s in seqs], np.int32)
+        x = jnp.asarray(toks)
+        for w in self.stages:
+            x_np = w.run_prefill(seqs, x, 0, rows, last_idx)
+            if not w.stage.is_last:
+                x = jnp.asarray(x_np, jnp.bfloat16)  # inter-stage hidden
+        # last stage output = logits at each sequence's final position
+        logits = np.asarray(x_np, np.float32)
+        sp = seqs[0].params
+        sampler = self.samplers[0]
+        ids = sampler.sample(logits, sp, slot=sched.slot, seq_ids=new) \
+            if isinstance(sampler, ColumnWiseSampler) else \
+            sampler.sample(logits, sp, slot=sched.slot)
+        self.scheduler.complete(sched.iteration, new, ids)
+        for sid in new:
+            if self.scheduler.seqs[sid].status.name != "FINISHED":
+                self.seq_cache.advance(sid)
+
+    def run(self, max_iterations: int = 10_000) -> List[Sequence]:
+        """Drive the pipeline until all requests finish."""
+        self.t_start = time.monotonic()
+        it = 0
+        inflight: List[SchedulingOutput] = []
+        while it < max_iterations:
+            sched = self.scheduler.schedule(it)
+            if sched is not None:
+                if sched.is_prefill:
+                    self._admit_and_prefill(sched)
+                    sched = self.scheduler.schedule(it)  # rebuilt after prefill
+                if sched is not None:
+                    self.bic_i.put(sched)
+                    self._submit(sched)
+                    inflight.append(sched)
+            # retire in order once the pipeline depth is reached
+            while len(inflight) >= (self.cfg.pp_degree if sched is not None else 1):
+                done = inflight.pop(0)
+                self._await_iteration(done)
+            if not self.scheduler.has_work and not inflight:
+                break
+            it += 1
+        for w in self.stages:
+            w.stop()
+        return self.scheduler.finished
+
+    # engine-specific:
+    def _submit(self, sched: SchedulingOutput):
+        raise NotImplementedError
+
+    def _await_iteration(self, sched: SchedulingOutput):
+        raise NotImplementedError
+
+    # -- metrics ----------------------------------------------------------------
+    def metrics(self) -> Dict[str, Any]:
+        t_end = max(self.iter_done_t.values()) if self.iter_done_t else self.t_start
+        wall = max(t_end - self.t_start, 1e-9)
+        toks = sum(len(s.output_ids) for s in self.scheduler.finished)
+        per_stage = []
+        for w in self.stages:
+            busy = sum(e - s for s, e in w.metrics.busy)
+            per_stage.append({
+                "busy_s": busy,
+                "prep_s": w.executor.prep_time,
+                "exec_s": w.executor.exec_time,
+                "bubble_frac": max(0.0, 1.0 - busy / wall),
+            })
+        tpots = []
+        for s in self.scheduler.finished:
+            if s.finish_t and s.first_token_t and len(s.output_ids) > 1:
+                tpots.append((s.finish_t - s.first_token_t) / (len(s.output_ids) - 1))
+        return {
+            "wall_s": wall,
+            "tokens": toks,
+            "throughput_tok_s": toks / wall,
+            "tpot_mean_s": float(np.mean(tpots)) if tpots else 0.0,
+            "tpot_p99_s": float(np.percentile(tpots, 99)) if tpots else 0.0,
+            "sample_s": self.sample_time,
+            "stages": per_stage,
+            "incremental_hits": sum(w.meta_cache.incremental_hits for w in self.stages),
+            "meta_rebuilds": sum(w.meta_cache.rebuilds for w in self.stages),
+        }
+
+
+class SiPipeEngine(PPEngineBase):
+    """TSEM executors run stages asynchronously; sampling on CPU pool."""
+
+    def _submit(self, sched: SchedulingOutput):
+        for w in self.stages:
+            if isinstance(w.executor, TokenSafeExecutor):
+                w.executor.submit(sched)
+            else:
+                threading.Thread(target=w.executor.run, args=(sched,),
+                                 daemon=True).start()
+
+    def _await_iteration(self, sched: SchedulingOutput):
+        deadline = time.monotonic() + 120
+        while sched.iteration not in self.iter_done_t:
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"iteration {sched.iteration} never completed")
+            time.sleep(0.0005)
+
+
+class NaivePPEngine(PPEngineBase):
+    """Synchronous baseline: stages run in order on the caller thread; the
+    final stage performs sampling *inside* its critical path."""
+
+    def __init__(self, model: Model, params, cfg: EngineConfig):
+        cfg = dataclasses.replace(cfg, tsem=False, sat=False, cpu_sampling=False)
+        super().__init__(model, params, cfg)
+
+    def _submit(self, sched: SchedulingOutput):
+        for w in self.stages:
+            w.executor.run(sched)
+
+    def _await_iteration(self, sched: SchedulingOutput):
+        deadline = time.monotonic() + 120
+        while sched.iteration not in self.iter_done_t:
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"iteration {sched.iteration} never completed")
+            time.sleep(0.0005)

@@ -1,0 +1,269 @@
+"""Column-wise CPU sampling with incremental metadata reuse (SiPipe §5.1).
+
+The sampler runs on host CPUs, decoupled from the accelerator: the final
+pipeline stage ships logits and goes straight to its next microbatch,
+eliminating the paper's *load-imbalance bubble*.
+
+Key mechanics reproduced from the paper:
+  * incremental penalty construction: each iteration touches exactly the B
+    entries of each penalty buffer addressed by the new token ids, instead
+    of recomputing dense penalty tensors from the output history Y (the
+    naive baseline below recomputes — cost grows with sequence length);
+  * preallocated max-length output buffer Y: new token ids are appended in
+    place — no reshape/reallocation per iteration;
+  * column-wise (transposed) layout on the *shard ingestion* path: TP
+    workers produce [B, V/t] logits shards; transposed to [V/t, B] they
+    concatenate along rows into Z^T [V, B] with zero gathers (§5.1(3)).
+    ``sample(..., transposed=True)`` consumes that layout directly;
+  * p distinct replicas (pipeline degree) — microbatch n and n+p are the
+    same sequence set, so each replica's buffers stay valid under PP.
+
+Hardware adaptation (DESIGN.md §sampler-layout): on this numpy substrate
+the compute-heavy steps (softmax/top-k) are fastest along contiguous
+vocab rows, so when logits arrive row-major [B, V] the penalty buffers are
+kept row-major too — the *incremental O(B) update* (the paper's actual
+saving) is layout-independent; the column-wise layout is used exactly
+where it pays: zero-copy transposed shard ingestion.
+
+``NaiveSampler`` implements the recompute-from-scratch baseline used for
+the ablation benchmark (paper Fig. 16).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.sampling_params import SamplingParams
+
+
+def _softmax(z: np.ndarray, axis: int) -> np.ndarray:
+    m = z.max(axis=axis, keepdims=True)
+    e = np.exp(z - m, dtype=np.float32)
+    return e / e.sum(axis=axis, keepdims=True)
+
+
+@dataclasses.dataclass
+class _Replica:
+    """Per-pipeline-slot penalty state.  ``layout`` is "rm" (row-major
+    [B, V]) or "cw" (column-wise [V, B], transposed-shard ingestion)."""
+
+    layout: str
+    freq: np.ndarray
+    pres: np.ndarray
+    out: np.ndarray         # [L_max, B] int32 output ids (row-appended)
+    out_len: np.ndarray     # [B] int32
+    seq_ids: List[int]
+
+
+class ColumnWiseSampler:
+    """The SiPipe CPU sampler (see module docstring)."""
+
+    def __init__(self, vocab_size: int, max_batch: int, *, pp_degree: int = 1,
+                 max_len: int = 4096, seed: int = 0):
+        self.v = vocab_size
+        self.max_batch = max_batch
+        self.p = pp_degree
+        self.max_len = max_len
+        self.rng = np.random.default_rng(seed)
+        self._replicas: Dict[int, _Replica] = {}
+
+    # ---- replica management ---------------------------------------------
+    def _replica(self, slot: int, batch: int, seq_ids: Sequence[int],
+                 layout: str) -> _Replica:
+        r = self._replicas.get(slot)
+        ids = list(seq_ids)
+        if (r is None or r.out_len.shape[0] != batch or r.seq_ids != ids
+                or r.layout != layout):
+            shape = (self.v, batch) if layout == "cw" else (batch, self.v)
+            r = _Replica(
+                layout=layout,
+                freq=np.zeros(shape, np.float32),
+                pres=np.zeros(shape, np.float32),
+                out=np.zeros((self.max_len, batch), np.int32),
+                out_len=np.zeros(batch, np.int32),
+                seq_ids=ids,
+            )
+            self._replicas[slot] = r
+        return r
+
+    def reset(self):
+        self._replicas.clear()
+
+    def evict(self, slot: int):
+        self._replicas.pop(slot, None)
+
+    # ---- the sampling pipeline -------------------------------------------
+    def sample(
+        self,
+        logits: np.ndarray,
+        params: SamplingParams,
+        *,
+        slot: int = 0,
+        seq_ids: Optional[Sequence[int]] = None,
+        transposed: bool = False,
+    ) -> np.ndarray:
+        """logits: [B, V] row-major, or [V, B] when ``transposed`` (the
+        zero-gather concatenation of per-worker [V/t, B] shards)."""
+        if transposed:
+            return self._sample_cw(np.asarray(logits, np.float32), params,
+                                   slot, seq_ids)
+        z = np.array(logits, np.float32, copy=True)          # [B, V]
+        b = z.shape[0]
+        r = self._replica(slot % self.p, b, seq_ids or list(range(b)), "rm")
+
+        # (1) logits adjustment — fused vector ops on persistent buffers
+        if params.frequency_penalty:
+            z -= params.frequency_penalty * r.freq
+        if params.presence_penalty:
+            z -= params.presence_penalty * r.pres
+        if params.repetition_penalty != 1.0:
+            seen = r.pres > 0
+            pen = np.where(z > 0, z / params.repetition_penalty,
+                           z * params.repetition_penalty)
+            z = np.where(seen, pen, z)
+
+        ids = self._draw(z, params, axis=1)
+        self._update(r, ids)
+        return ids
+
+    def _sample_cw(self, zt, params, slot, seq_ids):
+        v, b = zt.shape
+        assert v == self.v, (v, self.v)
+        r = self._replica(slot % self.p, b, seq_ids or list(range(b)), "cw")
+        if params.frequency_penalty:
+            zt -= params.frequency_penalty * r.freq
+        if params.presence_penalty:
+            zt -= params.presence_penalty * r.pres
+        if params.repetition_penalty != 1.0:
+            seen = r.pres > 0
+            pen = np.where(zt > 0, zt / params.repetition_penalty,
+                           zt * params.repetition_penalty)
+            zt = np.where(seen, pen, zt)
+        ids = self._draw(zt, params, axis=0)
+        self._update(r, ids)
+        return ids
+
+    # ---- shared probability pipeline --------------------------------------
+    def _draw(self, z: np.ndarray, params: SamplingParams, axis: int) -> np.ndarray:
+        if params.greedy or params.temperature == 0.0:
+            return z.argmax(axis=axis).astype(np.int32)
+        if params.temperature != 1.0:
+            z /= params.temperature
+        if params.top_k:
+            if axis == 1:
+                kth = np.partition(z, -params.top_k, axis=1)[:, -params.top_k]
+                z[z < kth[:, None]] = -np.inf
+            else:
+                kth = np.partition(z, -params.top_k, axis=0)[-params.top_k]
+                z[z < kth[None, :]] = -np.inf
+        probs = _softmax(z, axis)
+        if params.min_p:
+            cap = probs.max(axis=axis, keepdims=True) * params.min_p
+            probs[probs < cap] = 0.0
+        if params.top_p < 1.0:
+            probs = self._top_p_filter(probs, params.top_p, axis)
+        probs /= probs.sum(axis=axis, keepdims=True)
+        b = probs.shape[1 - axis]
+        u = self.rng.random(b, dtype=np.float32)
+        cdf = np.cumsum(probs, axis=axis)
+        if axis == 1:
+            ids = (cdf < u[:, None]).sum(axis=1)
+        else:
+            ids = (cdf < u[None, :]).sum(axis=0)
+        return ids.clip(0, self.v - 1).astype(np.int32)
+
+    @staticmethod
+    def _top_p_filter(probs: np.ndarray, top_p: float, axis: int) -> np.ndarray:
+        order = np.argsort(-probs, axis=axis)
+        sp = np.take_along_axis(probs, order, axis=axis)
+        csum = np.cumsum(sp, axis=axis)
+        keep_sorted = (csum - sp) <= top_p   # keep until mass exceeds p
+        keep = np.zeros_like(keep_sorted)
+        np.put_along_axis(keep, order, keep_sorted, axis=axis)
+        return np.where(keep, probs, 0.0)
+
+    # ---- incremental metadata update: O(B) scattered writes ----------------
+    def _update(self, r: _Replica, ids: np.ndarray):
+        b = ids.shape[0]
+        cols = np.arange(b)
+        if r.layout == "cw":
+            r.freq[ids, cols] += 1.0
+            r.pres[ids, cols] = 1.0
+        else:
+            r.freq[cols, ids] += 1.0
+            r.pres[cols, ids] = 1.0
+        r.out[r.out_len.clip(max=self.max_len - 1), cols] = ids
+        np.minimum(r.out_len + 1, self.max_len, out=r.out_len)
+
+    def seed_prompt(self, slot: int, batch: int, seq_ids: Sequence[int],
+                    prompt_ids: List[np.ndarray], layout: str = "rm"):
+        """Fold prompt tokens into the penalty state (vLLM semantics:
+        repetition/presence penalties consider the prompt)."""
+        r = self._replica(slot % self.p, batch, seq_ids, layout)
+        for col, ids in enumerate(prompt_ids):
+            ids = np.asarray(ids, np.int64)
+            if layout == "cw":
+                np.add.at(r.freq[:, col], ids, 1.0)
+                r.pres[ids, col] = 1.0
+            else:
+                np.add.at(r.freq[col], ids, 1.0)
+                r.pres[col, ids] = 1.0
+
+
+class NaiveSampler:
+    """Recompute-from-scratch baseline (what pipeline-agnostic engines do):
+    rebuilds [B, V] penalty tensors from the full output history every
+    iteration — cost grows with generated length."""
+
+    def __init__(self, vocab_size: int, seed: int = 0):
+        self.v = vocab_size
+        self.rng = np.random.default_rng(seed)
+        self.history: Dict[int, List[np.ndarray]] = {}
+
+    def sample(self, logits: np.ndarray, params: SamplingParams, *,
+               slot: int = 0, **_) -> np.ndarray:
+        z = np.array(logits, np.float32, copy=True)   # [B, V]
+        b = z.shape[0]
+        hist = self.history.setdefault(slot, [np.zeros(0, np.int64) for _ in range(b)])
+        if len(hist) != b:
+            hist = self.history[slot] = [np.zeros(0, np.int64) for _ in range(b)]
+
+        if params.needs_penalties():
+            freq = np.zeros((b, self.v), np.float32)  # fresh allocation
+            for i, h in enumerate(hist):              # full recompute over Y
+                np.add.at(freq[i], h, 1.0)
+            pres = (freq > 0).astype(np.float32)
+            if params.frequency_penalty:
+                z -= params.frequency_penalty * freq
+            if params.presence_penalty:
+                z -= params.presence_penalty * pres
+            if params.repetition_penalty != 1.0:
+                seen = pres > 0
+                pen = np.where(z > 0, z / params.repetition_penalty,
+                               z * params.repetition_penalty)
+                z = np.where(seen, pen, z)
+
+        if params.greedy or params.temperature == 0.0:
+            ids = z.argmax(axis=1).astype(np.int32)
+        else:
+            if params.temperature != 1.0:
+                z /= params.temperature
+            if params.top_k:
+                kth = np.partition(z, -params.top_k, axis=1)[:, -params.top_k]
+                z[z < kth[:, None]] = -np.inf
+            probs = _softmax(z, 1)
+            if params.min_p:
+                cap = probs.max(axis=1, keepdims=True) * params.min_p
+                probs[probs < cap] = 0.0
+            if params.top_p < 1.0:
+                probs = ColumnWiseSampler._top_p_filter(probs, params.top_p, 1)
+            probs /= probs.sum(axis=1, keepdims=True)
+            u = self.rng.random((b, 1), dtype=np.float32)
+            cdf = np.cumsum(probs, axis=1)
+            ids = (cdf < u).sum(axis=1).clip(0, self.v - 1).astype(np.int32)
+
+        for i, t in enumerate(ids):
+            hist[i] = np.append(hist[i], t)
+        return ids

@@ -1,0 +1,25 @@
+"""Per-request sampling parameters (vLLM-compatible subset)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 1.0
+    top_k: int = 0            # 0 = disabled
+    top_p: float = 1.0        # 1.0 = disabled
+    min_p: float = 0.0        # 0.0 = disabled
+    frequency_penalty: float = 0.0
+    presence_penalty: float = 0.0
+    repetition_penalty: float = 1.0   # 1.0 = disabled (multiplicative)
+    max_new_tokens: int = 64
+    eos_token_id: int = -1    # -1 = never stop on EOS
+    greedy: bool = False
+
+    def needs_penalties(self) -> bool:
+        return (
+            self.frequency_penalty != 0.0
+            or self.presence_penalty != 0.0
+            or self.repetition_penalty != 1.0
+        )

@@ -1,0 +1,173 @@
+"""Structure-aware transmission (SiPipe §5.3).
+
+Hidden-state dictionaries crossing pipeline stages have a stable structure
+(same keys, dtypes, trailing dims); only the leading batch dim varies.
+SAT captures that structure on the first iteration, after which the
+receiver pre-allocates buffers and posts asynchronous receives *before*
+the producer finishes its forward — eliminating metadata rounds and
+communication stalls.
+
+Two transports implement a common interface so benchmarks can compare:
+
+  StructureUnawareChannel — the baseline 5-round protocol from Fig. 7(a):
+      (1) recv metadata-size, (2) recv metadata blob, (3..) recv each
+      tensor after allocating from deserialized metadata.
+  StructureAwareChannel   — Fig. 7(b): first iteration uses the unaware
+      path + captures structure; steady state is a single async payload
+      copy into a pre-posted buffer keyed by (iteration, batch size).
+
+The in-process transport models each communication round as a queue
+hand-off (+ optional simulated per-round latency for the benchmark
+harness, mirroring the paper's 1.4–2.6 ms metadata overhead on RDMA).
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+import queue
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorMeta:
+    key: str
+    shape: Tuple[int, ...]
+    dtype: str
+
+    def nbytes(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n * np.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class StructureSignature:
+    """The invariant part: keys, dtypes, trailing dims (batch dim varies)."""
+
+    keys: Tuple[str, ...]
+    dtypes: Tuple[str, ...]
+    trailing: Tuple[Tuple[int, ...], ...]
+
+    @staticmethod
+    def of(tensors: Dict[str, np.ndarray]) -> "StructureSignature":
+        keys = tuple(sorted(tensors))
+        return StructureSignature(
+            keys=keys,
+            dtypes=tuple(str(tensors[k].dtype) for k in keys),
+            trailing=tuple(tuple(tensors[k].shape[1:]) for k in keys),
+        )
+
+
+class _Wire:
+    """One directional in-process 'link'; each put/get pair is a round."""
+
+    def __init__(self, round_latency_s: float = 0.0):
+        self.q: "queue.Queue[bytes]" = queue.Queue()
+        self.round_latency_s = round_latency_s
+        self.rounds = 0
+        self.bytes_moved = 0
+
+    def send(self, payload: bytes):
+        self.rounds += 1
+        self.bytes_moved += len(payload)
+        if self.round_latency_s:
+            time.sleep(self.round_latency_s)
+        self.q.put(payload)
+
+    def recv(self, timeout: float = 30.0) -> bytes:
+        return self.q.get(timeout=timeout)
+
+
+class StructureUnawareChannel:
+    """Baseline: metadata size -> metadata blob -> per-tensor payloads."""
+
+    def __init__(self, round_latency_s: float = 0.0):
+        self.wire = _Wire(round_latency_s)
+
+    def send(self, tensors: Dict[str, np.ndarray]):
+        metas = [TensorMeta(k, tuple(v.shape), str(v.dtype))
+                 for k, v in sorted(tensors.items())]
+        blob = pickle.dumps(metas)
+        self.wire.send(len(blob).to_bytes(8, "little"))       # round 1
+        self.wire.send(blob)                                  # round 2
+        for m in metas:                                       # rounds 3..
+            self.wire.send(np.ascontiguousarray(tensors[m.key]).tobytes())
+
+    def recv(self, timeout: float = 30.0) -> Dict[str, np.ndarray]:
+        size = int.from_bytes(self.wire.recv(timeout), "little")
+        metas: List[TensorMeta] = pickle.loads(self.wire.recv(timeout))
+        out = {}
+        for m in metas:
+            buf = bytearray(m.nbytes())                       # late allocation
+            payload = self.wire.recv(timeout)
+            buf[:] = payload
+            out[m.key] = np.frombuffer(bytes(buf), m.dtype).reshape(m.shape)
+        return out
+
+
+class StructureAwareChannel:
+    """SAT: capture structure once; steady-state sends one fused payload
+    into a receiver-preallocated buffer (the async-irecv analogue)."""
+
+    def __init__(self, round_latency_s: float = 0.0):
+        self.wire = _Wire(round_latency_s)
+        self._sig: Optional[StructureSignature] = None
+        self._fallback = StructureUnawareChannel(round_latency_s)
+        self._prealloc: Dict[Tuple[int, ...], List[np.ndarray]] = {}
+        self.captures = 0
+
+    # -- sender --------------------------------------------------------------
+    def send(self, tensors: Dict[str, np.ndarray]):
+        sig = StructureSignature.of(tensors)
+        if self._sig != sig:
+            # first iteration (or batch recomposition): full protocol
+            self._fallback.send(tensors)
+            self.wire.rounds += self._fallback.wire.rounds
+            self.wire.bytes_moved += self._fallback.wire.bytes_moved
+            self._fallback.wire.rounds = self._fallback.wire.bytes_moved = 0
+            self._sig = sig
+            self.captures += 1
+            return
+        batch = next(iter(tensors.values())).shape[0]
+        fused = b"".join(
+            np.ascontiguousarray(tensors[k]).tobytes() for k in sig.keys)
+        self.wire.send(batch.to_bytes(8, "little") + fused)   # single round
+
+    # -- receiver --------------------------------------------------------------
+    def post_recv(self, batch: int):
+        """Pre-allocate target buffers from the captured structure + the
+        scheduling output's batch size (the only dynamic factor)."""
+        if self._sig is None:
+            return
+        key = (batch,)
+        if key not in self._prealloc:
+            self._prealloc[key] = [
+                np.empty((batch,) + t, d)
+                for t, d in zip(self._sig.trailing, self._sig.dtypes)
+            ]
+
+    def recv(self, timeout: float = 30.0) -> Dict[str, np.ndarray]:
+        if self._sig is None or self._fallback.wire.q.qsize():
+            out = self._fallback.recv(timeout)
+            self._sig = StructureSignature.of(out)
+            return out
+        payload = self.wire.recv(timeout)
+        if len(payload) == 8:  # stray size header from a capture round
+            raise RuntimeError("protocol desync")
+        batch = int.from_bytes(payload[:8], "little")
+        self.post_recv(batch)
+        bufs = self._prealloc[(batch,)]
+        out = {}
+        off = 8
+        for k, buf in zip(self._sig.keys, bufs):
+            n = buf.nbytes
+            flat = np.frombuffer(payload[off : off + n], buf.dtype)
+            buf[...] = flat.reshape(buf.shape)
+            out[k] = buf
+            off += n
+        return out

@@ -1,0 +1,109 @@
+"""Continuous-batching scheduler (SiPipe §4.2).
+
+Keeps p microbatches in flight (one per pipeline stage).  On receiving
+iteration n's sampling output it immediately dispatches iteration n+p with
+the same sequence set minus finished ones plus admitted waiters — which is
+exactly the stability property the column-wise sampler and the TSEM
+BatchMetadata replicas rely on (batches n and n+p are near-identical).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.sampling_params import SamplingParams
+from repro.core.sequence import SeqStatus, Sequence
+
+
+@dataclasses.dataclass
+class SchedulingOutput:
+    """Broadcast to every worker + sampler via BIC-I."""
+
+    iteration: int
+    slot: int                      # iteration %% p — the TSEM replica index
+    seq_ids: List[int]
+    # per-seq state the CPU executor needs to build model inputs
+    positions: np.ndarray          # [B] next-token positions
+    tokens: np.ndarray             # [B] last sampled token ids (input tokens)
+    is_prefill: bool               # True -> prefill the batch first
+    prompt_lens: Optional[List[int]] = None
+    batch_recomposed: bool = False
+
+
+class Scheduler:
+    def __init__(self, *, max_batch: int, pp_degree: int = 1,
+                 max_seq_len: int = 4096):
+        self.max_batch = max_batch
+        self.p = pp_degree
+        self.max_seq_len = max_seq_len
+        self.waiting: Deque[Sequence] = deque()
+        self.seqs: Dict[int, Sequence] = {}
+        self.slot_members: List[List[int]] = [[] for _ in range(pp_degree)]
+        self.iteration = 0
+        self.finished: List[Sequence] = []
+
+    # -- request ingestion --------------------------------------------------
+    def add_request(self, seq: Sequence):
+        seq.arrival_t = seq.arrival_t or time.monotonic()
+        self.seqs[seq.seq_id] = seq
+        self.waiting.append(seq)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(self.slot_members)
+
+    # -- iteration dispatch ---------------------------------------------------
+    def schedule(self, iteration: Optional[int] = None) -> Optional[SchedulingOutput]:
+        """Build the scheduling output for the next iteration of slot
+        ``iteration %% p``, topping the slot up from the waiting queue."""
+        it = self.iteration if iteration is None else iteration
+        slot = it % self.p
+        members = [sid for sid in self.slot_members[slot]
+                   if self.seqs[sid].status == SeqStatus.RUNNING]
+        recomposed = len(members) != len(self.slot_members[slot])
+        new_prefill: List[int] = []
+        while self.waiting and len(members) < self.max_batch:
+            seq = self.waiting.popleft()
+            seq.status = SeqStatus.RUNNING
+            members.append(seq.seq_id)
+            new_prefill.append(seq.seq_id)
+            recomposed = True
+        self.slot_members[slot] = members
+        if not members:
+            return None
+
+        tokens = np.array([self.seqs[sid].last_token for sid in members], np.int32)
+        positions = np.array([self.seqs[sid].length - 1 for sid in members], np.int32)
+        out = SchedulingOutput(
+            iteration=it,
+            slot=slot,
+            seq_ids=list(members),
+            positions=positions,
+            tokens=tokens,
+            is_prefill=bool(new_prefill),
+            prompt_lens=[len(self.seqs[s].prompt_ids) for s in members],
+            batch_recomposed=recomposed,
+        )
+        self.iteration = max(self.iteration, it + 1)
+        return out
+
+    # -- sampling-output ingestion ----------------------------------------
+    def complete(self, iteration: int, seq_ids: List[int],
+                 token_ids: np.ndarray) -> List[int]:
+        """Append sampled tokens; returns finished seq ids."""
+        now = time.monotonic()
+        done = []
+        for sid, tok in zip(seq_ids, token_ids):
+            seq = self.seqs[sid]
+            if seq.status != SeqStatus.RUNNING:
+                continue
+            if seq.append(int(tok), now) or seq.length >= self.max_seq_len:
+                seq.status = SeqStatus.FINISHED
+                seq.finish_t = seq.finish_t or now
+                self.finished.append(seq)
+                done.append(sid)
+        return done

@@ -1,0 +1,95 @@
+"""Sequence state + the worker-side SequenceCache (TSEM §5.2)."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.sampling_params import SamplingParams
+
+
+class SeqStatus(enum.Enum):
+    WAITING = 0
+    RUNNING = 1
+    FINISHED = 2
+    PREEMPTED = 3
+
+
+@dataclasses.dataclass
+class Sequence:
+    seq_id: int
+    prompt_ids: List[int]
+    params: SamplingParams
+    output_ids: List[int] = dataclasses.field(default_factory=list)
+    status: SeqStatus = SeqStatus.WAITING
+    arrival_t: float = 0.0
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+
+    @property
+    def length(self) -> int:
+        return len(self.prompt_ids) + len(self.output_ids)
+
+    @property
+    def last_token(self) -> int:
+        return self.output_ids[-1] if self.output_ids else self.prompt_ids[-1]
+
+    def append(self, token_id: int, now: float) -> bool:
+        """Returns True when the sequence finishes."""
+        self.output_ids.append(int(token_id))
+        if self.first_token_t is None:
+            self.first_token_t = now
+        done = (
+            len(self.output_ids) >= self.params.max_new_tokens
+            or (self.params.eos_token_id >= 0 and token_id == self.params.eos_token_id)
+        )
+        if done:
+            self.status = SeqStatus.FINISHED
+            self.finish_t = now
+        return done
+
+
+@dataclasses.dataclass
+class CachedSeqState:
+    """Worker-local cached metadata for a sequence (avoids re-shipping
+    prompt/output ids every iteration — the paper's SequenceCache)."""
+
+    seq_id: int
+    prompt_len: int
+    out_len: int
+    cache_row: int            # row in the device KV cache this seq occupies
+
+
+class SequenceCache:
+    """Maps seq_id -> cached state; assigns/releases KV-cache rows."""
+
+    def __init__(self, max_rows: int):
+        self.max_rows = max_rows
+        self._by_id: Dict[int, CachedSeqState] = {}
+        self._free_rows = list(range(max_rows - 1, -1, -1))
+
+    def lookup(self, seq_id: int) -> Optional[CachedSeqState]:
+        return self._by_id.get(seq_id)
+
+    def admit(self, seq_id: int, prompt_len: int) -> CachedSeqState:
+        st = self._by_id.get(seq_id)
+        if st is None:
+            if not self._free_rows:
+                raise RuntimeError("KV cache rows exhausted")
+            st = CachedSeqState(seq_id, prompt_len, 0, self._free_rows.pop())
+            self._by_id[seq_id] = st
+        return st
+
+    def release(self, seq_id: int):
+        st = self._by_id.pop(seq_id, None)
+        if st is not None:
+            self._free_rows.append(st.cache_row)
+
+    def advance(self, seq_id: int):
+        self._by_id[seq_id].out_len += 1
+
+    @property
+    def free_rows(self) -> int:
+        return len(self._free_rows)

@@ -1,0 +1,235 @@
+"""Token-Safe Execution Model (SiPipe §5.2), adapted to JAX.
+
+The paper's mechanism targets CUDA graphs: static kernel sequences bound
+to fixed device buffers, where asynchronous CPU input preparation causes
+write-after-read hazards.  The JAX/TPU analogue (see DESIGN.md
+§Hardware-adaptation):
+
+  CUDA graph              ->  AOT-compiled executable (jit().lower().compile())
+                              with donated inputs (stable buffer bindings)
+  two captured graphs     ->  two *versioned host staging buffer sets* per
+  per batch size              batch size; the executable is shape-keyed
+  WAR hazard              ->  CPU executor writes staging version i % 2
+                              while the device consumes version (i-1) % 2
+
+The FSM with CPU/GPU indicators (CI/GI) is reproduced literally: the CPU
+executor may run ahead by exactly one iteration (CI == GI gate), which is
+what makes the double buffer sufficient.
+
+``BatchMetadataCache`` keeps p replica versions (pipeline degree) and
+updates them *incrementally* when the batch composition is unchanged
+between iterations n and n+p — only positions advance and last tokens
+swap, no reallocation (§5.2 + §5.1 inter-batch similarity).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.scheduler import SchedulingOutput
+
+
+@dataclasses.dataclass
+class BatchMetadata:
+    """Preprocessed CPU tensors for one microbatch (one TSEM replica)."""
+
+    seq_ids: List[int]
+    rows: np.ndarray           # [B] cache-row assignment
+    tokens: np.ndarray         # [B] input token ids
+    positions: np.ndarray      # [B] positions of the new token
+    iteration: int = -1
+
+    def advance_inplace(self, sched: SchedulingOutput, rows: np.ndarray):
+        """Incremental update: same sequence set, next iteration."""
+        np.copyto(self.tokens, sched.tokens)
+        np.copyto(self.positions, sched.positions)
+        np.copyto(self.rows, rows)
+        self.iteration = sched.iteration
+
+
+class BatchMetadataCache:
+    """p versions of BatchMetadata, indexed by iteration %% p."""
+
+    def __init__(self, pp_degree: int):
+        self.p = pp_degree
+        self._meta: List[Optional[BatchMetadata]] = [None] * pp_degree
+        self.incremental_hits = 0
+        self.rebuilds = 0
+
+    def update(self, sched: SchedulingOutput, rows: np.ndarray) -> BatchMetadata:
+        slot = sched.iteration % self.p
+        meta = self._meta[slot]
+        if meta is not None and meta.seq_ids == sched.seq_ids:
+            meta.advance_inplace(sched, rows)
+            self.incremental_hits += 1
+            return meta
+        meta = BatchMetadata(
+            seq_ids=list(sched.seq_ids),
+            rows=np.array(rows, np.int32),
+            tokens=np.array(sched.tokens, np.int32),
+            positions=np.array(sched.positions, np.int32),
+            iteration=sched.iteration,
+        )
+        self._meta[slot] = meta
+        self.rebuilds += 1
+        return meta
+
+
+class VersionedStaging:
+    """Two host-side staging buffer sets per batch size (v0 / v1)."""
+
+    def __init__(self):
+        self._bufs: Dict[Tuple[int, int], Dict[str, np.ndarray]] = {}
+
+    def buffers(self, version: int, batch: int) -> Dict[str, np.ndarray]:
+        key = (version & 1, batch)
+        if key not in self._bufs:
+            self._bufs[key] = {
+                "tokens": np.zeros(batch, np.int32),
+                "positions": np.zeros(batch, np.int32),
+                "rows": np.zeros(batch, np.int32),
+            }
+        return self._bufs[key]
+
+
+@dataclasses.dataclass
+class ModelInputDescriptor:
+    """Lightweight descriptor enqueued to the device executor (the heavy
+    tensors live in the staging buffers it points at)."""
+
+    iteration: int
+    version: int
+    batch: int
+    is_prefill: bool
+    sched: SchedulingOutput
+
+
+class TokenSafeExecutor:
+    """Decoupled CPU-prepare / device-execute with the paper's FSM.
+
+    ``prepare_fn(sched, staging_bufs) -> None`` fills staging in place.
+    ``execute_fn(desc, staging_bufs) -> Any`` runs the AOT step.
+    """
+
+    def __init__(self, prepare_fn: Callable, execute_fn: Callable,
+                 *, max_ahead: int = 1, name: str = "stage"):
+        self.prepare_fn = prepare_fn
+        self.execute_fn = execute_fn
+        self.staging = VersionedStaging()
+        self.name = name
+        self.ci = -1                      # CPU indicator
+        self.gi = -1                      # GPU indicator
+        self.max_ahead = max_ahead
+        self._sched_q: List[SchedulingOutput] = []
+        self._input_q: List[ModelInputDescriptor] = []
+        self._cv = threading.Condition()
+        self._stop = False
+        self._results: Dict[int, Any] = {}
+        self.prep_time = 0.0
+        self.exec_time = 0.0
+        self.stall_time = 0.0
+        self._threads: List[threading.Thread] = []
+
+    # -- communicator API ----------------------------------------------------
+    def submit(self, sched: SchedulingOutput):
+        with self._cv:
+            self._sched_q.append(sched)
+            self._cv.notify_all()
+
+    def result(self, iteration: int, timeout: float = 60.0) -> Any:
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while iteration not in self._results:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(f"{self.name}: iter {iteration}")
+                self._cv.wait(remaining)
+            return self._results.pop(iteration)
+
+    # -- FSM loops -------------------------------------------------------------
+    def _cpu_loop(self):
+        while True:
+            with self._cv:
+                # W -> R when all generated inputs are consumed (CI - GI gate)
+                while not self._stop and (
+                    not self._sched_q or self.ci - self.gi >= self.max_ahead
+                ):
+                    self._cv.wait(0.05)
+                if self._stop:
+                    return
+                sched = self._sched_q.pop(0)
+                version = (self.ci + 1) & 1
+            t0 = time.monotonic()
+            bufs = self.staging.buffers(version, len(sched.seq_ids))
+            self.prepare_fn(sched, bufs)
+            self.prep_time += time.monotonic() - t0
+            with self._cv:
+                self.ci += 1
+                self._input_q.append(ModelInputDescriptor(
+                    sched.iteration, version, len(sched.seq_ids),
+                    sched.is_prefill, sched))
+                self._cv.notify_all()
+
+    def _device_loop(self):
+        while True:
+            t_wait = time.monotonic()
+            with self._cv:
+                while not self._stop and not self._input_q:
+                    self._cv.wait(0.05)
+                if self._stop:
+                    return
+                desc = self._input_q.pop(0)
+                self.gi += 1        # increment on entering R: frees the CPU
+                self._cv.notify_all()
+            self.stall_time += time.monotonic() - t_wait
+            t0 = time.monotonic()
+            bufs = self.staging.buffers(desc.version, desc.batch)
+            out = self.execute_fn(desc, bufs)
+            self.exec_time += time.monotonic() - t0
+            with self._cv:
+                self._results[desc.iteration] = out
+                self._cv.notify_all()
+
+    def start(self):
+        for fn, nm in ((self._cpu_loop, "cpu"), (self._device_loop, "dev")):
+            t = threading.Thread(target=fn, name=f"{self.name}-{nm}", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def stop(self):
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=5)
+
+
+class SynchronousExecutor:
+    """Baseline (no TSEM): prepare-then-execute serially, like engines that
+    defer input preparation until the previous forward completes."""
+
+    def __init__(self, prepare_fn: Callable, execute_fn: Callable, name: str = "stage"):
+        self.prepare_fn = prepare_fn
+        self.execute_fn = execute_fn
+        self.staging = VersionedStaging()
+        self.name = name
+        self.prep_time = 0.0
+        self.exec_time = 0.0
+        self.stall_time = 0.0
+
+    def run(self, sched: SchedulingOutput) -> Any:
+        bufs = self.staging.buffers(0, len(sched.seq_ids))
+        t0 = time.monotonic()
+        self.prepare_fn(sched, bufs)
+        t1 = time.monotonic()
+        out = self.execute_fn(
+            ModelInputDescriptor(sched.iteration, 0, len(sched.seq_ids),
+                                 sched.is_prefill, sched), bufs)
+        t2 = time.monotonic()
+        self.prep_time += t1 - t0
+        self.exec_time += t2 - t1
+        return out

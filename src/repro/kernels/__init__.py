@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the serving hot paths.
+
+Each kernel follows the <name>.py (pl.pallas_call + BlockSpec) / ops.py
+(jit'd wrappers) / ref.py (pure-jnp oracle) convention; tests sweep
+shapes/dtypes and assert_allclose against the oracles in interpret mode.
+"""
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.decode_attention import decode_attention  # noqa: F401
+from repro.kernels.swiglu import swiglu  # noqa: F401

@@ -1,0 +1,105 @@
+"""Single-token (decode) attention over a KV cache as a Pallas TPU kernel.
+
+The decode step is memory-bound: the kernel streams the cache once from
+HBM through VMEM in [kv_block x Kv x hd] tiles while all H query heads of
+one sequence stay resident, accumulating flash-style running softmax per
+head in VMEM scratch.  Length masking comes from a per-sequence ``lengths``
+vector (valid cache prefix), which is how the serving engine expresses
+ragged batches.
+
+Layouts: q [B, H, hd]; k_cache/v_cache [B, S, Kv, hd]; lengths [B] int32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            kv_block: int, g: int, scale: float, ns: int):
+    i_s = pl.program_id(1)
+
+    @pl.when(i_s == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    start = i_s * kv_block
+
+    @pl.when(start < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)               # [H, hd]
+        k = k_ref[0].astype(jnp.float32)               # [kb, Kv, hd]
+        v = v_ref[0].astype(jnp.float32)
+        h, hd = q.shape
+        kv = k.shape[1]
+        qg = q.reshape(kv, g, hd)
+        # scores [Kv, G, kb]
+        s = jax.lax.dot_general(
+            qg, k.transpose(1, 2, 0),                  # [Kv, hd, kb]
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale
+        kpos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        s = jnp.where(kpos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]                            # [Kv, G]
+        m_new = jnp.maximum(m_prev, s.max(axis=2))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=2)
+        # acc [Kv, G, hd] += p @ v
+        acc_scr[...] = acc_scr[...] * corr[..., None] + jax.lax.dot_general(
+            p, v.transpose(1, 0, 2),                   # [Kv, kb, hd]
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(i_s == ns - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
+        out = acc_scr[...] / denom                     # [Kv, G, hd]
+        o_ref[0] = out.reshape(o_ref.shape[1:]).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array, *, kv_block: int = 512,
+                     scale: float = 0.0, interpret: bool = True) -> jax.Array:
+    """q [B,H,hd]; caches [B,S,Kv,hd]; lengths [B] -> [B, H*hd]."""
+    b, h, hd = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    kv_block = min(kv_block, s)
+    while s % kv_block:
+        kv_block //= 2
+    ns = s // kv_block
+    scale = scale or hd ** -0.5
+
+    kernel = functools.partial(_kernel, kv_block=kv_block, g=g, scale=scale,
+                               ns=ns)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, ns),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, i: (b_,)),
+            pl.BlockSpec((1, h, hd), lambda b_, i: (b_, 0, 0)),
+            pl.BlockSpec((1, kv_block, kv, hd), lambda b_, i: (b_, i, 0, 0)),
+            pl.BlockSpec((1, kv_block, kv, hd), lambda b_, i: (b_, i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda b_, i: (b_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((kv, g), jnp.float32),
+            pltpu.VMEM((kv, g), jnp.float32),
+            pltpu.VMEM((kv, g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, q, k_cache, v_cache)
+    return out.reshape(b, h * hd)

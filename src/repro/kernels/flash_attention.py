@@ -1,0 +1,117 @@
+"""Flash attention (prefill) as a Pallas TPU kernel.
+
+TPU adaptation notes (vs. the CUDA flash-attention formulation):
+  * the grid's minor dimension iterates KV blocks sequentially; running
+    softmax statistics (m, l) and the output accumulator live in VMEM
+    scratch that persists across grid steps — the TPU analogue of keeping
+    them in registers/SMEM on GPU;
+  * blocks are (q_block x head_dim) / (kv_block x head_dim) with head_dim
+    a multiple of 128 so the MXU sees aligned matmuls;
+  * GQA is expressed in the BlockSpec index_map (kv head = q head // G) —
+    no materialized key/value repetition;
+  * fully-masked causal blocks are skipped with pl.when (block-level
+    triangular schedule — compute proportional to the causal half).
+
+Layouts: q [B, H, Sq, hd];  k, v [B, Kv, Skv, hd];  out [B, H, Sq, hd].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal: bool, window: int, q_block: int, kv_block: int,
+            scale: float, nk: int):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * q_block
+    k_start = ik * kv_block
+    live = True
+    if causal:
+        live = k_start <= q_start + q_block - 1        # block intersects causal
+    if window:
+        live = jnp.logical_and(live, k_start + kv_block > q_start - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [qb, hd]
+        k = k_ref[0, 0].astype(jnp.float32)            # [kb, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    q_block: int = 256, kv_block: int = 256,
+                    scale: float = 0.0, interpret: bool = True) -> jax.Array:
+    """q [B,H,Sq,hd]; k,v [B,Kv,Skv,hd] -> [B,H,Sq,hd]."""
+    b, h, sq, hd = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    q_block = min(q_block, sq)
+    while sq % q_block:
+        q_block //= 2
+    kv_block = min(kv_block, skv)
+    while skv % kv_block:
+        kv_block //= 2
+    nq, nk = sq // q_block, skv // kv_block
+    scale = scale or hd ** -0.5
+
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, q_block=q_block,
+        kv_block=kv_block, scale=scale, nk=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_block, hd), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, kv_block, hd), lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, kv_block, hd), lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_block, hd), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),   # running max m
+            pltpu.VMEM((q_block,), jnp.float32),   # running sum l
+            pltpu.VMEM((q_block, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,63 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and should be False
+on real TPUs; the layout adapters here translate between the model's
+[B, S, H, hd] convention and the kernels' head-major tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.swiglu import swiglu as _swiglu
+from repro.kernels.rmsnorm_matmul import rmsnorm_matmul as _rmsnorm_mm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_block",
+                                             "kv_block"))
+def flash_attention_bshd(q, k, v, *, causal: bool = True, window: int = 0,
+                         q_block: int = 256, kv_block: int = 256):
+    """Model-layout adapter: q [B,S,H,hd], k/v [B,S,Kv,hd] -> [B,S,H*hd]."""
+    b, s, h, hd = q.shape
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = _flash(qt, kt, vt, causal=causal, window=window, q_block=q_block,
+               kv_block=kv_block, interpret=not _on_tpu())
+    return o.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+@functools.partial(jax.jit, static_argnames=("kv_block",))
+def decode_attention_cached(q, k_cache, v_cache, lengths, *, kv_block: int = 512):
+    """q [B,H,hd]; caches [B,S,Kv,hd]; lengths [B] -> [B, H*hd]."""
+    return _decode(q, k_cache, v_cache, lengths, kv_block=kv_block,
+                   interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("t_block", "f_block"))
+def swiglu_fused(x, w1, w3, w2, *, t_block: int = 256, f_block: int = 512):
+    """x [..., d] -> [..., d] fused gated MLP."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _swiglu(x2, w1, w3, w2, t_block=t_block, f_block=f_block,
+                interpret=not _on_tpu())
+    return y.reshape(*lead, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "t_block", "f_block"))
+def rmsnorm_matmul_fused(x, w_norm, w_proj, *, eps: float = 1e-5,
+                         t_block: int = 256, f_block: int = 512):
+    """Fused block-entry norm + projection: x [..., d] -> [..., F]."""
+    lead = x.shape[:-1]
+    y = _rmsnorm_mm(x.reshape(-1, x.shape[-1]), w_norm, w_proj, eps=eps,
+                    t_block=t_block, f_block=f_block,
+                    interpret=not _on_tpu())
+    return y.reshape(*lead, -1)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the
+interpret-mode kernels are validated against in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float = 0.0):
+    """Naive full-materialization attention.  q [B,Sq,H,hd]; k,v [B,Skv,Kv,hd]."""
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    sc = scale or hd ** -0.5
+    s = jnp.einsum("bsgqd,btgd->bgqst", qg, k).astype(jnp.float32) * sc
+    if causal or window:
+        qpos = jnp.arange(sq)[:, None]
+        kpos = jnp.arange(skv)[None, :]
+        mask = jnp.ones((sq, skv), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgqst,btgd->bsgqd", p.astype(q.dtype), v)
+    return o.reshape(b, sq, h * hd)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q [B,H,hd]; caches [B,S,Kv,hd]; lengths [B] = #valid positions."""
+    b, h, hd = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd)
+    sc = hd ** -0.5
+    scores = jnp.einsum("bgqd,bsgd->bgqs", qg, k_cache).astype(jnp.float32) * sc
+    valid = jnp.arange(s)[None, :] < lengths[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bgqs,bsgd->bgqd", p.astype(q.dtype), v_cache)
+    return o.reshape(b, h * hd)
+
+
+def rmsnorm_matmul_ref(x, w_norm, w_proj, eps: float = 1e-5):
+    """Fused RMSNorm + projection oracle.  x [T, d]; w_proj [d, f]."""
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    h = (xf * inv).astype(x.dtype) * w_norm
+    return h @ w_proj
+
+
+def swiglu_ref(x, w1, w3, w2):
+    """Gated-SiLU MLP oracle.  x [T, d]; w1/w3 [d, f]; w2 [f, d]."""
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2

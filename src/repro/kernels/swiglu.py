@@ -1,0 +1,67 @@
+"""Fused SwiGLU MLP (silu(x@w1) * (x@w3)) @ w2 as a Pallas TPU kernel.
+
+Fusing the three matmuls keeps the [T, ff] intermediate inside VMEM tiles
+instead of round-tripping it through HBM: the grid iterates ff blocks in
+the minor dimension and accumulates partial products of the down
+projection into a VMEM scratch accumulator — HBM traffic drops from
+2*T*ff (+weights) to weights-only.
+
+Layouts: x [T, d]; w1, w3 [d, ff]; w2 [ff, d]; out [T, d].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref, acc_scr, *, nf: int):
+    i_f = pl.program_id(1)
+
+    @pl.when(i_f == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[...]
+    a = jax.lax.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    b = jax.lax.dot(x, w3_ref[...], preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(a) * b).astype(x.dtype)
+    acc_scr[...] += jax.lax.dot(h, w2_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(i_f == nf - 1)
+    def _finalize():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array, *,
+           t_block: int = 256, f_block: int = 512,
+           interpret: bool = True) -> jax.Array:
+    t, d = x.shape
+    ff = w1.shape[1]
+    t_block = min(t_block, t)
+    while t % t_block:
+        t_block //= 2
+    f_block = min(f_block, ff)
+    while ff % f_block:
+        f_block //= 2
+    nt, nf = t // t_block, ff // f_block
+
+    kernel = functools.partial(_kernel, nf=nf)
+    return pl.pallas_call(
+        kernel,
+        grid=(nt, nf),
+        in_specs=[
+            pl.BlockSpec((t_block, d), lambda it, if_: (it, 0)),
+            pl.BlockSpec((d, f_block), lambda it, if_: (0, if_)),
+            pl.BlockSpec((d, f_block), lambda it, if_: (0, if_)),
+            pl.BlockSpec((f_block, d), lambda it, if_: (if_, 0)),
+        ],
+        out_specs=pl.BlockSpec((t_block, d), lambda it, if_: (it, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((t_block, d), jnp.float32)],
+        interpret=interpret,
+    )(x, w1, w3, w2)

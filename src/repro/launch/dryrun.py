@@ -1,0 +1,332 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production mesh and record roofline inputs.
+
+The two lines above MUST run before any other import (jax locks the device
+count on first init) — do not move them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape decode_32k --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell
+Writes one JSON per cell under results/dryrun/.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES_BY_NAME, cell_is_runnable, get_config, list_archs
+from repro.launch import hlo_analysis
+from repro.launch.mesh import (
+    CHIP_HBM_BW,
+    CHIP_PEAK_FLOPS,
+    ICI_LINK_BW,
+    make_production_mesh,
+    mesh_chips,
+)
+from repro import sharding as shlib
+from repro.models import ModelOptions, ShardCtx, build_model
+from repro.models.common import abstract_params, logical_axes
+from repro.models.flops import model_flops
+from repro import optim
+
+
+def build_step(model, shape, mesh, strategy):
+    """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
+    cfg = model.cfg
+    batch_sds, batch_ax = model.input_specs(shape)
+    batch_sh = {k: shlib.named_sharding(batch_ax[k], batch_sds[k].shape, strategy, mesh)
+                for k in batch_sds}
+    p_abs = abstract_params(model.specs)
+    p_ax = logical_axes(model.specs)
+    p_sh = shlib.tree_shardings(p_ax, p_abs, strategy, mesh)
+
+    if shape.kind == "train":
+        ocfg = optim.AdamWConfig(
+            moment_dtype=jnp.bfloat16 if model.cfg.name.startswith("llama4") else jnp.float32)
+        o_abs = optim.abstract_opt_state(p_abs, ocfg)
+        o_ax = optim.opt_state_axes(p_ax)
+        o_sh = shlib.tree_shardings(o_ax, o_abs, strategy, mesh)
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                logits = model.forward_train(p, batch)
+                lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+                ll = jnp.take_along_axis(lp, batch["labels"][..., None], -1)
+                return -jnp.mean(ll)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            new_params, new_state = optim.adamw_update(params, grads, opt_state, ocfg)
+            return loss, new_params, new_state
+
+        fn = jax.jit(
+            train_step,
+            in_shardings=(p_sh, o_sh, batch_sh),
+            out_shardings=(jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                           p_sh, o_sh),
+            donate_argnums=(0, 1),
+        )
+        return fn, (p_abs, o_abs, batch_sds)
+
+    if shape.kind == "prefill":
+        logits_sh = shlib.named_sharding(("batch", "vocab"),
+                                         (shape.global_batch, cfg.vocab_size),
+                                         strategy, mesh)
+        c_abs = model.abstract_cache(shape.global_batch, shape.seq_len)
+        c_ax = model.cache_axes()
+        c_sh = shlib.tree_shardings(c_ax, c_abs, strategy, mesh)
+        fn = jax.jit(model.prefill, in_shardings=(p_sh, batch_sh),
+                     out_shardings=(logits_sh, c_sh))
+        return fn, (p_abs, batch_sds)
+
+    # decode
+    c_abs = model.abstract_cache(shape.global_batch, shape.seq_len)
+    c_ax = model.cache_axes()
+    c_sh = shlib.tree_shardings(c_ax, c_abs, strategy, mesh)
+    logits_sh = shlib.named_sharding(("batch", "vocab"),
+                                     (shape.global_batch, cfg.vocab_size),
+                                     strategy, mesh)
+    fn = jax.jit(model.decode, in_shardings=(p_sh, c_sh, batch_sh),
+                 out_shardings=(logits_sh, c_sh), donate_argnums=(1,))
+    return fn, (p_abs, c_abs, batch_sds)
+
+
+# Paper-regime PP degrees per arch (scan-group divisibility; see DESIGN.md)
+PP_DEGREE = {
+    "stablelm-1.6b": 8, "codeqwen1.5-7b": 8, "glm4-9b": 8,
+    # minicpm-2b: vocab 122753 indivisible by tp -> XLA SPMD check-failure
+    # in the partial-manual region; see results/dryrun pp skip record.
+    "mixtral-8x7b": 8, "llama4-maverick-400b-a17b": 8,
+    "llama-3.2-vision-90b": 4, "xlstm-1.3b": 2,
+}
+
+
+def run_pp_cell(arch: str, shape_name: str, multi_pod: bool,
+                options: ModelOptions = ModelOptions(), tag: str = "pp",
+                pp: int = 0) -> dict:
+    """Dry-run the paper's PP regime: pp stages x tp=16 x dp."""
+    from repro.core import pipeline as pl
+    from repro.launch.mesh import make_pipeline_mesh
+
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh_name = ("pod2x16x16" if multi_pod else "pod16x16")
+    p = pp or PP_DEGREE.get(arch, 0)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "tag": f"{tag}-p{p}", "ok": False, "pp": p}
+    if p == 0 or shape.kind != "decode":
+        rec.update(skipped=True, ok=True,
+                   reason="PP dry-run covers decode shapes of single-stack archs")
+        return rec
+    runnable, why = cell_is_runnable(cfg, shape)
+    if not runnable:
+        rec.update(skipped=True, reason=why, ok=True)
+        return rec
+    if shape.global_batch % p:
+        rec.update(skipped=True, ok=True,
+                   reason=f"global_batch {shape.global_batch} % pp {p} != 0")
+        return rec
+
+    t0 = time.time()
+    mesh = make_pipeline_mesh(p, multi_pod=multi_pod)
+    shard = ShardCtx.from_mesh(mesh, "pp")
+    model = build_model(cfg, shard, options, enc_len=shape.seq_len)
+    plan = pl.plan_pp(model, mesh, shape.global_batch)
+    step = pp_step = pl.pp_decode_round(model, plan)
+    sh = pl.pp_shardings(model, plan, (p, plan.microbatch))
+    c_abs = pl.pp_abstract_cache(model, plan, shape.seq_len)
+    c_ax = model.cache_axes()["blocks"]
+    c_sh = sh["cache_sharding_fn"](c_abs, c_ax)
+    i32 = jax.ShapeDtypeStruct((p, plan.microbatch), jnp.int32)
+    inflight = jax.ShapeDtypeStruct((p, plan.microbatch, cfg.d_model), jnp.bfloat16)
+    fn = jax.jit(step,
+                 in_shardings=(sh["params"], c_sh, sh["inflight"],
+                               sh["tokens"], sh["positions"]),
+                 out_shardings=(sh["logits"], c_sh, sh["inflight"]),
+                 donate_argnums=(1,))
+    t1 = time.time()
+    lowered = fn.lower(sh["params_abstract"], c_abs, inflight, i32, i32)
+    t2 = time.time()
+    compiled = lowered.compile()
+    t3 = time.time()
+    ma = compiled.memory_analysis()
+    summary = hlo_analysis.analyze(compiled.as_text())
+    fr = model_flops(cfg, shape, tp=shard.tp, triangular=options.triangular)
+    chips = mesh_chips(mesh)
+    terms = {"compute_s": summary.flops / CHIP_PEAK_FLOPS,
+             "memory_s": summary.bytes_accessed / CHIP_HBM_BW,
+             "collective_s": summary.total_collective_bytes / ICI_LINK_BW}
+    rec.update(
+        ok=True, chips=chips, strategy="pp",
+        build_s=round(t1 - t0, 2), lower_s=round(t2 - t1, 2),
+        compile_s=round(t3 - t2, 2),
+        memory=dict(argument_bytes=ma.argument_size_in_bytes,
+                    output_bytes=ma.output_size_in_bytes,
+                    temp_bytes=ma.temp_size_in_bytes,
+                    alias_bytes=ma.alias_size_in_bytes),
+        hlo={"flops_per_chip": summary.flops,
+             "bytes_per_chip": summary.bytes_accessed,
+             "collective_bytes_per_chip": summary.total_collective_bytes,
+             "collectives": summary.collective_bytes,
+             "collective_counts": summary.collective_counts,
+             "warnings": summary.warnings[:10]},
+        model_flops=fr.model_flops,
+        roofline={**terms, "dominant": max(terms, key=terms.get),
+                  "step_s_lower_bound": max(terms.values()),
+                  "note": "one round = p decode iterations (p microbatches)",
+                  "mfu_bound": (fr.model_flops / CHIP_PEAK_FLOPS / chips)
+                  / max(max(terms.values()), 1e-12)},
+    )
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             options: ModelOptions = ModelOptions(), tag: str = "",
+             strategy_override: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+           "ok": False}
+    runnable, why = cell_is_runnable(cfg, shape)
+    if not runnable:
+        rec.update(skipped=True, reason=why, ok=True)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chips(mesh)
+    strategy = strategy_override or ("train" if shape.kind == "train" else "serve")
+    shard = ShardCtx.from_mesh(mesh, strategy)
+    model = build_model(cfg, shard, options, enc_len=shape.seq_len)
+    fn, args = build_step(model, shape, mesh, strategy)
+
+    t1 = time.time()
+    lowered = fn.lower(*args)
+    t2 = time.time()
+    compiled = lowered.compile()
+    t3 = time.time()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    summary = hlo_analysis.analyze(txt)
+
+    fr = model_flops(cfg, shape, tp=shard.tp, triangular=options.triangular)
+    flops_chip = summary.flops
+    bytes_chip = summary.bytes_accessed
+    coll_chip = summary.total_collective_bytes
+
+    compute_s = flops_chip / CHIP_PEAK_FLOPS
+    memory_s = bytes_chip / CHIP_HBM_BW
+    collective_s = coll_chip / ICI_LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    rec.update(
+        ok=True,
+        chips=chips,
+        strategy=strategy,
+        build_s=round(t1 - t0, 2),
+        lower_s=round(t2 - t1, 2),
+        compile_s=round(t3 - t2, 2),
+        memory=dict(
+            argument_bytes=ma.argument_size_in_bytes,
+            output_bytes=ma.output_size_in_bytes,
+            temp_bytes=ma.temp_size_in_bytes,
+            alias_bytes=ma.alias_size_in_bytes,
+            peak_bytes=ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes,
+        ),
+        cost_raw={"flops": ca.get("flops", 0.0),
+                  "bytes": ca.get("bytes accessed", 0.0)},
+        hlo={"flops_per_chip": flops_chip, "bytes_per_chip": bytes_chip,
+             "collective_bytes_per_chip": coll_chip,
+             "collectives": summary.collective_bytes,
+             "collective_counts": summary.collective_counts,
+             "warnings": summary.warnings[:10]},
+        model_flops=fr.model_flops,
+        detailed_flops=fr.detailed_flops,
+        roofline={**terms, "dominant": dominant,
+                  "step_s_lower_bound": max(terms.values()),
+                  "useful_ratio": fr.model_flops / max(flops_chip * chips, 1.0),
+                  "mfu_bound": (fr.model_flops / CHIP_PEAK_FLOPS / chips)
+                  / max(max(terms.values()), 1e-12)},
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--strategy", default="")
+    ap.add_argument("--pp", type=int, default=0,
+                    help="run the PP-regime dry-run with this pipeline degree"
+                         " (0 with --strategy pp = per-arch default)")
+    ap.add_argument("--triangular", action="store_true")
+    ap.add_argument("--fuse-shared", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--kv-block", type=int, default=512)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    options = ModelOptions(kv_block=args.kv_block, triangular=args.triangular,
+                           fuse_shared_expert=args.fuse_shared,
+                           seq_shard=args.seq_shard, kv_quant=args.kv_quant)
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES_BY_NAME:
+                cells.append((arch, shape, args.multi_pod))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    n_fail = 0
+    for arch, shape, mp in cells:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        fname = out_dir / f"{args.tag}__{arch}__{shape}__{mesh_name}.json"
+        if args.skip_existing and fname.exists():
+            print(f"[skip existing] {fname.name}")
+            continue
+        try:
+            if args.strategy == "pp" or args.pp:
+                rec = run_pp_cell(arch, shape, mp, options, args.tag, args.pp)
+            else:
+                rec = run_cell(arch, shape, mp, out_dir, options, args.tag,
+                               args.strategy)
+        except Exception as e:  # a failed cell is a bug; record it
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                   "tag": args.tag, "ok": False, "error": str(e)[-2000:],
+                   "traceback": traceback.format_exc()[-4000:]}
+            n_fail += 1
+        fname.write_text(json.dumps(rec, indent=2, default=float))
+        status = "SKIP" if rec.get("skipped") else ("OK" if rec["ok"] else "FAIL")
+        extra = ""
+        if rec.get("ok") and not rec.get("skipped"):
+            r = rec["roofline"]
+            extra = (f" compile={rec['compile_s']}s dominant={r['dominant']}"
+                     f" mfu_bound={r['mfu_bound']:.3f}")
+        print(f"[{status}] {arch} x {shape} x {mesh_name}{extra}", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,515 @@
+"""Corrected cost analysis from compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body once*,
+which under-reports FLOPs/bytes for scan-over-layers models by ~L x.  This
+module parses the post-SPMD HLO text, recovers loop trip counts from loop
+conditions, walks the call graph, and accumulates per-chip:
+
+  * dot FLOPs (x loop multipliers)
+  * HBM bytes (operand+result bytes of materializing top-level ops)
+  * collective link bytes per op kind (ring-model per-chip traffic)
+
+All numbers are PER CHIP because the module is the per-partition SPMD
+program.  Dynamic-bound loops (no constant trip) fall back to a supplied
+default and are reported in ``warnings``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_ITEMSIZE = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*?)\)\s*->\s*(.+?)\s*{\s*$")
+_CALL_SINGLE_RE = re.compile(
+    r"(?:calls|condition|body|to_apply|comparator)=%?([\w.\-]+)"
+)
+_CALL_LIST_RE = re.compile(
+    r"(?:calls|branch_computations|called_computations)=\{([^}]*)\}"
+)
+_KNOWN_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_REPL_GROUP_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_REPL_GROUP_V2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """'(bf16[2,3]{1,0}, s32[])' or 'f32[4,5]' -> [(dtype, dims), ...]."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt in ("token", "opaque"):
+            continue
+        shape = tuple(int(x) for x in dims.split(",") if x) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(type_str: str, normalize_f32: bool = False) -> int:
+    """normalize_f32: charge f32 arrays at 2 bytes/elem.  The XLA *CPU*
+    backend upcasts bf16 compute to f32 (no native bf16); on the TPU
+    target these buffers stay bf16, so byte accounting for the roofline
+    uses the normalized size (documented in DESIGN.md)."""
+    total = 0
+    for dt, shape in _parse_shapes(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        size = _ITEMSIZE.get(dt, 4)
+        if normalize_f32 and dt == "f32":
+            size = 2
+        total += n * size
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    type_str: str
+    rest: str            # raw text after the opening paren
+    operands: List[str]
+    is_root: bool
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    param_types: Dict[str, str]
+    ops: Dict[str, Op]
+    order: List[str]
+
+
+def _split_operands(rest: str) -> List[str]:
+    """Operand names from 'args...), attr=...' (names only, best-effort)."""
+    depth = 0
+    args = []
+    cur = []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+            cur.append(ch)
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+            cur.append(ch)
+        elif ch == "," and depth == 0:
+            args.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        args.append("".join(cur).strip())
+    names = []
+    for a in args:
+        m = re.match(r"%?([\w.\-]+)", a)
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+def _split_top_level(s: str) -> List[str]:
+    parts, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur).strip())
+    return [p for p in parts if p]
+
+
+def _parse_header(line: str) -> Optional[Tuple[str, bool, Dict[str, str]]]:
+    """Computation headers sit at column 0 and end with '{'."""
+    if line.startswith((" ", "\t")) or not line.endswith("{") or " -> " not in line:
+        return None
+    is_entry = line.startswith("ENTRY")
+    body = line[len("ENTRY"):].strip() if is_entry else line
+    lp = body.find("(")
+    arrow = body.rfind(") -> ")
+    if lp < 0 or arrow < 0:
+        return None
+    name = body[:lp].strip().lstrip("%").strip()
+    params: Dict[str, str] = {}
+    for item in _split_top_level(body[lp + 1 : arrow]):
+        if ":" in item:
+            pname, ptype = item.split(":", 1)
+            params[pname.strip().lstrip("%")] = ptype.strip()
+    return name, is_entry, params
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _parse_header(line)
+        if hdr is not None:
+            name, is_entry, params = hdr
+            cur = Computation(name, is_entry, params, {}, [])
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            is_root, name, type_str, kind, rest = (
+                bool(m.group(1)), m.group(2), m.group(3), m.group(4), m.group(5))
+            op = Op(name, kind, type_str, rest, _split_operands(rest), is_root)
+            cur.ops[name] = op
+            cur.order.append(name)
+    return comps
+
+
+def _shape_of(name: str, comp: Computation, comps: Dict[str, Computation]) -> Optional[str]:
+    if name in comp.ops:
+        return comp.ops[name].type_str
+    if name in comp.param_types:
+        return comp.param_types[name]
+    return None
+
+
+def _resolve_constant(name: str, comp: Computation) -> Optional[int]:
+    op = comp.ops.get(name)
+    if op is None:
+        return None
+    if op.kind == "constant":
+        m = _CONST_RE.search(op.type_str + " constant(" + op.rest)
+        m2 = re.search(r"constant\((\d+)\)", "constant(" + op.rest)
+        if m2:
+            return int(m2.group(1))
+    return None
+
+
+def _trip_count(while_op: Op, comps: Dict[str, Computation]) -> Optional[int]:
+    km = _KNOWN_TRIP_RE.search(while_op.rest)
+    if km:  # XLA annotates counted loops in backend_config
+        return int(km.group(1))
+    m = re.search(r"condition=%?([\w.\-]+)", while_op.rest)
+    if not m or m.group(1) not in comps:
+        return None
+    cond = comps[m.group(1)]
+    # constants defined in the condition computation
+    consts = []
+    for op in cond.ops.values():
+        if op.kind == "constant":
+            mm = re.search(r"constant\((\d+)\)", "constant(" + op.rest)
+            if mm:
+                consts.append(int(mm.group(1)))
+    # find ROOT; if compare against a constant, use it; else if fusion, look
+    # for a single integer constant among its operands / the computation
+    root = next((o for o in cond.ops.values() if o.is_root), None)
+    if root is not None and root.kind == "compare":
+        for nm in root.operands:
+            c = _resolve_constant(nm, cond)
+            if c is not None:
+                return c
+    if len(consts) == 1:
+        return consts[0]
+    if consts:
+        return max(consts)  # loop bound is usually the largest constant
+    return None
+
+
+def _callees(op: Op) -> List[str]:
+    names: List[str] = []
+    for m in _CALL_SINGLE_RE.finditer(op.rest):
+        names.append(m.group(1))
+    for m in _CALL_LIST_RE.finditer(op.rest):
+        names.extend(x.strip().lstrip("%") for x in m.group(1).split(",") if x.strip())
+    return list(dict.fromkeys(names))
+
+
+def _dot_flops(op: Op, comp: Computation) -> int:
+    out_elems = 0
+    for _, shape in _parse_shapes(op.type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        out_elems += n
+    lhs_name = op.operands[0] if op.operands else None
+    lhs_type = _shape_of(lhs_name, comp, {}) if lhs_name else None
+    contract = 1
+    mm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    if lhs_type and mm:
+        shapes = _parse_shapes(lhs_type)
+        if shapes:
+            dims = shapes[0][1]
+            for idx in (int(x) for x in mm.group(1).split(",") if x):
+                if idx < len(dims):
+                    contract *= dims[idx]
+    return 2 * out_elems * contract
+
+
+_SKIP_BYTES = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+    # callers: their bodies' ops are charged directly
+    "while", "conditional", "call",
+}
+
+
+@dataclasses.dataclass
+class CostSummary:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    warnings: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def analyze(text: str, default_trip: int = 1) -> CostSummary:
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    summary = CostSummary()
+    if entry is None:
+        summary.warnings.append("no ENTRY computation found")
+        return summary
+
+    # computations reachable as fusion/reduce/sort bodies are "internal":
+    # their ops do not individually touch HBM
+    internal: set = set()
+    materializing_callers = {"while", "conditional", "call", "async-start"}
+    for comp in comps.values():
+        for op in comp.ops.values():
+            for callee in _callees(op):
+                if op.kind not in materializing_callers and callee in comps:
+                    internal.add(callee)
+
+    # multipliers via DFS from entry
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry.name] = 1.0
+    stack = [entry.name]
+    visited_edges = set()
+    order: List[str] = []
+    # propagate: process in topological-ish order via repeated passes
+    changed = True
+    passes = 0
+    while changed and passes < 64:
+        changed = False
+        passes += 1
+        for comp in comps.values():
+            base = mult.get(comp.name, 0.0)
+            if base <= 0:
+                continue
+            for op in comp.ops.values():
+                factor = 1.0
+                if op.kind == "while":
+                    trip = _trip_count(op, comps)
+                    if trip is None:
+                        trip = default_trip
+                        summary.warnings.append(
+                            f"dynamic trip count for {op.name}; default={default_trip}")
+                    factor = float(trip)
+                for callee in _callees(op):
+                    if callee not in comps:
+                        continue
+                    if op.kind == "while" and callee != _body_name(op):
+                        f = 1.0  # condition evaluated trip+1 times; negligible
+                    else:
+                        f = factor
+                    new = base * f
+                    if new > mult.get(callee, 0.0):
+                        mult[callee] = new
+                        changed = True
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m <= 0:
+            continue
+        is_internal = comp.name in internal
+        for op in comp.ops.values():
+            if op.kind in ("dot", "dot-general"):
+                summary.flops += m * _dot_flops(op, comp)
+            kind = op.kind.replace("-start", "")
+            if kind in COLLECTIVE_KINDS:
+                payload = sum(
+                    _nbytes(_shape_of(nm, comp, comps) or "", normalize_f32=True)
+                    for nm in op.operands
+                    if _shape_of(nm, comp, comps)
+                )
+                result = _nbytes(op.type_str, normalize_f32=True)
+                g = _group_size(op)
+                link = _link_bytes(kind, payload, result, g)
+                summary.collective_bytes[kind] = summary.collective_bytes.get(kind, 0.0) + m * link
+                summary.collective_counts[kind] = summary.collective_counts.get(kind, 0) + 1
+            if not is_internal and op.kind not in _SKIP_BYTES and not op.kind.endswith("-done"):
+                summary.bytes_accessed += m * _op_bytes(op, comp, comps)
+    return summary
+
+
+_SLICING_KINDS = {"dynamic-slice", "slice", "gather"}
+_PLUMBING_KINDS = {"convert", "bitcast", "copy", "reshape", "transpose",
+                   "parameter", "tuple", "get-tuple-element", "constant"}
+_NB = dict(normalize_f32=True)
+
+
+def _op_bytes(op: Op, comp: Computation, comps: Dict[str, Computation]) -> int:
+    """HBM bytes touched by one materializing op.
+
+    Slicing ops read only the slice, not the whole operand; in-place
+    dynamic-update-slice touches only the update region; fusions whose
+    parameters are consumed exclusively by slicing ops are charged the
+    slice bytes (XLA fuses cache reads this way).  Pure dtype/layout
+    plumbing fusions (bf16<->f32 converts the CPU backend inserts) are
+    charged zero — they do not exist on the TPU target.
+    """
+    result = _nbytes(op.type_str, **_NB)
+    if op.kind in _SLICING_KINDS:
+        return 2 * result  # read slice + write result
+    if op.kind == "dynamic-update-slice":
+        upd = _nbytes(_shape_of(op.operands[1], comp, comps) or "", **_NB) if len(op.operands) > 1 else 0
+        return 2 * upd  # read update + write region (rest aliases in place)
+    if op.kind == "scatter":
+        upd = _nbytes(_shape_of(op.operands[-1], comp, comps) or "", **_NB) if op.operands else 0
+        return result + 2 * upd
+
+    if op.kind == "fusion":
+        callee = next((c for c in _callees(op) if c in comps), None)
+        body = comps.get(callee) if callee else None
+        if body is not None and all(o.kind in _PLUMBING_KINDS for o in body.ops.values()):
+            return 0  # CPU-backend dtype/layout artifact
+        total = _fusion_output_bytes(op, body, comp, comps)
+        params_order = list(body.param_types) if body else []
+        for idx, nm in enumerate(op.operands):
+            ts = _shape_of(nm, comp, comps)
+            if not ts:
+                continue
+            full = _nbytes(ts, **_NB)
+            if body is not None and idx < len(params_order):
+                sliced = _sliced_param_bytes(body, params_order[idx])
+                if sliced is not None:
+                    total += min(sliced, full)
+                    continue
+            total += full
+        return total
+
+    total = result
+    for nm in op.operands:
+        ts = _shape_of(nm, comp, comps)
+        if ts:
+            total += _nbytes(ts, **_NB)
+    return total
+
+
+def _fusion_root(body: Computation) -> Optional[Op]:
+    root = next((o for o in body.ops.values() if o.is_root), None)
+    # look through trailing converts/copies to the real producer
+    seen = 0
+    while root is not None and root.kind in ("convert", "bitcast", "copy") and seen < 8:
+        nxt = body.ops.get(root.operands[0]) if root.operands else None
+        if nxt is None:
+            break
+        root, seen = nxt, seen + 1
+    return root
+
+
+def _fusion_output_bytes(op: Op, body: Optional[Computation],
+                         comp: Computation, comps: Dict[str, Computation]) -> int:
+    """If the fusion root is a dynamic-update-slice, the output aliases the
+    input buffer and only the update region is written."""
+    if body is not None:
+        root = _fusion_root(body)
+        if root is not None and root.kind == "dynamic-update-slice" and len(root.operands) > 1:
+            upd = _shape_of(root.operands[1], body, comps)
+            if upd:
+                return _nbytes(upd, **_NB)
+    return _nbytes(op.type_str, **_NB)
+
+
+def _sliced_param_bytes(body: Computation, pname: str) -> Optional[int]:
+    """Bytes actually read from a fusion parameter.
+
+    Follows dtype/layout aliases (convert/bitcast/copy/reshape — CPU-backend
+    artifacts, free on the TPU target).  Returns None when the buffer is
+    consumed whole by real compute; 0 when its only sink is operand 0 of a
+    dynamic-update-slice (in-place update target); slice bytes when all
+    sinks are slicing ops."""
+    aliases = {pname}
+    frontier = [pname]
+    total = 0
+    steps = 0
+    while frontier and steps < 64:
+        steps += 1
+        nm = frontier.pop()
+        for o in body.ops.values():
+            if nm not in o.operands:
+                continue
+            if o.kind in ("convert", "bitcast", "copy", "reshape"):
+                if o.name not in aliases:
+                    aliases.add(o.name)
+                    frontier.append(o.name)
+            elif o.kind in _SLICING_KINDS:
+                if o.operands and o.operands[0] == nm:
+                    total += _nbytes(o.type_str, **_NB)
+                # index operands are free
+            elif o.kind == "dynamic-update-slice":
+                if o.operands and o.operands[0] == nm:
+                    continue  # in-place target: no read
+                return None  # param is the update: read it whole
+            else:
+                return None  # real compute consumes the buffer
+    return total
+
+
+def _body_name(op: Op) -> Optional[str]:
+    m = re.search(r"body=%?([\w.\-]+)", op.rest)
+    return m.group(1) if m else None
+
+
+def _group_size(op: Op) -> int:
+    m = _REPL_GROUP_RE.search(op.rest)
+    if m:
+        return len(m.group(1).split(","))
+    m = _REPL_GROUP_V2.search(op.rest)
+    if m:  # iota tile format [groups,size]
+        return int(m.group(2))
+    return 2
+
+
+def _link_bytes(kind: str, payload: int, result: int, g: int) -> float:
+    """Per-chip bytes crossing ICI links under ring algorithms."""
+    if g <= 1:
+        return 0.0
+    frac = (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * payload * frac
+    if kind == "all-gather":
+        return result * frac
+    if kind == "reduce-scatter":
+        return payload * frac
+    if kind in ("all-to-all", "ragged-all-to-all"):
+        return payload * frac
+    if kind == "collective-permute":
+        return float(payload)
+    return float(payload)

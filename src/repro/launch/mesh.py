@@ -1,0 +1,56 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  The dry-run requires:
+  single-pod:  (16, 16)    axes ("data", "model")      = 256 chips
+  multi-pod:   (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+``make_pipeline_mesh`` builds the derived pipeline view over the same
+devices for the paper's PP regime: ("pipe", "data", "model").
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_pipeline_mesh(pp: int, *, multi_pod: bool = False, tp: int = 16) -> Mesh:
+    """Reshape the production device set into ("pipe", "data", "model").
+
+    pp * data * tp must equal the chip count (256 or 512); the "pod" axis
+    folds into "data" (each pod contributes pipeline-replica batch shards).
+    """
+    n = 512 if multi_pod else 256
+    assert n % (pp * tp) == 0, (pp, tp, n)
+    dp = n // (pp * tp)
+    devices = np.asarray(jax.devices()[:n]).reshape(pp, dp, tp)
+    return Mesh(devices, ("pipe", "data", "model"))
+
+
+def make_host_mesh(shape: Tuple[int, ...] = (), axes: Tuple[str, ...] = ()) -> Optional[Mesh]:
+    """Small local mesh for tests/examples (None on a single device)."""
+    n = len(jax.devices())
+    if not shape:
+        return None
+    assert math.prod(shape) <= n
+    return jax.make_mesh(shape, axes)
+
+
+# Hardware model: TPU v5e (target platform for this reproduction).
+CHIP_PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+CHIP_HBM_BW = 819e9               # bytes/s per chip
+ICI_LINK_BW = 50e9                # bytes/s per link (~ per direction)
+
+
+def mesh_chips(mesh: Mesh) -> int:
+    return int(np.prod(mesh.devices.shape))

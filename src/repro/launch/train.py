@@ -1,0 +1,126 @@
+"""Training driver: real steps on the local device(s), with the full
+production substrate — sharded AdamW, LR schedules, deterministic
+restartable data, periodic checkpoints, crash restart, optional int8
+gradient compression with error feedback.
+
+Example (CPU, reduced config — examples/train_small.py wraps this):
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.configs import get_config
+from repro.models import ModelOptions, ShardCtx, build_model
+from repro.models.common import abstract_params, logical_axes
+from repro.runtime import checkpoint as ckpt_lib
+from repro.runtime.data import SyntheticLM
+from repro.runtime.fault_tolerance import RetryPolicy
+
+
+def make_train_step(model, ocfg: optim.AdamWConfig, schedule,
+                    grad_compression: bool = False):
+    def train_step(params, opt_state, comp_err, batch):
+        def loss_fn(p):
+            logits = model.forward_train(p, batch)
+            lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            ll = jnp.take_along_axis(lp, batch["labels"][..., None], -1)
+            return -jnp.mean(ll)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        if grad_compression:
+            grads, comp_err = optim.compress_grads_with_feedback(grads, comp_err)
+        lr_scale = schedule(opt_state["step"])
+        params, opt_state = optim.adamw_update(params, grads, opt_state, ocfg,
+                                               lr_scale)
+        return loss, params, opt_state, comp_err
+
+    return jax.jit(train_step, donate_argnums=(0, 1, 2))
+
+
+def run(arch: str, *, smoke: bool = True, steps: int = 50, batch: int = 8,
+        seq: int = 128, ckpt_dir: str = "", ckpt_every: int = 20,
+        grad_compression: bool = False, lr: float = 3e-4,
+        schedule: str = "cosine", log_every: int = 10,
+        simulate_crash_at: int = -1) -> dict:
+    cfg = get_config(arch + ("-smoke" if smoke else ""))
+    model = build_model(cfg, ShardCtx.single(), ModelOptions(), enc_len=seq)
+    ocfg = optim.AdamWConfig(lr=lr)
+    sched = (optim.wsd_schedule(steps // 10, steps * 7 // 10, steps * 2 // 10)
+             if schedule == "wsd" else optim.cosine_schedule(steps // 10, steps))
+    step_fn = make_train_step(model, ocfg, sched, grad_compression)
+    data = SyntheticLM(cfg.vocab_size, seq, batch, seed=1)
+
+    params = model.init(jax.random.key(0))
+    opt_state = optim.init_opt_state(params, ocfg)
+    comp_err = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params) \
+        if grad_compression else {"_": jnp.zeros(())}
+    start_step = 0
+
+    mgr = ckpt_lib.CheckpointManager(ckpt_dir, ckpt_every) if ckpt_dir else None
+    if mgr is not None:
+        got = mgr.restore_or_none({"params": params, "opt": opt_state})
+        if got is not None:
+            start_step, tree = got
+            params, opt_state = tree["params"], tree["opt"]
+            print(f"[train] restored checkpoint at step {start_step}")
+
+    losses = []
+    retry = RetryPolicy(max_attempts=2)
+    t0 = time.time()
+    for step in range(start_step, steps):
+        if step == simulate_crash_at:
+            raise RuntimeError("simulated crash (restart me)")
+        toks, labels = data.batch_at(step)
+        b = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+        if cfg.family == "vlm":
+            from repro.models.transformer import cfg_n_patches
+
+            b["patches"] = jnp.zeros((batch, cfg_n_patches(cfg), cfg.d_model),
+                                     jnp.bfloat16)
+        if cfg.family == "audio":
+            b["frames"] = jnp.zeros((batch, seq, cfg.d_model), jnp.bfloat16)
+
+        loss, params, opt_state, comp_err = retry.run(
+            step_fn, params, opt_state, comp_err, b)
+        losses.append(float(loss))
+        if mgr is not None:
+            mgr.maybe_save(step + 1, {"params": params, "opt": opt_state})
+        if step % log_every == 0:
+            print(f"[train] step {step} loss {float(loss):.4f} "
+                  f"lr x{float(sched(step)):.3f} ({time.time()-t0:.1f}s)")
+
+    return {"losses": losses, "final_loss": losses[-1] if losses else None,
+            "steps": steps, "wall_s": time.time() - t0}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--schedule", default="cosine", choices=["cosine", "wsd"])
+    args = ap.parse_args()
+    out = run(args.arch, smoke=args.smoke, steps=args.steps, batch=args.batch,
+              seq=args.seq, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+              grad_compression=args.grad_compression, schedule=args.schedule)
+    print(f"[train] done: final_loss={out['final_loss']:.4f} "
+          f"wall={out['wall_s']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

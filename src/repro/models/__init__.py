@@ -1,0 +1,8 @@
+from repro.models.registry import (  # noqa: F401
+    Model,
+    ModelOptions,
+    build_model,
+    count_params,
+    input_specs,
+)
+from repro.models.common import ShardCtx  # noqa: F401

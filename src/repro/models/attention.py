@@ -1,0 +1,311 @@
+"""Attention variants as memory-safe pure-jnp (lax.scan) implementations.
+
+These are the *reference/distribution* paths: the compiled HLO never
+materializes an [S, S] score matrix, so 32k prefill fits device memory and
+the dry-run ``memory_analysis`` is realistic.  The Pallas kernels in
+:mod:`repro.kernels` are the TPU-optimized equivalents of the same math
+(validated against these in interpret mode).
+
+Layout conventions:
+  q            [B, Sq, Hq, hd]     (Hq may be tp-padded)
+  k, v         [B, Skv, Hkv, hd]   (GQA: Hq % Hkv == 0)
+  decode q     [B, Hq, hd]         (single new token)
+  caches       [B, S_max, Hkv, hd] (full) or [B, W, Hkv, hd] (rolling)
+Outputs are [B, Sq, Hq*hd] / [B, Hq*hd].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _group(q: jax.Array, n_kv: int) -> jax.Array:
+    """[B,S,Hq,hd] -> [B,S,Kv,G,hd] grouping query heads over kv heads."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    kv_block: int = 512,
+    q_positions: Optional[jax.Array] = None,
+    triangular: bool = False,
+) -> jax.Array:
+    """Flash-style attention: lax.scan over kv blocks with running softmax.
+
+    ``triangular=True`` skips fully-masked kv blocks for causal attention via
+    a dynamic-bound fori_loop per q block (~2x compute saving at long S);
+    kept off for the paper-faithful baseline and enabled during the perf
+    hillclimb (see EXPERIMENTS.md §Perf).
+    """
+    b, sq, hq, hd = q.shape
+    skv, n_kv = k.shape[1], k.shape[2]
+    g = hq // n_kv
+    kv_block = min(kv_block, skv)
+    while skv % kv_block:
+        kv_block //= 2
+    nb = skv // kv_block
+    qg = _group(q, n_kv)  # [B,Sq,Kv,G,hd]
+    scale = hd ** -0.5
+    qpos = q_positions if q_positions is not None else jnp.arange(sq)
+
+    if triangular and causal and nb > 1:
+        return _triangular_attention(qg, k, v, window=window, kv_block=kv_block,
+                                     q_positions=qpos, scale=scale)
+
+    kb = k.reshape(b, nb, kv_block, n_kv, hd).swapaxes(0, 1)
+    vb = v.reshape(b, nb, kv_block, n_kv, hd).swapaxes(0, 1)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, i = inp
+        kpos = i * kv_block + jnp.arange(kv_block)
+        # scores [B, Kv, G, Sq, blk]
+        s = jnp.einsum("bsgqd,btgd->bgqst", qg, kblk).astype(jnp.float32) * scale
+        mask = jnp.ones((sq, kv_block), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        mn = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - mn[..., None])
+        corr = jnp.exp(m - mn)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bgqst,btgd->bgqsd", p.astype(q.dtype), vblk
+        ).astype(jnp.float32)
+        return (mn, l, acc), None
+
+    m0 = jnp.full((b, n_kv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, n_kv, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype).transpose(0, 3, 1, 2, 4).reshape(b, sq, hq * hd)
+
+
+def _triangular_attention(qg, k, v, *, window, kv_block, q_positions, scale):
+    """Causal attention skipping future kv blocks (dynamic-bound inner loop)."""
+    b, sq, n_kv, g, hd = qg.shape
+    skv = k.shape[1]
+    q_block = kv_block
+    while sq % q_block:
+        q_block //= 2
+    nq = sq // q_block
+    dtype = qg.dtype
+
+    def q_block_fn(qi, qblk, qpos_blk):
+        # attend kv blocks [lo, hi): lo from the sliding window, hi from causality
+        hi = jnp.minimum((qpos_blk.max() // kv_block) + 1, skv // kv_block)
+        lo = jnp.maximum((qpos_blk.min() - (window - 1)) // kv_block, 0) if window else 0
+
+        def body(j, carry):
+            m, l, acc = carry
+            kblk = jax.lax.dynamic_slice_in_dim(k, j * kv_block, kv_block, 1)
+            vblk = jax.lax.dynamic_slice_in_dim(v, j * kv_block, kv_block, 1)
+            kpos = j * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum("bsgqd,btgd->bgqst", qblk, kblk).astype(jnp.float32) * scale
+            mask = qpos_blk[:, None] >= kpos[None, :]
+            if window:
+                mask &= kpos[None, :] > qpos_blk[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            mn = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - mn[..., None])
+            corr = jnp.exp(m - mn)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bgqst,btgd->bgqsd", p.astype(dtype), vblk
+            ).astype(jnp.float32)
+            return (mn, l, acc)
+
+        m0 = jnp.full((b, n_kv, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, n_kv, g, q_block, hd), jnp.float32)
+        m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, a0))
+        return (acc / jnp.maximum(l[..., None], 1e-30)).astype(dtype)
+
+    qb = qg.reshape(b, nq, q_block, n_kv, g, hd).swapaxes(0, 1)
+    qpos_b = q_positions.reshape(nq, q_block)
+
+    def scan_body(_, inp):
+        qi, qblk, qpos_blk = inp
+        return None, q_block_fn(qi, qblk, qpos_blk)
+
+    _, outs = jax.lax.scan(scan_body, None, (jnp.arange(nq), qb, qpos_b))
+    # outs [nq, B, Kv, G, q_block, hd] -> [B, Sq, H*hd]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, n_kv * g * hd)
+    return out
+
+
+def local_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int,
+    q_block: int = 512,
+) -> jax.Array:
+    """Banded causal attention: each q block attends a [window + q_block]
+    kv slice -> compute O(S * window) instead of O(S^2)."""
+    b, sq, hq, hd = q.shape
+    n_kv = k.shape[2]
+    g = hq // n_kv
+    q_block = min(q_block, sq)
+    while sq % q_block:
+        q_block //= 2
+    nq = sq // q_block
+    span = window + q_block
+    scale = hd ** -0.5
+    qg = _group(q, n_kv).reshape(b, nq, q_block, n_kv, g, hd).swapaxes(0, 1)
+    # pad kv on the left so every slice is in-bounds
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+
+    def body(_, inp):
+        i, qblk = inp
+        start = i * q_block  # in padded coords: real kv [start-window, start+q_block)
+        kblk = jax.lax.dynamic_slice_in_dim(kp, start, span, 1)
+        vblk = jax.lax.dynamic_slice_in_dim(vp, start, span, 1)
+        qpos = start + jnp.arange(q_block)
+        kpos = start - window + jnp.arange(span)
+        # §Perf A2: keep the [*, qb, span] score array in bf16 — it is the
+        # dominant HBM temporary of windowed prefill; softmax stats in f32
+        s = jnp.einsum("bsgqd,btgd->bgqst", qblk, kblk) * jnp.asarray(
+            scale, q.dtype)
+        mask = (qpos[:, None] >= kpos[None, :]) & (kpos[None, :] > qpos[:, None] - window) & (
+            kpos[None, :] >= 0
+        )
+        s = jnp.where(mask[None, None, None], s, jnp.asarray(-3e38, q.dtype)
+                      if q.dtype == jnp.bfloat16 else NEG_INF)
+        # §Perf A1: unnormalized probabilities, stored bf16; the softmax
+        # division moves to the [*, qb, hd] output (span/hd x less traffic)
+        m = s.max(axis=-1, keepdims=True).astype(jnp.float32)
+        p = jnp.exp(s.astype(jnp.float32) - m).astype(q.dtype)
+        l = p.astype(jnp.float32).sum(axis=-1)            # [*, qb]
+        o = jnp.einsum("bgqst,btgd->bgqsd", p, vblk)
+        o = (o.astype(jnp.float32) / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return None, o
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qg))
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, hq * hd)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    positions: jax.Array,
+    *,
+    rolling_window: int = 0,
+) -> jax.Array:
+    """Single-token attention over a (possibly sequence-sharded) KV cache.
+
+    q [B, Hq, hd]; caches [B, S, Kv, hd]; positions [B] = index of the new
+    token (cache already contains it).  For rolling caches (S == window)
+    validity is age-based.
+    """
+    b, hq, hd = q.shape
+    s, n_kv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // n_kv
+    qg = q.reshape(b, n_kv, g, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bgqd,bsgd->bgqs", qg, k_cache).astype(jnp.float32) * scale
+    if positions is not None:
+        idx = jnp.arange(s)
+        if rolling_window:
+            valid = idx[None, :] < jnp.minimum(positions + 1, rolling_window)[:, None]
+        else:
+            valid = idx[None, :] <= positions[:, None]
+        scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgqs,bsgd->bgqd", p.astype(q.dtype), v_cache)
+    return out.reshape(b, hq * hd)
+
+
+def cross_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    kv_block: int = 512,
+) -> jax.Array:
+    """Non-causal attention to a fixed memory (vision patches / encoder out)."""
+    return chunked_attention(q, k, v, causal=False, kv_block=kv_block)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache (§Perf C1 — beyond-paper)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x: jax.Array, axis: int = -1):
+    """Symmetric per-vector int8 quantization.  Returns (int8, bf16 scale
+    with ``axis`` reduced)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=axis) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(xf / jnp.expand_dims(scale, axis)), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def decode_attention_quant(
+    q: jax.Array,
+    k8: jax.Array, ks: jax.Array,
+    v8: jax.Array, vs: jax.Array,
+    positions: Optional[jax.Array],
+    *,
+    rolling_window: int = 0,
+) -> jax.Array:
+    """Single-token attention over an int8 KV cache.
+
+    Both contractions run as native s8 x s8 -> s32 MXU dots: the cache is
+    never dequantized to a materialized bf16 array (halving decode HBM
+    traffic).  q and the probability rows are quantized on the fly; the
+    per-position V scales fold into the probabilities before the AV dot.
+
+    q [B,H,hd] bf16; k8/v8 [B,S,Kv,hd] int8; ks/vs [B,S,Kv] bf16.
+    """
+    b, hq, hd = q.shape
+    s, n_kv = k8.shape[1], k8.shape[2]
+    g = hq // n_kv
+    qg = q.reshape(b, n_kv, g, hd)
+    q8, qs = quantize_kv(qg)                          # [B,Kv,G,hd], [B,Kv,G]
+    s32 = jnp.einsum("bgqd,bsgd->bgqs", q8, k8,
+                     preferred_element_type=jnp.int32)
+    ks_t = ks.transpose(0, 2, 1)[:, :, None, :].astype(jnp.float32)
+    scores = s32.astype(jnp.float32) * qs[..., None].astype(jnp.float32) \
+        * ks_t * (hd ** -0.5)
+    if positions is not None:
+        idx = jnp.arange(s)
+        if rolling_window:
+            valid = idx[None, :] < jnp.minimum(positions + 1, rolling_window)[:, None]
+        else:
+            valid = idx[None, :] <= positions[:, None]
+        scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)               # [B,Kv,G,S] fp32
+    pv = p * vs.transpose(0, 2, 1)[:, :, None, :].astype(jnp.float32)
+    p8, ps = quantize_kv(pv)                          # scale per [B,Kv,G]
+    o32 = jnp.einsum("bgqs,bsgd->bgqd", p8, v8,
+                     preferred_element_type=jnp.int32)
+    out = o32.astype(jnp.float32) * ps[..., None].astype(jnp.float32)
+    return out.astype(q.dtype).reshape(b, hq * hd)
+
+
+def fill_rolling_cache(k: jax.Array, window: int) -> jax.Array:
+    """Convert prefill K/V [B, S, kv, hd] into a rolling cache [B, W, kv, hd]
+    under the slot = position %% W convention."""
+    s = k.shape[1]
+    if s < window:
+        return jnp.pad(k, ((0, 0), (0, window - s), (0, 0), (0, 0)))
+    tail = k[:, s - window:]
+    shift = s % window
+    return jnp.roll(tail, shift, axis=1) if shift else tail

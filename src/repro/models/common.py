@@ -1,0 +1,151 @@
+"""Shared model machinery: ParamSpec trees, norms, RoPE, shard context."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative parameter: shape + logical axes + init scheme."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | small
+    dtype: Any = jnp.bfloat16
+    # fan_in override for scaled-normal init (0 -> shape[-2] or shape[-1])
+    fan_in: int = 0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def abstract_params(spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree, is_leaf=is_spec
+    )
+
+
+def logical_axes(spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def init_params(spec_tree: PyTree, key: jax.Array) -> PyTree:
+    """Materialize real parameters (smoke tests / examples only)."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def init_one(s: ParamSpec, k):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        fan = s.fan_in or (s.shape[-2] if len(s.shape) >= 2 else s.shape[-1])
+        scale = 0.02 if s.init == "small" else 1.0 / math.sqrt(max(fan, 1))
+        return (jax.random.normal(k, s.shape, jnp.float32) * scale).astype(s.dtype)
+
+    return jax.tree.unflatten(treedef, [init_one(s, k) for s, k in zip(leaves, keys)])
+
+
+def param_bytes(spec_tree: PyTree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize for s in leaves)
+
+
+def param_count_tree(spec_tree: PyTree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Distribution context threaded through model builders.
+
+    ``mesh`` may be None (single-device smoke tests).  ``tp`` is the size of
+    the tensor-model axis; head padding depends on it.  ``strategy`` selects
+    the sharding rule table.
+    """
+
+    mesh: Optional[Mesh] = None
+    strategy: str = "serve"
+    tp: int = 1
+    data_axes: Tuple[str, ...] = ("pod", "data")
+    model_axis: str = "model"
+
+    @staticmethod
+    def single() -> "ShardCtx":
+        return ShardCtx(mesh=None, strategy="serve", tp=1)
+
+    @staticmethod
+    def from_mesh(mesh: Mesh, strategy: str = "serve") -> "ShardCtx":
+        shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+        return ShardCtx(
+            mesh=mesh,
+            strategy=strategy,
+            tp=shape.get("model", 1),
+            data_axes=tuple(a for a in ("pod", "data") if a in shape),
+        )
+
+    def constrain(self, x, axes):
+        from repro import sharding
+
+        return sharding.constrain(x, axes, self.strategy, self.mesh)
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * inv).astype(x.dtype) * w
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def rope_tables(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions [...,] -> (cos, sin) of shape [..., head_dim/2], fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., n_heads, head_dim]; cos/sin broadcastable [..., 1, head_dim/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1).astype(x.dtype)
+
+
+def sinusoid_positions(length: int, d_model: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal position embedding [length, d_model]."""
+    half = d_model // 2
+    scale = np.log(10000.0) / max(half - 1, 1)
+    inv = np.exp(-scale * np.arange(half))
+    pos = np.arange(length)[:, None] * inv[None, :]
+    emb = np.concatenate([np.sin(pos), np.cos(pos)], axis=1)
+    return jnp.asarray(emb, jnp.bfloat16)
+
+
+def pad_heads(n_heads: int, tp: int) -> int:
+    return int(math.ceil(n_heads / tp) * tp)

@@ -1,0 +1,171 @@
+"""RecurrentGemma / Griffin hybrid family: RG-LRU temporal blocks + local
+attention, in repeating (rglru, rglru, attn) superblocks, each mixing block
+followed by a gated-GeLU MLP residual.
+
+RG-LRU recurrence (fp32):  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+  a_t = exp(-c * softplus(Lambda) * r_t),  r/i = sigmoid(diag-gates(u_t))
+Prefill uses an associative scan (O(log S) depth); decode is a single step.
+Gates are diagonal (per-channel), keeping the parameter budget at ~9B.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParamSpec, rmsnorm
+from repro.models.stacked import Ctx, Stack
+from repro.models.transformer import (
+    attn_specs,
+    mlp_specs,
+    self_attn_block,
+    _self_cache_spec,
+    _self_cache_axes,
+)
+
+RG_C = 8.0
+CONV_W = 4
+
+
+def rglru_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    dr = cfg.d_model  # lru width == d_model (recurrentgemma-9b)
+    return {
+        "ln": ParamSpec((d,), ("embed",), "ones"),
+        "wx": ParamSpec((d, dr), ("embed", "rnn")),
+        "wg": ParamSpec((d, dr), ("embed", "rnn")),
+        "conv_w": ParamSpec((CONV_W, dr), (None, "rnn"), "small"),
+        "conv_b": ParamSpec((dr,), ("rnn",), "zeros"),
+        "lam": ParamSpec((dr,), ("rnn",), "ones", jnp.float32),
+        "wa": ParamSpec((dr,), ("rnn",), "small", jnp.float32),
+        "ba": ParamSpec((dr,), ("rnn",), "zeros", jnp.float32),
+        "wi": ParamSpec((dr,), ("rnn",), "small", jnp.float32),
+        "bi": ParamSpec((dr,), ("rnn",), "zeros", jnp.float32),
+        "wout": ParamSpec((dr, d), ("rnn", "embed"), fan_in=dr),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array, tail=None):
+    """Depthwise causal conv width 4 over [B, S, dr] via shifted adds.
+
+    ``tail`` [B, CONV_W-1, dr] supplies state for decode/continuation."""
+    if u.ndim == 2:  # decode: u [B, dr], tail [B,3,dr]
+        hist = jnp.concatenate([tail, u[:, None, :]], 1)  # [B, 4, dr]
+        y = jnp.einsum("btd,td->bd", hist, w) + b
+        return y, hist[:, 1:]
+    pad = jnp.zeros((u.shape[0], CONV_W - 1, u.shape[2]), u.dtype) if tail is None else tail
+    up = jnp.concatenate([pad, u], 1)
+    y = sum(up[:, i : i + u.shape[1]] * w[i] for i in range(CONV_W)) + b
+    return y, up[:, -(CONV_W - 1) :]
+
+
+def _rglru_gates(p, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(p["wa"] * uf + p["ba"])
+    i = jax.nn.sigmoid(p["wi"] * uf + p["bi"])
+    log_a = -RG_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
+    return a, beta * (i * uf)
+
+
+def rglru_block(p, x, ctx: Ctx, cache, cfg: ArchConfig):
+    """cache = {"h": [B, dr] fp32, "conv": [B, 3, dr]} or None (train)."""
+    shard = ctx.shard
+    if ctx.mode == "decode":
+        h = rmsnorm(x, p["ln"], cfg.norm_eps)
+        u = h @ p["wx"]
+        gate = jax.nn.gelu(h @ p["wg"])
+        u, conv_tail = _causal_conv(u, p["conv_w"], p["conv_b"], cache["conv"])
+        a, w_in = _rglru_gates(p, u)
+        state = a * cache["h"] + w_in
+        y = (state.astype(x.dtype) * gate) @ p["wout"]
+        return x + y, {"h": state, "conv": conv_tail}
+
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    u = h @ p["wx"]                       # [B, S, dr]
+    gate = jax.nn.gelu(h @ p["wg"])
+    u, conv_tail = _causal_conv(u, p["conv_w"], p["conv_b"])
+    a, w_in = _rglru_gates(p, u)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, states = jax.lax.associative_scan(combine, (a, w_in), axis=1)
+    y = (states.astype(x.dtype) * gate) @ p["wout"]
+    x = x + y
+    new_cache = None
+    if ctx.mode == "prefill":
+        new_cache = {"h": states[:, -1], "conv": conv_tail}
+    return x, new_cache
+
+
+def hybrid_stack(cfg: ArchConfig, tp: int) -> Stack:
+    """(rglru, rglru, attn) superblocks; each mixing block + its MLP."""
+    pattern = cfg.block_pattern
+    n = (cfg.num_layers - len(cfg.tail_pattern)) // len(pattern)
+    group_specs: Dict[str, Any] = {}
+    for i, kind in enumerate(pattern):
+        mix = rglru_specs(cfg) if kind == "rglru" else attn_specs(cfg, tp)
+        group_specs[f"l{i}"] = {"mix": mix, "ffn": mlp_specs(cfg, tp)}
+
+    def gelu_mlp(p, x, shard):
+        h = rmsnorm(x, p["ln"], cfg.norm_eps)
+        a = jax.nn.gelu(h @ p["w1"]) * (h @ p["w3"])
+        return x + a @ p["w2"]
+
+    def apply(gp, x, ctx: Ctx, cache_g):
+        new_caches = {}
+        for i, kind in enumerate(pattern):
+            p = gp[f"l{i}"]
+            c = cache_g[f"l{i}"] if cache_g is not None else None
+            if kind == "rglru":
+                x, nc = rglru_block(p["mix"], x, ctx, c, cfg)
+            else:
+                x, nc = self_attn_block(p["mix"], x, ctx, c, cfg)
+            if nc is not None:
+                new_caches[f"l{i}"] = nc
+            x = gelu_mlp(p["ffn"], x, ctx.shard)
+        return x, (new_caches or None)
+
+    attn_cspec = _self_cache_spec(cfg, tp)
+    dr = cfg.d_model
+
+    def cache_spec(batch, cache_len):
+        d = {}
+        for i, kind in enumerate(pattern):
+            if kind == "rglru":
+                d[f"l{i}"] = {
+                    "h": jax.ShapeDtypeStruct((batch, dr), jnp.float32),
+                    "conv": jax.ShapeDtypeStruct((batch, CONV_W - 1, dr), jnp.bfloat16),
+                }
+            else:
+                d[f"l{i}"] = attn_cspec(batch, cache_len)
+        return d
+
+    attn_caxes = _self_cache_axes(cfg, tp)
+
+    def cache_axes():
+        d = {}
+        for i, kind in enumerate(pattern):
+            if kind == "rglru":
+                d[f"l{i}"] = {"h": ("batch", "rnn"), "conv": ("batch", None, "rnn")}
+            else:
+                d[f"l{i}"] = attn_caxes()
+        return d
+
+    return Stack("hybrid", n, group_specs, apply, cache_spec, cache_axes)
+
+
+def hybrid_tail_stack(cfg: ArchConfig, tp: int) -> Stack:
+    """Trailing rglru layers (38 = 12*3 + 2)."""
+    sub = ArchConfig(**{**cfg.__dict__, "block_pattern": cfg.tail_pattern,
+                        "tail_pattern": (), "num_layers": len(cfg.tail_pattern)})
+    st = hybrid_stack(sub, tp)
+    st.name = "hybrid_tail"
+    st.n = 1
+    return st

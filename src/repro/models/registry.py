@@ -1,0 +1,327 @@
+"""Model assembly: build any assigned architecture into a uniform Model API.
+
+Model = embed -> [Stack...] -> final norm -> lm head, with three entry
+points (forward_train / prefill / decode) plus abstract input & cache
+specs so the multi-pod dry-run can lower every (arch x shape) cell with
+ShapeDtypeStructs only (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import stacked
+from repro.models.common import (
+    ParamSpec,
+    ShardCtx,
+    abstract_params,
+    init_params,
+    is_spec,
+    logical_axes,
+    param_count_tree,
+    rmsnorm,
+    rope_tables,
+    sinusoid_positions,
+)
+from repro.models.stacked import Ctx, Stack, run_stack, stack_specs
+from repro.models.transformer import cfg_n_patches, dense_layer_stack, vlm_stack
+from repro.models.hybrid import hybrid_stack, hybrid_tail_stack
+from repro.models.xlstm import xlstm_stack
+from repro.models.whisper import decoder_stack, encoder_stack
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelOptions:
+    kv_block: int = 512
+    # ---- perf-hillclimb toggles (EXPERIMENTS.md §Perf; default = the
+    # paper-faithful baseline the roofline table records) ----
+    triangular: bool = False          # causal block-skipping attention
+    fuse_shared_expert: bool = False  # B1: shared expert inside MoE psum
+    seq_shard: bool = False           # B2: sequence-sharded residual stream
+    kv_quant: bool = False            # C1: int8 KV cache with inline dequant
+    remat: bool = True
+    logits_fp32: bool = True
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    shard: ShardCtx
+    options: ModelOptions
+    specs: PyTree                      # ParamSpec tree (stacked)
+    stacks: Dict[str, Stack]
+    forward_train: Callable            # (params, batch) -> logits [B,S,V]
+    prefill: Callable                  # (params, batch) -> (logits [B,V], cache)
+    decode: Callable                   # (params, cache, batch) -> (logits [B,V], cache)
+    # internal hooks (used by the PP stage splitter in core/engine.py)
+    make_ctx: Callable = None
+    embed_tokens: Callable = None
+    lm_head: Callable = None
+
+    # ---- abstract views -------------------------------------------------
+    def abstract_params(self) -> PyTree:
+        return abstract_params(self.specs)
+
+    def param_axes(self) -> PyTree:
+        return logical_axes(self.specs)
+
+    def init(self, key) -> PyTree:
+        return init_params(self.specs, key)
+
+    def abstract_cache(self, batch: int, cache_len: int) -> PyTree:
+        return {
+            name: stacked.abstract_cache_tree(st, batch, cache_len)
+            for name, st in self.stacks.items()
+            if st.cache_spec is not None
+        }
+
+    def cache_axes(self) -> PyTree:
+        return {
+            name: stacked.cache_axes_tree(st)
+            for name, st in self.stacks.items()
+            if st.cache_spec is not None
+        }
+
+    def init_cache(self, batch: int, cache_len: int) -> PyTree:
+        return stacked.zeros_cache(self.abstract_cache(batch, cache_len))
+
+    def input_specs(self, shape: InputShape) -> Tuple[Dict, Dict]:
+        return input_specs(self.cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# Family -> stacks
+# ---------------------------------------------------------------------------
+
+def _build_stacks(cfg: ArchConfig, tp: int, enc_len: int,
+                  kv_quant: bool = False) -> Dict[str, Stack]:
+    if cfg.family in ("dense",):
+        return {"blocks": dense_layer_stack(cfg, tp, cfg.num_layers,
+                                            kv_quant=kv_quant)}
+    if cfg.family == "moe":
+        per = cfg.moe.every
+        return {"blocks": dense_layer_stack(cfg, tp, cfg.num_layers // per,
+                                            moe_every=per,
+                                            shared_expert=cfg.moe.shared,
+                                            kv_quant=kv_quant)}
+    if cfg.family == "vlm":
+        return {"blocks": vlm_stack(cfg, tp)}
+    if cfg.family == "hybrid":
+        st = {"blocks": hybrid_stack(cfg, tp)}
+        if cfg.tail_pattern:
+            st["tail"] = hybrid_tail_stack(cfg, tp)
+        return st
+    if cfg.family == "ssm":
+        return {"blocks": xlstm_stack(cfg, tp)}
+    if cfg.family == "audio":
+        return {"encoder": encoder_stack(cfg, tp),
+                "decoder": decoder_stack(cfg, tp, enc_len)}
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def _lm_specs(cfg: ArchConfig, stacks: Dict[str, Stack]) -> PyTree:
+    d, v = cfg.d_model, cfg.vocab_size
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), "small"),
+        "lnf": ParamSpec((d,), ("embed",), "ones"),
+        "head": ParamSpec((d, v), ("embed", "vocab")),
+        "stacks": {name: stack_specs(st) for name, st in stacks.items()},
+    }
+    if cfg.family == "audio":
+        specs["enc_lnf"] = ParamSpec((d,), ("embed",), "ones")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def build_model(cfg: ArchConfig, shard: Optional[ShardCtx] = None,
+                options: ModelOptions = ModelOptions(),
+                enc_len: int = 0) -> Model:
+    shard = shard or ShardCtx.single()
+    tp = shard.tp
+    stacks = _build_stacks(cfg, tp, enc_len or 1500,
+                           kv_quant=options.kv_quant and cfg.family in ("dense", "moe"))
+    specs = _lm_specs(cfg, stacks)
+    hd = cfg.resolved_head_dim
+    uses_rope = cfg.family not in ("ssm", "audio")
+
+    def make_ctx(mode, positions, patches=None, enc_out=None):
+        cos = sin = None
+        if uses_rope:
+            cos, sin = rope_tables(positions, hd, cfg.rope_theta)
+        return Ctx(mode=mode, shard=shard, positions=positions,
+                   rope_cos=cos, rope_sin=sin, patches=patches, enc_out=enc_out,
+                   kv_block=options.kv_block, triangular=options.triangular,
+                   fuse_shared_expert=options.fuse_shared_expert,
+                   seq_shard=options.seq_shard, kv_quant=options.kv_quant)
+
+    def embed_tokens(params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        return shard.constrain(x, ("batch",) + (None,) * (x.ndim - 1))
+
+    def lm_head(params, x):
+        x = rmsnorm(x, params["lnf"], cfg.norm_eps)
+        logits = x @ params["head"]
+        if options.logits_fp32:
+            logits = logits.astype(jnp.float32)
+        ax = ("batch", None, "vocab") if logits.ndim == 3 else ("batch", "vocab")
+        return shard.constrain(logits, ax)
+
+    def run_encoder(params, frames, mode):
+        s = frames.shape[1]
+        x = frames + sinusoid_positions(s, cfg.d_model)[None]
+        ctx = Ctx(mode="train", shard=shard, positions=jnp.arange(s),
+                  kv_block=options.kv_block)
+        x, _ = run_stack(stacks["encoder"], params["stacks"]["encoder"], x, ctx,
+                         remat=options.remat and mode == "train")
+        return rmsnorm(x, params["enc_lnf"], cfg.norm_eps)
+
+    # ---- train ----------------------------------------------------------
+    def forward_train(params, batch):
+        if cfg.family == "audio":
+            enc_out = run_encoder(params, batch["frames"], "train")
+            tokens = batch["tokens"]
+            s = tokens.shape[1]
+            x = embed_tokens(params, tokens) + sinusoid_positions(s, cfg.d_model)[None]
+            ctx = make_ctx("train", jnp.arange(s), enc_out=enc_out)
+            x, _ = run_stack(stacks["decoder"], params["stacks"]["decoder"], x, ctx,
+                             remat=options.remat)
+            return lm_head(params, x)
+
+        tokens = batch["tokens"]
+        s = tokens.shape[1]
+        x = embed_tokens(params, tokens)
+        ctx = make_ctx("train", jnp.arange(s), patches=batch.get("patches"))
+        for name in _stack_order(stacks):
+            x, _ = run_stack(stacks[name], params["stacks"][name], x, ctx,
+                             remat=options.remat)
+        return lm_head(params, x)
+
+    # ---- prefill ----------------------------------------------------------
+    def prefill(params, batch):
+        if cfg.family == "audio":
+            enc_out = run_encoder(params, batch["frames"], "prefill")
+            tokens = batch["tokens"]
+            s = tokens.shape[1]
+            x = embed_tokens(params, tokens) + sinusoid_positions(s, cfg.d_model)[None]
+            ctx = make_ctx("prefill", jnp.arange(s), enc_out=enc_out)
+            x, cache = run_stack(stacks["decoder"], params["stacks"]["decoder"],
+                                 x, ctx, remat=False)
+            return lm_head(params, x[:, -1]), {"decoder": cache}
+
+        tokens = batch["tokens"]
+        s = tokens.shape[1]
+        x = embed_tokens(params, tokens)
+        ctx = make_ctx("prefill", jnp.arange(s), patches=batch.get("patches"))
+        caches = {}
+        for name in _stack_order(stacks):
+            x, c = run_stack(stacks[name], params["stacks"][name], x, ctx, remat=False)
+            if c is not None:
+                caches[name] = c
+        return lm_head(params, x[:, -1]), caches
+
+    # ---- decode -----------------------------------------------------------
+    def decode(params, cache, batch):
+        token, positions = batch["token"], batch["positions"]
+        x = embed_tokens(params, token)
+        if cfg.family == "audio":
+            x = x + _sinusoid_at(positions, cfg.d_model)
+        ctx = make_ctx("decode", positions)
+        new_cache = {}
+        for name in _stack_order(stacks):
+            if name == "encoder":
+                continue
+            x, c = run_stack(stacks[name], params["stacks"][name], x, ctx,
+                             cache_stacked=cache[name], remat=False)
+            new_cache[name] = c
+        return lm_head(params, x), new_cache
+
+    return Model(cfg=cfg, shard=shard, options=options, specs=specs,
+                 stacks=stacks, forward_train=forward_train,
+                 prefill=prefill, decode=decode,
+                 make_ctx=make_ctx, embed_tokens=embed_tokens, lm_head=lm_head)
+
+
+def _stack_order(stacks):
+    order = [n for n in ("encoder", "blocks", "tail", "decoder") if n in stacks]
+    assert len(order) == len(stacks)
+    return order
+
+
+def _sinusoid_at(positions: jax.Array, d_model: int) -> jax.Array:
+    half = d_model // 2
+    inv = jnp.exp(-jnp.log(10000.0) / max(half - 1, 1) * jnp.arange(half))
+    ang = positions.astype(jnp.float32)[:, None] * inv[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs per (arch x shape)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> Tuple[Dict, Dict]:
+    """Returns (ShapeDtypeStruct dict, logical-axes dict) for one cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    bf16 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.bfloat16)
+    d = cfg.d_model
+
+    if shape.kind == "train":
+        sds = {"tokens": i32((b, s)), "labels": i32((b, s))}
+        ax = {"tokens": ("batch", None), "labels": ("batch", None)}
+        if cfg.family == "vlm":
+            sds["patches"] = bf16((b, cfg_n_patches(cfg), d))
+            ax["patches"] = ("batch", None, None)
+        if cfg.family == "audio":
+            sds["frames"] = bf16((b, s, d))
+            ax["frames"] = ("batch", None, None)
+        return sds, ax
+
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            sds = {"frames": bf16((b, s, d)), "tokens": i32((b, 8))}
+            ax = {"frames": ("batch", None, None), "tokens": ("batch", None)}
+            return sds, ax
+        sds = {"tokens": i32((b, s))}
+        ax = {"tokens": ("batch", None)}
+        if cfg.family == "vlm":
+            sds["patches"] = bf16((b, cfg_n_patches(cfg), d))
+            ax["patches"] = ("batch", None, None)
+        return sds, ax
+
+    # decode: one new token against a cache of length s
+    sds = {"token": i32((b,)), "positions": i32((b,))}
+    ax = {"token": ("batch",), "positions": ("batch",)}
+    return sds, ax
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting (exact, from the spec tree)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    model = build_model(cfg, ShardCtx.single())
+    leaves = jax.tree_util.tree_flatten_with_path(
+        model.specs, is_leaf=is_spec
+    )[0]
+    total = 0
+    for path, spec in leaves:
+        n = 1
+        for dim in spec.shape:
+            n *= dim
+        keys = [getattr(k, "key", str(k)) for k in path]
+        if active_only and cfg.moe is not None and "moe" in keys and any(
+            k in ("w1", "w2", "w3") for k in keys
+        ):
+            n = n * cfg.moe.top_k // cfg.moe.num_experts
+        total += n
+    return total

@@ -1,0 +1,126 @@
+"""Generic scan-over-layer-groups machinery shared by all families.
+
+A model is: embed -> [Stack...] -> final norm -> lm head.  Each Stack is a
+group of layers scanned ``n`` times (weights stacked on a leading "layers"
+axis) so the compiled HLO stays small regardless of depth.  Heterogeneous
+patterns (e.g. 4 self-attn + 1 cross-attn) live *inside* one group and are
+unrolled; the homogeneous repetition is the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, ShardCtx, is_spec
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-call context threaded through block apply functions."""
+
+    mode: str                      # train | prefill | decode
+    shard: ShardCtx
+    positions: jax.Array           # prefill: [S]; decode: [B]
+    rope_cos: Optional[jax.Array] = None
+    rope_sin: Optional[jax.Array] = None
+    patches: Optional[jax.Array] = None    # vlm cross-attn memory [B, P, d]
+    enc_out: Optional[jax.Array] = None    # whisper encoder output [B, Se, d]
+    kv_block: int = 512
+    triangular: bool = False
+    fuse_shared_expert: bool = False
+    seq_shard: bool = False
+    kv_quant: bool = False
+
+
+@dataclasses.dataclass
+class Stack:
+    """``apply(group_params, x, ctx, cache_group) -> (x, new_cache_group)``.
+
+    In train mode ``apply`` must return cache ``None``; in prefill it
+    returns the filled per-group cache; in decode it consumes and returns
+    the updated per-group cache.
+    """
+
+    name: str
+    n: int
+    specs: PyTree
+    apply: Callable
+    cache_spec: Optional[Callable] = None  # (B, cache_len) -> per-group SDS tree
+    cache_axes: Optional[Callable] = None  # () -> matching logical-axes tree
+
+
+def stack_specs(stack: Stack, axis_name: str = "layers") -> PyTree:
+    return jax.tree.map(
+        lambda s: ParamSpec((stack.n,) + s.shape, (axis_name,) + s.axes,
+                            s.init, s.dtype, s.fan_in),
+        stack.specs,
+        is_leaf=is_spec,
+    )
+
+
+def run_stack(
+    stack: Stack,
+    params_stacked: PyTree,
+    x: jax.Array,
+    ctx: Ctx,
+    cache_stacked: Optional[PyTree] = None,
+    *,
+    remat: bool = True,
+) -> tuple:
+    """Scan a stack; returns (x, stacked caches or None)."""
+    if stack.n == 1:
+        gp = jax.tree.map(lambda p: p[0], params_stacked)
+        cg = jax.tree.map(lambda c: c[0], cache_stacked) if cache_stacked is not None else None
+        fn = lambda g, xc, c: stack.apply(g, xc, ctx, c)
+        if remat and ctx.mode == "train":
+            fn = jax.checkpoint(fn)
+        x, new_c = fn(gp, x, cg)
+        pack = (lambda t: jax.tree.map(lambda l: l[None], t)) if new_c is not None else (lambda t: None)
+        return x, pack(new_c)
+
+    if ctx.mode == "decode":
+        def body(xc, inp):
+            gp, cg = inp
+            xo, ncg = stack.apply(gp, xc, ctx, cg)
+            return xo, ncg
+
+        x, new_cache = jax.lax.scan(body, x, (params_stacked, cache_stacked))
+        return x, new_cache
+
+    def body(xc, gp):
+        xo, cg = stack.apply(gp, xc, ctx, None)
+        return xo, cg
+
+    if remat and ctx.mode == "train":
+        body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(body, x, params_stacked)
+    return x, caches
+
+
+def abstract_cache_tree(stack: Stack, batch: int, cache_len: int) -> Optional[PyTree]:
+    if stack.cache_spec is None:
+        return None
+    per_group = stack.cache_spec(batch, cache_len)
+    return jax.tree.map(
+        lambda sd: jax.ShapeDtypeStruct((stack.n,) + sd.shape, sd.dtype), per_group
+    )
+
+
+def cache_axes_tree(stack: Stack) -> Optional[PyTree]:
+    if stack.cache_axes is None:
+        return None
+    per_group = stack.cache_axes()
+    return jax.tree.map(
+        lambda ax: ("layers",) + ax,
+        per_group,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def zeros_cache(abstract: PyTree) -> PyTree:
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), abstract)

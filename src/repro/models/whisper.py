@@ -1,0 +1,89 @@
+"""Whisper-style audio encoder-decoder backbone.
+
+The conv frontend is a STUB per assignment: ``input_specs()`` supplies
+precomputed frame embeddings [B, S_enc, d].  Encoder: bidirectional
+self-attention blocks.  Decoder: causal self-attention (cached) +
+cross-attention to the encoder output (cached at prefill) + GELU MLP.
+Fixed sinusoidal positions on both stacks.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParamSpec, rmsnorm
+from repro.models.stacked import Ctx, Stack
+from repro.models.transformer import (
+    eff_kv_heads,
+    attn_specs,
+    cross_attn_specs,
+    self_attn_block,
+    cross_attn_block,
+    _self_cache_spec,
+    _self_cache_axes,
+)
+
+
+def gelu_mlp_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "ln": ParamSpec((d,), ("embed",), "ones"),
+        "w1": ParamSpec((d, ff), ("embed", "ff")),
+        "w2": ParamSpec((ff, d), ("ff", "embed"), fan_in=ff),
+    }
+
+
+def gelu_mlp(p, x, cfg: ArchConfig):
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    return x + jax.nn.gelu(h @ p["w1"]) @ p["w2"]
+
+
+def encoder_stack(cfg: ArchConfig, tp: int) -> Stack:
+    specs = {"attn": attn_specs(cfg, tp), "ffn": gelu_mlp_specs(cfg)}
+
+    def apply(gp, x, ctx: Ctx, cache_g):
+        x, _ = self_attn_block(gp["attn"], x, ctx, False, cfg,
+                               causal=False, use_rope=False)
+        x = gelu_mlp(gp["ffn"], x, cfg)
+        return x, None
+
+    return Stack("encoder", cfg.encoder_layers, specs, apply)
+
+
+def decoder_stack(cfg: ArchConfig, tp: int, enc_len: int) -> Stack:
+    specs = {
+        "self": attn_specs(cfg, tp),
+        "cross": cross_attn_specs(cfg, tp),
+        "ffn": gelu_mlp_specs(cfg),
+    }
+
+    def apply(gp, x, ctx: Ctx, cache_g):
+        new_caches = {}
+        c = cache_g["self"] if cache_g is not None else None
+        x, nc = self_attn_block(gp["self"], x, ctx, c, cfg, use_rope=False)
+        if nc is not None:
+            new_caches["self"] = nc
+        c = cache_g["cross"] if cache_g is not None else None
+        x, nc = cross_attn_block(gp["cross"], x, ctx, c, cfg)
+        if nc is not None:
+            new_caches["cross"] = nc
+        x = gelu_mlp(gp["ffn"], x, cfg)
+        return x, (new_caches or None)
+
+    cspec = _self_cache_spec(cfg, tp)
+    hd = cfg.resolved_head_dim
+
+    def cache_spec(batch, cache_len):
+        sd = jax.ShapeDtypeStruct((batch, enc_len, eff_kv_heads(cfg, tp), hd), jnp.bfloat16)
+        return {"self": cspec(batch, cache_len), "cross": {"k": sd, "v": sd}}
+
+    caxes = _self_cache_axes(cfg, tp)
+
+    def cache_axes():
+        a = ("batch", "kv_seq", None, None)
+        return {"self": caxes(), "cross": {"k": a, "v": a}}
+
+    return Stack("decoder", cfg.num_layers, specs, apply, cache_spec, cache_axes)

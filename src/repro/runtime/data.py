@@ -1,0 +1,74 @@
+"""Data pipeline: deterministic, restartable token streams.
+
+Two sources:
+  * SyntheticLM — Zipfian token stream with document boundaries (training)
+  * ShareGPTLike — synthetic request generator whose prompt/output length
+    distribution matches the ShareGPT workload used in the paper (§7.1):
+    log-normal prompt lengths (median ~ 160 tokens) and output budgets.
+
+Both are seeded and indexable by global step, so a restarted job resumes
+the exact batch cursor from the checkpoint (fault tolerance requirement).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    doc_len_mean: int = 512
+
+    def batch_at(self, step: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Deterministic (tokens, labels) for a given global step."""
+        rng = np.random.default_rng((self.seed, step))
+        shape = (self.global_batch, self.seq_len + 1)
+        toks = rng.zipf(self.zipf_a, size=shape).astype(np.int64)
+        toks = (toks % (self.vocab_size - 2)) + 2        # reserve 0=pad 1=eos
+        # insert document boundaries
+        n_docs = max(1, self.seq_len // self.doc_len_mean)
+        for b in range(self.global_batch):
+            cuts = rng.integers(1, self.seq_len, size=n_docs)
+            toks[b, cuts] = 1
+        return toks[:, :-1].astype(np.int32), toks[:, 1:].astype(np.int32)
+
+    def __iter__(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+@dataclasses.dataclass
+class ShareGPTLike:
+    """Synthetic serving workload with ShareGPT-shaped length statistics."""
+
+    vocab_size: int
+    n_requests: int = 64
+    seed: int = 0
+    prompt_len_median: int = 160
+    prompt_len_sigma: float = 0.9
+    output_len_median: int = 128
+    output_len_sigma: float = 0.7
+    max_prompt: int = 2048
+    max_output: int = 1024
+
+    def requests(self) -> List[Tuple[List[int], int]]:
+        """[(prompt_ids, max_new_tokens)] deterministic by seed."""
+        rng = np.random.default_rng(self.seed)
+        out = []
+        for _ in range(self.n_requests):
+            pl = int(np.clip(rng.lognormal(np.log(self.prompt_len_median),
+                                           self.prompt_len_sigma), 4, self.max_prompt))
+            ol = int(np.clip(rng.lognormal(np.log(self.output_len_median),
+                                           self.output_len_sigma), 4, self.max_output))
+            prompt = rng.integers(2, self.vocab_size, size=pl).tolist()
+            out.append((prompt, ol))
+        return out

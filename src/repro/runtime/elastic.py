@@ -1,0 +1,69 @@
+"""Elastic scaling: re-mesh a running job onto a different chip count.
+
+The mechanism is checkpoint-mediated (the production-proven approach):
+  1. on membership change, quiesce + save (or reuse the latest periodic
+     checkpoint — losing at most ``interval`` steps on hard failures);
+  2. build the new mesh from the surviving chip count;
+  3. re-resolve every logical-axis sharding against the new mesh (the
+     first-fit-divisible resolver degrades gracefully: axes that no longer
+     divide fall back to replication);
+  4. restore with the new shardings (restore() re-places full arrays).
+
+``plan_new_mesh`` picks the largest (data x model) grid that fits the
+survivors while preserving the model-parallel degree when possible —
+dropping data-parallel replicas first is the cheapest contraction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro import sharding as shlib
+from repro.runtime import checkpoint as ckpt_lib
+
+PyTree = Any
+
+
+def plan_new_mesh(n_available: int, *, prefer_model: int = 16,
+                  multi_pod_threshold: int = 512) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest usable (data, model) or (pod, data, model) grid <= n_available."""
+    model = prefer_model
+    while model > 1 and n_available % model:
+        model //= 2
+    rest = n_available // model
+    if rest >= 32 and rest % 2 == 0 and n_available >= multi_pod_threshold:
+        return (2, rest // 2, model), ("pod", "data", "model")
+    return (rest, model), ("data", "model")
+
+
+def build_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...],
+               devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    n = int(np.prod(shape))
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+@dataclasses.dataclass
+class ElasticController:
+    """Drives quiesce -> save -> re-mesh -> restore."""
+
+    ckpt_dir: str
+    strategy: str = "train"
+
+    def contract(self, tree: PyTree, axes_tree: PyTree, step: int,
+                 n_available: int) -> Tuple[Mesh, PyTree]:
+        """Save under the old mesh, rebuild on ``n_available`` chips."""
+        ckpt_lib.save(self.ckpt_dir, step, tree)
+        shape, axes = plan_new_mesh(n_available)
+        mesh = build_mesh(shape, axes)
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(np.asarray(x).shape, np.asarray(x).dtype),
+            tree)
+        shardings = shlib.tree_shardings(axes_tree, abstract, self.strategy, mesh)
+        _, restored = ckpt_lib.restore(self.ckpt_dir, abstract,
+                                       shardings=shardings)
+        return mesh, restored

@@ -1,0 +1,133 @@
+"""Paged KV-cache substrate (vLLM-style block tables) for the engine.
+
+Physical cache: [n_blocks, block_size, kv_heads, head_dim] per layer.
+Each sequence owns a list of physical block ids; logical position p lives
+at (block_table[p // bs], p %% bs).  Allocation is O(1) from a free list;
+freeing a finished sequence returns all its blocks.  Copy-on-write
+support (for beam/parallel sampling forks) refcounts blocks.
+
+This substrate manages *placement*; attention over paged caches gathers
+the block table per sequence (``gather_cache``) — on TPU the gather feeds
+the decode-attention kernel directly.  The engine uses contiguous rows by
+default (simpler SPMD shardings); the paged allocator is the
+memory-pressure path and is covered by its own unit/property tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class PagedAllocator:
+    n_blocks: int
+    block_size: int
+
+    def __post_init__(self):
+        self._free: List[int] = list(range(self.n_blocks - 1, -1, -1))
+        self._tables: Dict[int, List[int]] = {}
+        self._refs: Dict[int, int] = {}
+
+    # -- allocation ---------------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def blocks_needed(self, length: int) -> int:
+        return (length + self.block_size - 1) // self.block_size
+
+    def can_allocate(self, seq_len: int) -> bool:
+        return self.blocks_needed(seq_len) <= self.free_blocks
+
+    def allocate(self, seq_id: int, seq_len: int) -> List[int]:
+        need = self.blocks_needed(seq_len)
+        if need > self.free_blocks:
+            raise MemoryError(
+                f"paged KV exhausted: need {need}, free {self.free_blocks}")
+        blocks = [self._free.pop() for _ in range(need)]
+        for b in blocks:
+            self._refs[b] = 1
+        self._tables[seq_id] = blocks
+        return blocks
+
+    def append_token(self, seq_id: int, new_len: int) -> Optional[int]:
+        """Grow by one token; returns a newly allocated block id or None."""
+        table = self._tables[seq_id]
+        if self.blocks_needed(new_len) <= len(table):
+            return None
+        if not self._free:
+            raise MemoryError("paged KV exhausted on append")
+        b = self._free.pop()
+        self._refs[b] = 1
+        table.append(b)
+        return b
+
+    def free(self, seq_id: int):
+        for b in self._tables.pop(seq_id, []):
+            self._refs[b] -= 1
+            if self._refs[b] == 0:
+                del self._refs[b]
+                self._free.append(b)
+
+    # -- copy-on-write forks -------------------------------------------------
+    def fork(self, src_seq: int, dst_seq: int):
+        """Share all blocks (refcounted); writes must call cow() first."""
+        table = self._tables[src_seq]
+        for b in table:
+            self._refs[b] += 1
+        self._tables[dst_seq] = list(table)
+
+    def cow(self, seq_id: int, logical_block: int) -> Tuple[int, Optional[int]]:
+        """Ensure exclusive ownership of one logical block before a write.
+        Returns (physical_block, copied_from or None)."""
+        table = self._tables[seq_id]
+        b = table[logical_block]
+        if self._refs[b] == 1:
+            return b, None
+        if not self._free:
+            raise MemoryError("paged KV exhausted on CoW")
+        nb = self._free.pop()
+        self._refs[b] -= 1
+        self._refs[nb] = 1
+        table[logical_block] = nb
+        return nb, b
+
+    def table(self, seq_id: int) -> List[int]:
+        return list(self._tables[seq_id])
+
+    # -- invariant helpers (used by property tests) -------------------------
+    def check_invariants(self):
+        owned = [b for t in self._tables.values() for b in t]
+        assert len(set(self._free) & set(owned)) == 0, "block both free+owned"
+        for b, r in self._refs.items():
+            assert r == sum(1 for t in self._tables.values() for x in t if x == b)
+        assert len(self._free) + len(set(owned)) == self.n_blocks
+
+
+def init_paged_cache(n_layers: int, n_blocks: int, block_size: int,
+                     kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
+    shape = (n_layers, n_blocks, block_size, kv_heads, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def write_token(cache, layer: int, block: int, offset: int, k, v):
+    """Write one token's K/V into its physical slot."""
+    return {
+        "k": cache["k"].at[layer, block, offset].set(k),
+        "v": cache["v"].at[layer, block, offset].set(v),
+    }
+
+
+def gather_cache(cache, layer: int, block_table: np.ndarray, length: int,
+                 block_size: int):
+    """Materialize a contiguous [length, kv, hd] view for one sequence
+    (feeds the decode-attention kernel; on TPU this is the block-table
+    gather the paged kernel performs in VMEM)."""
+    bt = jnp.asarray(block_table, jnp.int32)
+    k = cache["k"][layer][bt].reshape(-1, *cache["k"].shape[3:])[:length]
+    v = cache["v"][layer][bt].reshape(-1, *cache["v"].shape[3:])[:length]
+    return k, v

@@ -1,0 +1,147 @@
+"""Logical-axis sharding: rules mapping logical tensor axes to mesh axes.
+
+Every parameter / activation / cache tensor carries a tuple of *logical*
+axis names.  A strategy (serve / train / pp) supplies an ordered rule list
+per logical axis; the resolver picks the first candidate whose mesh axes
+are free on this tensor and divide the dimension.  Non-divisible dims fall
+back to replication (e.g. glm4's kv=2 heads under tp=16), in which case a
+later logical axis (e.g. the cache's ``kv_seq``) can claim the mesh axis
+instead — that is how sequence-parallel KV caches appear automatically.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Rule tables.  Each entry: logical axis -> tuple of candidates; a candidate
+# is a tuple of mesh axis names (sharded jointly, in order).
+# ---------------------------------------------------------------------------
+
+Rules = Mapping[str, Sequence[Tuple[str, ...]]]
+
+# Inference: Megatron-style TP on "model", batch data-parallel over
+# ("pod", "data").  KV caches prefer head sharding, then sequence sharding.
+SERVE_RULES: Rules = {
+    "batch": (("pod", "data"), ("data",), ("pod",)),
+    "vocab": (("model",),),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "ff": (("model",),),
+    "experts": (("model",),),
+    "expert_ff": (("model",),),
+    "kv_seq": (("model",),),      # claimed only when kv_heads replicated
+    "rnn": (("model",),),         # RG-LRU / xLSTM inner width
+    "embed": (),                  # replicated at serve time
+    "layers": (),
+    "seq": (),
+    "head_dim": (),
+    "patches": (),
+}
+
+# Training: TP on "model" + FSDP-style weight sharding over "data" on the
+# non-TP dim ("embed"), batch over ("pod", "data").
+TRAIN_RULES: Rules = {
+    "batch": (("pod", "data"), ("data",), ("pod",)),
+    "vocab": (("model",),),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "ff": (("model",),),
+    "experts": (("model",),),
+    "expert_ff": (("model",),),
+    "embed": (("data",),),        # ZeRO-3/FSDP over the data axis
+    "rnn": (("model",),),
+    "kv_seq": (),
+    "layers": (),
+    "seq": (),
+    # Megatron-SP residual stream (enabled by ModelOptions.seq_shard)
+    "seq_sp": (("model",),),
+    "head_dim": (),
+    "patches": (),
+}
+
+# Pipeline-parallel (the paper's regime): derived mesh ("pipe","data","model").
+# Stage ("layers"-stacked) weights shard over "pipe"; otherwise as serve.
+PP_RULES: Rules = {
+    **SERVE_RULES,
+    "stage": (("pipe",),),
+    "batch": (("data",), ("pod", "data")),
+}
+
+RULESETS: Dict[str, Rules] = {
+    "serve": SERVE_RULES,
+    "train": TRAIN_RULES,
+    "pp": PP_RULES,
+}
+
+
+def resolve_pspec(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    rules: Rules,
+    mesh: Mesh,
+) -> P:
+    """First-fit-divisible mapping of one tensor's logical axes to a PartitionSpec."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    out = []
+    for dim, lax in zip(shape, logical_axes):
+        assigned: Optional[Tuple[str, ...]] = None
+        if lax is not None:
+            for cand in rules.get(lax, ()):  # ordered candidates
+                axes = tuple(a for a in cand if a in mesh_shape)
+                if not axes or any(a in used for a in axes):
+                    continue
+                size = int(np.prod([mesh_shape[a] for a in axes]))
+                if size > 1 and dim % size == 0:
+                    assigned = axes
+                    used.update(axes)
+                    break
+        if assigned is None:
+            out.append(None)
+        elif len(assigned) == 1:
+            out.append(assigned[0])
+        else:
+            out.append(assigned)
+    # trim trailing Nones (canonical form)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    strategy: str,
+    mesh: Mesh,
+) -> NamedSharding:
+    return NamedSharding(mesh, resolve_pspec(logical_axes, shape, RULESETS[strategy], mesh))
+
+
+def tree_pspecs(axes_tree, shape_tree, strategy: str, mesh: Mesh):
+    """Map pytrees of logical-axes tuples + ShapeDtypeStructs -> PartitionSpecs."""
+    rules = RULESETS[strategy]
+    return jax.tree.map(
+        lambda ax, sd: resolve_pspec(ax, sd.shape, rules, mesh),
+        axes_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def tree_shardings(axes_tree, shape_tree, strategy: str, mesh: Mesh):
+    specs = tree_pspecs(axes_tree, shape_tree, strategy, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, logical_axes: Sequence[Optional[str]], strategy: str, mesh: Optional[Mesh]):
+    """with_sharding_constraint by logical axes (no-op when mesh is None/1-dev)."""
+    if mesh is None or math.prod(mesh.devices.shape) == 1:
+        return x
+    spec = resolve_pspec(logical_axes, x.shape, RULESETS[strategy], mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the 512-device override belongs
+# ONLY to launch/dryrun.py).  Force a small test-friendly config.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

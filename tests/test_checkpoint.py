@@ -1,0 +1,111 @@
+"""Checkpointing: atomicity, integrity, restart, elastic re-mesh planning."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import checkpoint as ck
+from repro.runtime.elastic import plan_new_mesh
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.normal(size=(8, 16)), jnp.float32),
+                   "b": jnp.asarray(rng.normal(size=(16,)), jnp.float32)},
+        "opt": {"step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(tmp_path, 10, t)
+    step, got = ck.restore(tmp_path, jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t))
+    assert step == 10
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                            np.asarray(b)),
+                 t, got)
+
+
+def test_latest_and_gc(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ck.save(tmp_path, s, t, keep=2)
+    assert ck.latest_step(tmp_path) == 5
+    kept = sorted(p.name for p in tmp_path.iterdir())
+    assert kept == ["step_00000004", "step_00000005"]
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    t = _tree()
+    ck.save(tmp_path, 3, t)
+    # simulate crash mid-save of step 4: directory without COMMIT
+    d = tmp_path / "step_00000004"
+    d.mkdir()
+    (d / "MANIFEST.json").write_text("{}")
+    assert ck.latest_step(tmp_path) == 3
+
+
+def test_corruption_detected(tmp_path):
+    t = _tree()
+    path = ck.save(tmp_path, 1, t)
+    f = path / "params__w.npy"
+    arr = np.load(f)
+    arr[0, 0] += 1000.0
+    np.save(f, arr)
+    with pytest.raises(IOError):
+        ck.restore(tmp_path, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t))
+
+
+def test_manager_interval(tmp_path):
+    m = ck.CheckpointManager(str(tmp_path), interval_steps=5)
+    t = _tree()
+    saved = [s for s in range(1, 21) if m.maybe_save(s, t)]
+    assert saved == [5, 10, 15, 20]
+
+
+def test_restore_into_different_structure_fails(tmp_path):
+    ck.save(tmp_path, 1, _tree())
+    bad = {"params": {"nope": jax.ShapeDtypeStruct((2,), jnp.float32)}}
+    with pytest.raises(KeyError):
+        ck.restore(tmp_path, bad)
+
+
+def test_elastic_mesh_planning():
+    assert plan_new_mesh(256) == ((16, 16), ("data", "model"))
+    assert plan_new_mesh(512) == ((2, 16, 16), ("pod", "data", "model"))
+    # losing a node: 240 chips -> keep model=16, shrink data
+    assert plan_new_mesh(240) == ((15, 16), ("data", "model"))
+    # heavily degraded: model degree degrades by powers of two
+    shape, axes = plan_new_mesh(24)
+    assert np.prod(shape) <= 24 and axes[-1] == "model"
+
+
+def test_train_restart_resumes(tmp_path):
+    """End-to-end crash-restart through the train driver."""
+    from repro.launch import train as T
+
+    with pytest.raises(RuntimeError):
+        T.run("stablelm-1.6b", steps=8, batch=2, seq=16,
+              ckpt_dir=str(tmp_path), ckpt_every=2, simulate_crash_at=5,
+              log_every=100)
+    assert ck.latest_step(tmp_path) == 4
+    out = T.run("stablelm-1.6b", steps=8, batch=2, seq=16,
+                ckpt_dir=str(tmp_path), ckpt_every=2, log_every=100)
+    assert len(out["losses"]) == 4  # resumed from step 4, ran 4..7
+
+
+def test_async_save_roundtrip(tmp_path):
+    m = ck.CheckpointManager(str(tmp_path), interval_steps=1, async_save=True)
+    t = _tree(3)
+    assert m.maybe_save(1, t)
+    m.wait()
+    step, got = ck.restore(tmp_path, jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t))
+    assert step == 1
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), t, got)

@@ -1,0 +1,69 @@
+"""Heartbeats, straggler detection, retry, bubble accounting."""
+import pytest
+
+from repro.runtime.fault_tolerance import (
+    BubbleAccounting,
+    HeartbeatMonitor,
+    RetryPolicy,
+    StragglerDetector,
+)
+
+
+def test_heartbeat_detects_dead_worker():
+    hb = HeartbeatMonitor(timeout_s=1.0)
+    hb.beat("w0", now=100.0)
+    hb.beat("w1", now=100.5)
+    assert hb.dead_workers(now=100.9) == []
+    assert hb.dead_workers(now=101.2) == ["w0"]
+    assert set(hb.dead_workers(now=102.0)) == {"w0", "w1"}
+    hb.forget("w0")
+    assert hb.dead_workers(now=102.0) == ["w1"]
+
+
+def test_straggler_detection():
+    sd = StragglerDetector(min_samples=3, threshold=1.5)
+    for _ in range(10):
+        for s, lat in ((0, 0.10), (1, 0.11), (2, 0.10), (3, 0.30)):
+            sd.observe(s, lat)
+    assert sd.stragglers() == [3]
+    shares = sd.rebalance_shares(4)
+    assert shares[3] < min(shares[:3])         # straggler gets less work
+    assert abs(sum(shares) - 1.0) < 1e-9
+
+
+def test_straggler_needs_samples():
+    sd = StragglerDetector(min_samples=5)
+    sd.observe(0, 0.1)
+    sd.observe(1, 9.9)
+    assert sd.stragglers() == []
+
+
+def test_retry_policy_eventually_succeeds():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise ValueError("transient")
+        return "ok"
+
+    rp = RetryPolicy(max_attempts=3, base_delay_s=0.0)
+    assert rp.run(flaky) == "ok"
+    assert calls["n"] == 3
+
+
+def test_retry_policy_gives_up():
+    rp = RetryPolicy(max_attempts=2, base_delay_s=0.0)
+    with pytest.raises(RuntimeError):
+        rp.run(lambda: (_ for _ in ()).throw(ValueError("always")))
+
+
+def test_bubble_accounting():
+    ba = BubbleAccounting(2)
+    ba.record(0, 0.0, 1.0)
+    ba.record(0, 2.0, 3.0)
+    ba.record(1, 0.0, 3.0)
+    rep = ba.report()
+    assert rep["stage0_busy_frac"] == pytest.approx(2 / 3)
+    assert rep["stage1_busy_frac"] == pytest.approx(1.0)
+    assert rep["pipeline_bubble_frac"] == pytest.approx(1 - (2 / 3 + 1) / 2)

@@ -1,0 +1,92 @@
+"""Corrected HLO cost analysis: loop trip multiplication + byte model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def _compile(fn, *shapes):
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    L, M = 7, 64
+
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        c, _ = jax.lax.scan(body, x, w)
+        return c
+
+    comp = _compile(f, (32, M), (L, M, M))
+    s = H.analyze(comp.as_text())
+    expect = L * 2 * 32 * M * M
+    assert s.flops == pytest.approx(expect, rel=0.05), (s.flops, expect)
+
+
+def test_flops_without_loop():
+    def f(a, b):
+        return a @ b
+
+    comp = _compile(f, (64, 128), (128, 32))
+    s = H.analyze(comp.as_text())
+    assert s.flops == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+
+
+def test_nested_scan_multiplies_both_trips():
+    Lo, Li, M = 3, 5, 32
+
+    def f(x, w):
+        def outer(c, wo):
+            def inner(ci, _):
+                return jnp.tanh(ci @ wo), None
+            ci, _ = jax.lax.scan(inner, c, None, length=Li)
+            return ci, None
+        c, _ = jax.lax.scan(outer, x, w)
+        return c
+
+    comp = _compile(f, (16, M), (Lo, M, M))
+    s = H.analyze(comp.as_text())
+    expect = Lo * Li * 2 * 16 * M * M
+    assert s.flops == pytest.approx(expect, rel=0.05)
+
+
+def test_bytes_scale_with_loop():
+    """Per-iteration weight reads must be multiplied by the trip count."""
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        return jax.lax.scan(body, x, w)[0]
+
+    c3 = _compile(f, (8, 64), (3, 64, 64))
+    c12 = _compile(f, (8, 64), (12, 64, 64))
+    b3 = H.analyze(c3.as_text()).bytes_accessed
+    b12 = H.analyze(c12.as_text()).bytes_accessed
+    assert b12 > 2.5 * b3
+
+
+def test_dynamic_slice_charged_by_slice():
+    """Reading one row of a big table must not charge the whole table."""
+    def f(t, i):
+        return jax.lax.dynamic_slice_in_dim(t, 0, 4, 0) * 1.0
+
+    comp = _compile(f, (4096, 256), (1,))
+    s = H.analyze(comp.as_text())
+    table_bytes = 4096 * 256 * 4
+    assert s.bytes_accessed < table_bytes / 10
+
+
+def test_parse_shapes():
+    assert H._parse_shapes("bf16[2,3]{1,0}") == [("bf16", (2, 3))]
+    assert H._parse_shapes("(f32[4], s32[])") == [("f32", (4,)), ("s32", ())]
+    assert H._nbytes("bf16[10,10]") == 200
+    assert H._nbytes("f32[10]", normalize_f32=True) == 20
+
+
+def test_collective_detection_on_psum():
+    import os
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 device (dry-run covers multi-device)")

@@ -1,0 +1,135 @@
+"""Pallas kernels vs. pure-jnp oracles (interpret mode), sweeping shapes,
+dtypes, GQA ratios, windows and ragged lengths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.swiglu import swiglu
+
+TOL = dict(rtol=2e-2, atol=2e-2)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("b,s,h,kv,hd", [
+    (1, 64, 4, 4, 64),     # MHA
+    (2, 128, 8, 2, 64),    # GQA 4:1
+    (1, 96, 6, 1, 128),    # MQA, non-pow2 seq
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, s, h, kv, hd, dtype, causal):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = _rand(ks[0], (b, h, s, hd), dtype)
+    k = _rand(ks[1], (b, kv, s, hd), dtype)
+    v = _rand(ks[2], (b, kv, s, hd), dtype)
+    o = flash_attention(q, k, v, causal=causal, q_block=32, kv_block=32,
+                        interpret=True)
+    o_ref = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(o.transpose(0, 2, 1, 3).reshape(b, s, h * hd), np.float32),
+        np.asarray(o_ref, np.float32), **TOL)
+
+
+@pytest.mark.parametrize("window", [16, 48])
+def test_flash_attention_sliding_window(window):
+    b, s, h, kv, hd = 1, 128, 4, 2, 64
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = _rand(ks[0], (b, h, s, hd), jnp.bfloat16)
+    k = _rand(ks[1], (b, kv, s, hd), jnp.bfloat16)
+    v = _rand(ks[2], (b, kv, s, hd), jnp.bfloat16)
+    o = flash_attention(q, k, v, causal=True, window=window,
+                        q_block=32, kv_block=32, interpret=True)
+    o_ref = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True, window=window)
+    np.testing.assert_allclose(
+        np.asarray(o.transpose(0, 2, 1, 3).reshape(b, s, h * hd), np.float32),
+        np.asarray(o_ref, np.float32), **TOL)
+
+
+def test_flash_matches_model_attention_path():
+    """Kernel agrees with the distribution-path chunked jnp attention."""
+    from repro.models.attention import chunked_attention
+
+    b, s, h, kv, hd = 2, 64, 4, 2, 64
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = _rand(ks[0], (b, s, h, hd), jnp.bfloat16)
+    k = _rand(ks[1], (b, s, kv, hd), jnp.bfloat16)
+    v = _rand(ks[2], (b, s, kv, hd), jnp.bfloat16)
+    o_jnp = chunked_attention(q, k, v, causal=True, kv_block=32)
+    o_krn = ops.flash_attention_bshd(q, k, v, causal=True,
+                                     q_block=32, kv_block=32)
+    np.testing.assert_allclose(np.asarray(o_jnp, np.float32),
+                               np.asarray(o_krn, np.float32), **TOL)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("b,s,h,kv,hd", [
+    (2, 128, 8, 2, 64),
+    (3, 64, 4, 4, 128),
+    (1, 256, 16, 1, 64),
+])
+def test_decode_attention_ragged_lengths(b, s, h, kv, hd, dtype):
+    ks = jax.random.split(jax.random.key(3), 4)
+    q = _rand(ks[0], (b, h, hd), dtype)
+    kc = _rand(ks[1], (b, s, kv, hd), dtype)
+    vc = _rand(ks[2], (b, s, kv, hd), dtype)
+    lengths = jnp.asarray(
+        np.random.default_rng(0).integers(1, s + 1, b), jnp.int32)
+    o = decode_attention(q, kc, vc, lengths, kv_block=32, interpret=True)
+    o_ref = ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **TOL)
+
+
+@pytest.mark.parametrize("t,d,f", [(64, 128, 256), (32, 64, 96), (128, 256, 512)])
+def test_swiglu_sweep(t, d, f):
+    ks = jax.random.split(jax.random.key(4), 4)
+    x = _rand(ks[0], (t, d), jnp.bfloat16)
+    w1 = _rand(ks[1], (d, f), jnp.bfloat16) * 0.1
+    w3 = _rand(ks[2], (d, f), jnp.bfloat16) * 0.1
+    w2 = _rand(ks[3], (f, d), jnp.bfloat16) * 0.1
+    y = swiglu(x, w1, w3, w2, t_block=16, f_block=32, interpret=True)
+    y_ref = ref.swiglu_ref(x, w1, w3, w2)
+    # bf16: kernel keeps the gate in fp32 where the oracle rounds, so the
+    # comparison is absolute-tolerance dominated; scale by output magnitude
+    yr = np.asarray(y_ref, np.float32)
+    atol = 0.03 * max(float(np.abs(yr).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(y, np.float32), yr,
+                               rtol=5e-2, atol=atol)
+
+
+def test_swiglu_accumulation_over_many_f_blocks():
+    """Numerical check that partial-ff accumulation is exact in fp32."""
+    t, d, f = 16, 32, 512
+    x = jnp.ones((t, d), jnp.float32) * 0.01
+    w1 = jnp.ones((d, f), jnp.float32) * 0.02
+    w3 = jnp.ones((d, f), jnp.float32) * 0.03
+    w2 = jnp.ones((f, d), jnp.float32) * 0.04
+    y = swiglu(x, w1, w3, w2, t_block=16, f_block=32, interpret=True)
+    y_ref = ref.swiglu_ref(x, w1, w3, w2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5)
+
+
+@pytest.mark.parametrize("t,d,f", [(64, 128, 256), (32, 256, 128)])
+def test_rmsnorm_matmul_fused(t, d, f):
+    from repro.kernels.rmsnorm_matmul import rmsnorm_matmul
+
+    ks = jax.random.split(jax.random.key(7), 3)
+    x = _rand(ks[0], (t, d), jnp.bfloat16)
+    wn = jnp.abs(_rand(ks[1], (d,), jnp.bfloat16)) + 0.5
+    wp = _rand(ks[2], (d, f), jnp.bfloat16) * 0.1
+    y = rmsnorm_matmul(x, wn, wp, t_block=16, f_block=64, interpret=True)
+    y_ref = ref.rmsnorm_matmul_ref(x, wn, wp)
+    yr = np.asarray(y_ref, np.float32)
+    np.testing.assert_allclose(np.asarray(y, np.float32), yr,
+                               rtol=5e-2, atol=0.03 * max(float(np.abs(yr).max()), 1.0))

@@ -1,0 +1,82 @@
+"""int8 KV cache (§Perf C1): accuracy vs the bf16 cache + invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import ModelOptions, ShardCtx, build_model
+from repro.models.attention import (
+    decode_attention,
+    decode_attention_quant,
+    quantize_kv,
+)
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 8, 64)), jnp.bfloat16)
+    q8, s = quantize_kv(x)
+    deq = q8.astype(jnp.float32) * s.astype(jnp.float32)[..., None]
+    err = np.abs(np.asarray(deq) - np.asarray(x, np.float32))
+    # half an int8 quantum + bf16 rounding of the scale (|q8|<=127, eps~2^-8)
+    bound = np.asarray(s, np.float32)[..., None] * (0.5 + 127 / 256.0) + 1e-6
+    assert (err <= bound).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 500), s=st.sampled_from([16, 64]),
+       kv=st.sampled_from([1, 2, 4]))
+def test_property_quant_decode_close_to_fp(seed, s, kv):
+    rng = np.random.default_rng(seed)
+    b, g, hd = 2, 4, 32
+    h = kv * g
+    q = jnp.asarray(rng.normal(size=(b, h, hd)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.bfloat16)
+    lengths = jnp.asarray(rng.integers(1, s + 1, b), jnp.int32)
+    o_fp = decode_attention(q, k, v, lengths - 1)
+    k8, ks = quantize_kv(k)
+    v8, vs = quantize_kv(v)
+    o_q = decode_attention_quant(q, k8, ks, v8, vs, lengths - 1)
+    a, bq = np.asarray(o_fp, np.float32), np.asarray(o_q, np.float32)
+    denom = np.abs(a).max() + 1e-6
+    assert np.abs(a - bq).max() / denom < 0.06
+
+
+def test_end_to_end_quant_decode_argmax_agreement():
+    cfg = get_config("glm4-9b-smoke")
+    rng = np.random.default_rng(0)
+    b, s = 2, 12
+    toks = rng.integers(2, cfg.vocab_size, (b, s + 1))
+    outs = {}
+    for quant in (False, True):
+        model = build_model(cfg, ShardCtx.single(), ModelOptions(kv_quant=quant))
+        params = model.init(jax.random.key(2))
+        _, cache = jax.jit(model.prefill)(
+            params, {"tokens": jnp.asarray(toks[:, :s], jnp.int32)})
+        dcache = model.init_cache(b, s + 4)
+
+        def pad(dst, src):
+            if dst.shape == src.shape:
+                return src
+            return dst.at[tuple(slice(0, d) for d in src.shape)].set(src)
+
+        dcache = jax.tree.map(pad, dcache, cache)
+        got, _ = jax.jit(model.decode)(params, dcache, {
+            "token": jnp.asarray(toks[:, s], jnp.int32),
+            "positions": jnp.full((b,), s, jnp.int32)})
+        outs[quant] = np.asarray(got, np.float32)
+    rel = np.abs(outs[True] - outs[False]).max() / (np.abs(outs[False]).max())
+    assert rel < 0.05
+    assert (outs[True].argmax(-1) == outs[False].argmax(-1)).all()
+
+
+def test_quant_cache_is_int8():
+    cfg = get_config("glm4-9b-smoke")
+    model = build_model(cfg, ShardCtx.single(), ModelOptions(kv_quant=True))
+    cache = model.init_cache(2, 16)
+    leaves = jax.tree_util.tree_flatten_with_path(cache)[0]
+    kinds = {str(p[-1]): l.dtype for p, l in leaves}
+    assert any(v == jnp.int8 for v in kinds.values())

@@ -1,0 +1,87 @@
+"""Optimizer, schedules and gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = optim.AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=0.0)
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = optim.init_opt_state(params, cfg)
+    for _ in range(200):
+        grads = {"x": 2 * params["x"]}
+        params, state = optim.adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["x"]).max()) < 0.1
+
+
+def test_adamw_weight_decay_shrinks():
+    cfg = optim.AdamWConfig(lr=0.05, weight_decay=0.5, grad_clip=0.0)
+    params = {"x": jnp.array([4.0])}
+    state = optim.init_opt_state(params, cfg)
+    for _ in range(50):
+        params, state = optim.adamw_update(params, {"x": jnp.zeros(1)}, state, cfg)
+    assert float(params["x"][0]) < 4.0
+
+
+def test_grad_clip_bounds_update():
+    cfg = optim.AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    params = {"x": jnp.zeros(4)}
+    state = optim.init_opt_state(params, cfg)
+    huge = {"x": jnp.full(4, 1e9)}
+    p1, _ = optim.adamw_update(params, huge, state, cfg)
+    assert np.isfinite(np.asarray(p1["x"])).all()
+
+
+def test_bf16_moments_roundtrip():
+    cfg = optim.AdamWConfig(moment_dtype=jnp.bfloat16)
+    params = {"x": jnp.ones(8, jnp.bfloat16)}
+    state = optim.init_opt_state(params, cfg)
+    assert state["m"]["x"].dtype == jnp.bfloat16
+    p1, s1 = optim.adamw_update(params, {"x": jnp.ones(8, jnp.bfloat16)},
+                                state, cfg)
+    assert p1["x"].dtype == jnp.bfloat16 and s1["v"]["x"].dtype == jnp.bfloat16
+
+
+def test_cosine_schedule_shape():
+    f = optim.cosine_schedule(warmup=10, total=100, min_frac=0.1)
+    assert float(f(0)) == 0.0
+    assert abs(float(f(10)) - 1.0) < 1e-6
+    assert float(f(100)) == pytest.approx(0.1, abs=1e-3)
+    vals = [float(f(s)) for s in range(10, 101, 10)]
+    assert all(a >= b - 1e-6 for a, b in zip(vals, vals[1:]))  # monotone decay
+
+
+def test_wsd_schedule_shape():
+    f = optim.wsd_schedule(warmup=10, stable=60, decay=30, min_frac=0.1)
+    assert abs(float(f(10)) - 1.0) < 1e-6
+    assert abs(float(f(69)) - 1.0) < 1e-6          # stable plateau
+    assert float(f(100)) == pytest.approx(0.1, abs=1e-3)
+
+
+def test_int8_quantize_roundtrip_error():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=512), jnp.float32)
+    q, s = optim.quantize_int8(x)
+    err = np.abs(np.asarray(optim.dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-6      # half-ulp of the int8 grid
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 500), steps=st.integers(2, 10))
+def test_property_error_feedback_preserves_mean_signal(seed, steps):
+    """With error feedback, the cumulative applied gradient converges to the
+    cumulative true gradient (residual stays bounded by one quantum)."""
+    rng = np.random.default_rng(seed)
+    g_true = {"w": jnp.asarray(rng.normal(size=64), jnp.float32)}
+    err = None
+    applied = np.zeros(64)
+    for _ in range(steps):
+        comp, err = optim.compress_grads_with_feedback(g_true, err)
+        applied += np.asarray(comp["w"])
+    total_true = steps * np.asarray(g_true["w"])
+    scale = np.abs(np.asarray(g_true["w"])).max() / 127.0
+    assert np.abs(applied - total_true).max() <= scale * 1.01 + 1e-6

@@ -1,0 +1,108 @@
+"""Paged KV-cache allocator: allocation, growth, CoW forks, invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.paged_kv import (
+    PagedAllocator,
+    gather_cache,
+    init_paged_cache,
+    write_token,
+)
+
+
+def test_allocate_and_free():
+    a = PagedAllocator(n_blocks=8, block_size=4)
+    t = a.allocate(0, seq_len=10)        # ceil(10/4) = 3 blocks
+    assert len(t) == 3 and a.free_blocks == 5
+    a.free(0)
+    assert a.free_blocks == 8
+    a.check_invariants()
+
+
+def test_append_grows_at_block_boundary():
+    a = PagedAllocator(8, 4)
+    a.allocate(0, 4)
+    assert a.append_token(0, 5) is not None     # crosses into block 2
+    assert a.append_token(0, 6) is None         # still fits
+    assert len(a.table(0)) == 2
+    a.check_invariants()
+
+
+def test_oom_raises():
+    a = PagedAllocator(2, 4)
+    a.allocate(0, 8)
+    with pytest.raises(MemoryError):
+        a.allocate(1, 1)
+    assert not a.can_allocate(1)
+
+
+def test_fork_shares_then_cow_copies():
+    a = PagedAllocator(8, 4)
+    a.allocate(0, 8)
+    a.fork(0, 1)
+    assert a.table(0) == a.table(1)
+    assert a.free_blocks == 6                   # shared, no new blocks
+    phys, copied_from = a.cow(1, 0)
+    assert copied_from == a.table(0)[0]
+    assert a.table(1)[0] != a.table(0)[0]       # diverged
+    assert a.free_blocks == 5
+    a.check_invariants()
+    a.free(0)
+    a.free(1)
+    assert a.free_blocks == 8
+
+
+def test_write_and_gather_roundtrip():
+    a = PagedAllocator(6, 4)
+    table = a.allocate(0, 6)
+    cache = init_paged_cache(n_layers=2, n_blocks=6, block_size=4,
+                             kv_heads=2, head_dim=8)
+    rng = np.random.default_rng(0)
+    ks = rng.normal(size=(6, 2, 8)).astype(np.float32)
+    for pos in range(6):
+        blk, off = table[pos // 4], pos % 4
+        cache = write_token(cache, 1, blk, off,
+                            jnp.asarray(ks[pos], jnp.bfloat16),
+                            jnp.asarray(ks[pos] * 2, jnp.bfloat16))
+    k, v = gather_cache(cache, 1, np.array(table), 6, 4)
+    np.testing.assert_allclose(np.asarray(k, np.float32), ks, atol=0.02)
+    np.testing.assert_allclose(np.asarray(v, np.float32), ks * 2, atol=0.05)
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=st.lists(st.tuples(st.sampled_from(["alloc", "free", "append",
+                                               "fork", "cow"]),
+                              st.integers(0, 5)), min_size=1, max_size=40),
+       n_blocks=st.integers(4, 24))
+def test_property_allocator_invariants(ops, n_blocks):
+    a = PagedAllocator(n_blocks, 4)
+    lens = {}
+    next_id = 0
+    for op, arg in ops:
+        try:
+            if op == "alloc":
+                sid = next_id
+                next_id += 1
+                a.allocate(sid, (arg % 3) * 4 + 1)
+                lens[sid] = (arg % 3) * 4 + 1
+            elif op == "free" and lens:
+                sid = sorted(lens)[arg % len(lens)]
+                a.free(sid)
+                del lens[sid]
+            elif op == "append" and lens:
+                sid = sorted(lens)[arg % len(lens)]
+                lens[sid] += 1
+                a.append_token(sid, lens[sid])
+            elif op == "fork" and lens:
+                src = sorted(lens)[arg % len(lens)]
+                a.fork(src, next_id)
+                lens[next_id] = lens[src]
+                next_id += 1
+            elif op == "cow" and lens:
+                sid = sorted(lens)[arg % len(lens)]
+                a.cow(sid, 0)
+        except MemoryError:
+            pass
+        a.check_invariants()

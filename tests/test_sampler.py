@@ -1,0 +1,157 @@
+"""Column-wise incremental CPU sampler: equivalence with the naive
+recompute-from-scratch baseline + hypothesis properties (§5.1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sampler import ColumnWiseSampler, NaiveSampler
+from repro.core.sampling_params import SamplingParams
+
+V, B = 97, 5
+
+
+def _logits(rng, b=B, v=V):
+    return rng.normal(size=(b, v)).astype(np.float32)
+
+
+def test_greedy_equivalence_with_penalties():
+    """Greedy decoding with penalties: incremental column-wise state must
+    produce exactly the same tokens as full recompute."""
+    rng = np.random.default_rng(0)
+    cw = ColumnWiseSampler(V, B, max_len=64)
+    nv = NaiveSampler(V)
+    p = SamplingParams(greedy=True, frequency_penalty=0.7,
+                       presence_penalty=0.3, repetition_penalty=1.2)
+    for step in range(24):
+        z = _logits(rng)
+        a = cw.sample(z, p)
+        b = nv.sample(z, p)
+        np.testing.assert_array_equal(a, b, err_msg=f"step {step}")
+
+
+def test_greedy_equivalence_multiplicative_only():
+    rng = np.random.default_rng(1)
+    cw = ColumnWiseSampler(V, B)
+    nv = NaiveSampler(V)
+    p = SamplingParams(greedy=True, repetition_penalty=1.5)
+    for _ in range(16):
+        z = _logits(rng)
+        np.testing.assert_array_equal(cw.sample(z, p), nv.sample(z, p))
+
+
+def test_incremental_state_matches_recompute():
+    """The f buffers after k steps equal a from-scratch histogram."""
+    rng = np.random.default_rng(2)
+    cw = ColumnWiseSampler(V, B)
+    p = SamplingParams(greedy=True, frequency_penalty=0.1)
+    hist = [[] for _ in range(B)]
+    for _ in range(20):
+        ids = cw.sample(_logits(rng), p)
+        for i, t in enumerate(ids):
+            hist[i].append(int(t))
+    rep = cw._replicas[0]
+    expect = np.zeros((B, V), np.float32)   # row-major incremental buffers
+    for col, h in enumerate(hist):
+        for t in h:
+            expect[col, t] += 1
+    np.testing.assert_array_equal(rep.freq, expect)
+    np.testing.assert_array_equal(rep.pres, (expect > 0).astype(np.float32))
+
+
+def test_pp_replicas_are_independent():
+    """Slot n and slot n+1 (different microbatches) keep separate state."""
+    rng = np.random.default_rng(3)
+    cw = ColumnWiseSampler(V, B, pp_degree=2)
+    p = SamplingParams(greedy=True, frequency_penalty=1.0)
+    z = _logits(rng)
+    a0 = cw.sample(z.copy(), p, slot=0)
+    a1 = cw.sample(z.copy(), p, slot=1)
+    np.testing.assert_array_equal(a0, a1)  # fresh state in both slots
+    # slot 0 advanced: repeated logits now get penalized there only
+    b0 = cw.sample(z.copy(), p, slot=0, )
+    assert not np.array_equal(a0, b0) or True  # penalty may or may not flip argmax
+    assert cw._replicas[0].freq.sum() == 2 * B
+    assert cw._replicas[1].freq.sum() == B
+
+
+def test_transposed_input_path():
+    rng = np.random.default_rng(4)
+    z = _logits(rng)
+    cw1 = ColumnWiseSampler(V, B)
+    cw2 = ColumnWiseSampler(V, B)
+    p = SamplingParams(greedy=True)
+    a = cw1.sample(z, p)
+    b = cw2.sample(np.ascontiguousarray(z.T), p, transposed=True)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_top_k_restricts_support():
+    rng = np.random.default_rng(5)
+    cw = ColumnWiseSampler(V, B, seed=7)
+    z = _logits(rng)
+    top3 = np.argsort(-z, axis=1)[:, :3]
+    p = SamplingParams(temperature=1.0, top_k=3)
+    for _ in range(50):
+        ids = cw.sample(z.copy(), p)
+        for i, t in enumerate(ids):
+            assert t in top3[i]
+
+
+def test_top_p_mass():
+    """top-p keeps the smallest prefix with mass > p (plus boundary token)."""
+    cw = ColumnWiseSampler(10, 1, seed=3)
+    z = np.log(np.array([[0.5, 0.3, 0.1, 0.05, 0.03, 0.02, 0, 0, 0, 0]],
+                        np.float64) + 1e-12).astype(np.float32)
+    p = SamplingParams(temperature=1.0, top_p=0.7)
+    seen = {int(cw.sample(z.copy(), p)[0]) for _ in range(200)}
+    assert seen <= {0, 1}, seen
+
+
+def test_min_p_filter():
+    cw = ColumnWiseSampler(8, 1, seed=9)
+    z = np.log(np.array([[0.9, 0.05, 0.03, 0.02, 0, 0, 0, 0]], np.float64)
+               + 1e-12).astype(np.float32)
+    p = SamplingParams(temperature=1.0, min_p=0.2)  # cap = 0.9*0.2 = 0.18
+    seen = {int(cw.sample(z.copy(), p)[0]) for _ in range(100)}
+    assert seen == {0}
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    steps=st.integers(1, 12),
+    b=st.integers(1, 7),
+    fp=st.floats(0.0, 2.0),
+    pp=st.floats(0.0, 2.0),
+    seed=st.integers(0, 1000),
+)
+def test_property_greedy_incremental_equals_naive(steps, b, fp, pp, seed):
+    rng = np.random.default_rng(seed)
+    cw = ColumnWiseSampler(V, b)
+    nv = NaiveSampler(V)
+    p = SamplingParams(greedy=True, frequency_penalty=fp, presence_penalty=pp)
+    for _ in range(steps):
+        z = rng.normal(size=(b, V)).astype(np.float32)
+        np.testing.assert_array_equal(cw.sample(z, p), nv.sample(z, p))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), temp=st.floats(0.2, 2.0))
+def test_property_sampled_ids_in_range(seed, temp):
+    rng = np.random.default_rng(seed)
+    cw = ColumnWiseSampler(V, B, seed=seed)
+    p = SamplingParams(temperature=temp, top_k=10, top_p=0.9,
+                       frequency_penalty=0.2)
+    ids = cw.sample(rng.normal(size=(B, V)).astype(np.float32), p)
+    assert ids.dtype == np.int32 and (0 <= ids).all() and (ids < V).all()
+
+
+def test_prompt_seeding_affects_penalties():
+    cw = ColumnWiseSampler(V, 2)
+    cw.seed_prompt(0, 2, [0, 1], [np.array([5, 5, 5]), np.array([7])])
+    rep = cw._replicas[0]
+    assert rep.freq[0, 5] == 3 and rep.pres[1, 7] == 1
+    cw2 = ColumnWiseSampler(V, 2)
+    cw2.seed_prompt(0, 2, [0, 1], [np.array([5, 5, 5]), np.array([7])],
+                    layout="cw")
+    rep2 = cw2._replicas[0]
+    assert rep2.freq[5, 0] == 3 and rep2.pres[7, 1] == 1

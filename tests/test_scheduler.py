@@ -1,0 +1,96 @@
+"""Continuous-batching scheduler: slot stability + completion semantics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sampling_params import SamplingParams
+from repro.core.scheduler import Scheduler
+from repro.core.sequence import Sequence
+
+
+def _mk(max_batch=4, p=2, n=6, max_new=4):
+    s = Scheduler(max_batch=max_batch, pp_degree=p, max_seq_len=512)
+    for i in range(n):
+        s.add_request(Sequence(i, [1, 2, 3], SamplingParams(
+            greedy=True, max_new_tokens=max_new)))
+    return s
+
+
+def test_slots_partition_sequences():
+    s = _mk(max_batch=4, p=2, n=6)
+    o0 = s.schedule(0)
+    o1 = s.schedule(1)
+    assert len(o0.seq_ids) == 4 and len(o1.seq_ids) == 2
+    assert set(o0.seq_ids).isdisjoint(o1.seq_ids)
+
+
+def test_slot_stability_across_rounds():
+    """Batches n and n+p contain the same sequences (§5.1 assumption)."""
+    s = _mk(max_batch=4, p=2, n=6, max_new=8)
+    o0 = s.schedule(0)
+    s.complete(0, o0.seq_ids, np.zeros(len(o0.seq_ids), np.int32))
+    o2 = s.schedule(2)
+    assert o2.seq_ids == o0.seq_ids
+    assert not o2.is_prefill
+
+
+def test_positions_advance_with_tokens():
+    s = _mk(n=2, max_batch=4, p=1)
+    o = s.schedule(0)
+    p0 = o.positions.copy()
+    s.complete(0, o.seq_ids, np.array([7, 8], np.int32))
+    o1 = s.schedule(1)
+    np.testing.assert_array_equal(o1.positions, p0 + 1)
+    np.testing.assert_array_equal(o1.tokens, [7, 8])
+
+
+def test_completion_and_backfill():
+    s = _mk(max_batch=2, p=1, n=4, max_new=1)
+    o = s.schedule(0)
+    done = s.complete(0, o.seq_ids, np.array([5, 5], np.int32))
+    assert done == o.seq_ids                 # max_new=1 -> finish at once
+    o1 = s.schedule(1)
+    assert set(o1.seq_ids).isdisjoint(done)  # backfilled from waiting
+    assert o1.is_prefill
+
+
+def test_eos_stops_sequence():
+    s = Scheduler(max_batch=1, pp_degree=1, max_seq_len=64)
+    s.add_request(Sequence(0, [1], SamplingParams(max_new_tokens=10,
+                                                  eos_token_id=2)))
+    o = s.schedule(0)
+    done = s.complete(0, o.seq_ids, np.array([2], np.int32))
+    assert done == [0]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 12),
+    max_batch=st.integers(1, 5),
+    p=st.integers(1, 3),
+    rounds=st.integers(1, 30),
+    seed=st.integers(0, 99),
+)
+def test_property_no_seq_in_two_slots_and_all_finish(n, max_batch, p, rounds, seed):
+    rng = np.random.default_rng(seed)
+    s = Scheduler(max_batch=max_batch, pp_degree=p, max_seq_len=128)
+    for i in range(n):
+        s.add_request(Sequence(i, [1, 2], SamplingParams(
+            greedy=True, max_new_tokens=int(rng.integers(1, 4)))))
+    for it in range(rounds * p):
+        o = s.schedule(it)
+        if o is None:
+            continue
+        # invariant: no sequence scheduled in two different slots
+        others = set()
+        for sl in range(p):
+            if sl != o.slot:
+                others |= set(s.slot_members[sl])
+        assert not (set(o.seq_ids) & others)
+        s.complete(it, o.seq_ids, rng.integers(3, 50, len(o.seq_ids)).astype(np.int32))
+        if not s.has_work:
+            break
+    if rounds * p >= n * 5:
+        assert len(s.finished) == n
+        for seq in s.finished:
+            assert len(seq.output_ids) == seq.params.max_new_tokens

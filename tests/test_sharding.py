@@ -1,0 +1,89 @@
+"""Logical-axis resolver: first-fit-divisible mapping + graceful fallback."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import sharding as shlib
+
+
+class FakeMesh:
+    """Duck-typed mesh: resolve_pspec only needs axis_names + devices.shape."""
+
+    def __init__(self, shape, axes):
+        self.axis_names = axes
+        self.devices = np.empty(shape)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+MESH3 = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_heads_shard_when_divisible():
+    spec = shlib.resolve_pspec(("embed", "heads"), (4096, 32 * 128),
+                               shlib.SERVE_RULES, MESH)
+    assert spec == P(None, "model")
+
+
+def test_kv_heads_fall_back_to_replication_then_seq_claims_model():
+    # glm4 decode cache: [B, S, kv=2, hd] -> kv can't shard over 16, the
+    # sequence dim claims "model" instead (sequence-parallel cache)
+    spec = shlib.resolve_pspec(("batch", "kv_seq", None, None),
+                               (128, 32768, 2, 128), shlib.SERVE_RULES, MESH)
+    assert spec == P("data", "model")
+
+
+def test_batch_joint_pod_data():
+    spec = shlib.resolve_pspec(("batch", None), (256, 4096),
+                               shlib.TRAIN_RULES, MESH3)
+    assert spec == P(("pod", "data"))
+
+
+def test_batch_indivisible_falls_back():
+    spec = shlib.resolve_pspec(("batch", None, None), (1, 1, 2048),
+                               shlib.SERVE_RULES, MESH)
+    assert spec == P()
+
+
+def test_train_rules_fsdp_embed():
+    spec = shlib.resolve_pspec(("embed", "ff"), (4096, 13696),
+                               shlib.TRAIN_RULES, MESH)
+    assert spec == P("data", "model")
+
+
+def test_axis_used_once_per_tensor():
+    # vocab and heads both want "model": only the first gets it
+    spec = shlib.resolve_pspec(("vocab", "heads"), (32000, 32),
+                               shlib.SERVE_RULES, MESH)
+    assert spec == P("model")  # trailing None trimmed
+
+
+def test_pp_rules_stage_axis():
+    mesh = FakeMesh((8, 2, 16), ("pipe", "data", "model"))
+    spec = shlib.resolve_pspec(("stage", "embed", "ff"), (8, 4096, 14336),
+                               shlib.PP_RULES, mesh)
+    assert spec == P("pipe", None, "model")
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    dims=st.lists(st.sampled_from([1, 2, 7, 16, 32, 64, 100, 256]),
+                  min_size=1, max_size=4),
+    axes=st.lists(st.sampled_from(["batch", "embed", "ff", "heads",
+                                   "kv_heads", "vocab", None]),
+                  min_size=1, max_size=4),
+)
+def test_property_resolver_always_divisible(dims, axes):
+    n = min(len(dims), len(axes))
+    dims, axes = dims[:n], axes[:n]
+    spec = shlib.resolve_pspec(axes, dims, shlib.SERVE_RULES, MESH)
+    sizes = {"data": 16, "model": 16}
+    used = []
+    for dim, assigned in zip(dims, tuple(spec) + (None,) * (n - len(spec))):
+        if assigned is None:
+            continue
+        names = assigned if isinstance(assigned, tuple) else (assigned,)
+        total = int(np.prod([sizes[a] for a in names]))
+        assert dim % total == 0, (dim, assigned)
+        used.extend(names)
+    assert len(used) == len(set(used))  # each mesh axis at most once
