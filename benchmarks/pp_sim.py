@@ -169,6 +169,122 @@ def ablation_variants(model: str, p: int, measured_cpu_sample_s: float):
     }
 
 
+# ---------------------------------------------------------------------------
+# Chunked-prefill vs monolithic-prefill workload simulation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MixedWorkloadResult:
+    """Occupancy/bubble anatomy of a mixed long-prompt + decode workload."""
+
+    iterations: int
+    wall_s: float
+    tokens_total: int
+    stage_busy: List[float]
+    occupancy: float          # mean fraction of the token budget carried
+    bubble_ticks: int         # (stage, iteration) events where a stage idled
+    prefill_block_s: float    # wall time spent in pipeline-blocking prefills
+    iteration_tokens: List[int]
+
+    @property
+    def bubble_fracs(self) -> List[float]:
+        return [max(0.0, 1 - b / self.wall_s) for b in self.stage_busy]
+
+
+def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
+                            token_budget: int = 32,
+                            prompt_lens: List[int],
+                            max_new_tokens: int = 16,
+                            t_token: float = 1e-4,
+                            t_fixed: float = 5e-4,
+                            chunked: bool = True,
+                            max_iters: int = 100_000) -> MixedWorkloadResult:
+    """Drive the REAL continuous-batching scheduler (repro.core.scheduler)
+    through a discrete-event pipeline timing model.
+
+    Per-iteration stage time is ``t_fixed + t_token * tokens`` — iteration
+    cost scales with the token count it carries, which is what makes
+    monolithic whole-prompt prefills (engine ``_admit_and_prefill``: a
+    pipeline-blocking pass over every stage) stall the other p-1 slots,
+    while chunked prefill keeps every slot near the token budget.
+    """
+    from repro.core.sampling_params import SamplingParams
+    from repro.core.scheduler import Scheduler
+    from repro.core.sequence import Sequence
+
+    import numpy as np
+
+    sched = Scheduler(max_batch=max_batch, pp_degree=p,
+                      max_seq_len=max(prompt_lens) + max_new_tokens + 4,
+                      token_budget=token_budget if chunked else None)
+    for i, plen in enumerate(prompt_lens):
+        sched.add_request(Sequence(i, list(range(1, plen + 1)),
+                                   SamplingParams(greedy=True,
+                                                  max_new_tokens=max_new_tokens)))
+
+    stage_free = [0.0] * p
+    stage_busy = [0.0] * p
+    slot_prev_end: Dict[int, float] = {}
+    bubble_ticks = 0
+    prefill_block = 0.0
+    iter_tokens: List[int] = []
+    wall = 0.0
+    it = 0
+    while it < max_iters and sched.has_work:
+        out = sched.schedule(it)
+        if out is None:
+            it += 1
+            continue
+        if out.is_prefill:
+            # monolithic path: _admit_and_prefill runs the new prompts
+            # through ALL stages back-to-back while nothing else executes
+            new = [sid for sid in out.seq_ids if not sched.seqs[sid].output_ids]
+            pf_tokens = sum(sched.seqs[s].prompt_len for s in new)
+            start = max(stage_free)
+            t = start
+            for s in range(p):
+                dur = t_fixed + t_token * pf_tokens
+                stage_busy[s] += dur
+                t += dur
+            for s in range(p):
+                if stage_free[s] < start:
+                    bubble_ticks += 1
+                stage_free[s] = t
+            prefill_block += t - start
+            sched.complete(it, new, np.full(len(new), 7, np.int32))
+            out = sched.schedule(it)
+            if out is None:
+                it += 1
+                continue
+        tokens = out.total_tokens
+        iter_tokens.append(tokens)
+        dur = t_fixed + t_token * tokens
+        dep = slot_prev_end.get(out.slot, 0.0)
+        for s in range(p):
+            start = max(stage_free[s], dep)
+            if start > stage_free[s] and stage_free[s] > 0.0:
+                bubble_ticks += 1
+            end = start + dur
+            stage_free[s] = end
+            stage_busy[s] += dur
+            dep = end
+        slot_prev_end[out.slot] = dep
+        wall = max(wall, dep)
+        cols = out.sample_indices()
+        ids = [out.seq_ids[i] for i in cols]
+        sched.complete(it, ids, np.full(len(ids), 7, np.int32))
+        it += 1
+
+    wall = max(wall, max(stage_free))
+    toks = sum(iter_tokens)
+    occ = (sum(min(t / token_budget, 1.0) for t in iter_tokens)
+           / max(len(iter_tokens), 1))
+    return MixedWorkloadResult(
+        iterations=len(iter_tokens), wall_s=wall, tokens_total=toks,
+        stage_busy=stage_busy, occupancy=occ, bubble_ticks=bubble_ticks,
+        prefill_block_s=prefill_block, iteration_tokens=iter_tokens)
+
+
 def simulate_variant(costs: PipeCosts, mode, n_iters: int = 64) -> SimResult:
     """mode: False=baseline, True=full sipipe, or partial-feature strings."""
     if mode is False or mode is True:

@@ -287,6 +287,35 @@ def bench_ablation(measured: Dict[str, float]) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill vs monolithic prefill on a mixed long-prompt workload
+# ---------------------------------------------------------------------------
+
+def bench_chunked_prefill() -> None:
+    """Steady-state slot occupancy + bubble anatomy under a mixed
+    long-prompt/decode workload, driven through the REAL scheduler
+    (chunked vs monolithic whole-prompt prefill)."""
+    from benchmarks.pp_sim import simulate_mixed_workload
+
+    prompts = [200, 8, 150, 6, 180, 10, 90, 120, 5, 160, 7, 140]
+    for p in (2, 4):
+        results = {}
+        for chunked in (False, True):
+            r = simulate_mixed_workload(
+                p=p, max_batch=4, token_budget=32, prompt_lens=prompts,
+                max_new_tokens=24, chunked=chunked)
+            results[chunked] = r
+            name = "chunked" if chunked else "monolithic"
+            emit(f"chunked_prefill/p{p}_{name}", r.wall_s * 1e6,
+                 f"occupancy={r.occupancy:.3f} bubble_ticks={r.bubble_ticks} "
+                 f"bubble_frac={max(r.bubble_fracs):.3f} "
+                 f"prefill_block_ms={r.prefill_block_s * 1e3:.1f}")
+        gain = results[False].wall_s / results[True].wall_s
+        emit(f"chunked_prefill/p{p}_speedup", 0.0,
+             f"wall_gain={gain:.2f}x occupancy "
+             f"{results[False].occupancy:.3f}->{results[True].occupancy:.3f}")
+
+
+# ---------------------------------------------------------------------------
 # Real-engine end-to-end (CPU-scale, structural validation)
 # ---------------------------------------------------------------------------
 
@@ -356,6 +385,8 @@ def main() -> None:
         bench_scalability(measured)
     if want("ablation"):
         bench_ablation(measured)
+    if want("chunked"):
+        bench_chunked_prefill()
     if want("engine"):
         bench_engine_e2e()
     if want("kernels"):

@@ -58,6 +58,7 @@ class PPStage:
     params: Any
     prefill_fn: Callable                 # (params, x_or_tokens, pos0) -> (x|logits, cache)
     decode_fn: Callable                  # (params, cache, x_or_tokens, positions) -> (x|logits, cache)
+    chunk_fn: Callable                   # (params, cache, x_or_tokens, positions[B,C], last_idx) -> (x|logits, cache)
     init_cache: Callable                 # (rows, s_max) -> cache tree
 
     @property
@@ -121,6 +122,22 @@ def _make_stage(model: Model, idx: int, p: int, bounds, sp) -> PPStage:
             return model.lm_head(params, x), cache
         return x, cache
 
+    def chunk_fn(params, cache, x_or_tokens, positions, last_idx):
+        """Mixed chunked-prefill/decode step: a span of C tokens per
+        sequence with per-seq absolute positions [B, C] (decode steps are
+        width-1 spans; padding entries duplicate the last valid element).
+        ``last_idx`` [B] selects the span element whose logits feed the
+        sampler (the true last prompt/decode token, not the pad tail)."""
+        ctx = model.make_ctx("chunk", positions)
+        x = model.embed_tokens({"embed": params["embed"]}, x_or_tokens) if first \
+            else x_or_tokens
+        x, cache = run_stack(sub, params["blocks"], x, ctx, cache_stacked=cache,
+                             remat=False)
+        if last:
+            b = x.shape[0]
+            return model.lm_head(params, x[jnp.arange(b), last_idx]), cache
+        return x, cache
+
     def init_cache(rows, s_max):
         import repro.models.stacked as stacked
 
@@ -129,7 +146,7 @@ def _make_stage(model: Model, idx: int, p: int, bounds, sp) -> PPStage:
         return stacked.zeros_cache(abstract)
 
     return PPStage(idx, p, bounds, sp, jax.jit(prefill_fn), jax.jit(decode_fn),
-                   init_cache)
+                   jax.jit(chunk_fn), init_cache)
 
 
 # ---------------------------------------------------------------------------
@@ -146,6 +163,9 @@ class EngineConfig:
     tsem: bool = True               # False -> synchronous prepare+execute
     sat: bool = True                # False -> structure-unaware transmission
     channel_round_latency_s: float = 0.0   # inject per-round cost for benches
+    # per-iteration token budget for chunked prefill (None = monolithic
+    # whole-prompt prefill, the seed behavior); see docs/scheduling.md
+    prefill_chunk_tokens: Optional[int] = None
     seed: int = 0
 
 
@@ -187,17 +207,28 @@ class _StageWorker:
         np.copyto(bufs["tokens"], meta.tokens)
         np.copyto(bufs["positions"], meta.positions)
         np.copyto(bufs["rows"], meta.rows)
+        if meta.span > 1:
+            np.copyto(bufs["span_tokens"], meta.span_tokens)
+            np.copyto(bufs["span_positions"], meta.span_positions)
+            np.copyto(bufs["counts"], meta.counts)
 
     # -- device executor side -----------------------------------------------
     def _execute(self, desc: ModelInputDescriptor, bufs: Dict[str, np.ndarray]):
         t0 = time.monotonic()
         stage, eng = self.stage, self.engine
         rows = jnp.asarray(bufs["rows"])
-        positions = jnp.asarray(bufs["positions"])
-        x_in = (jnp.asarray(bufs["tokens"]) if stage.is_first
+        x_in = ((jnp.asarray(bufs["span_tokens"]) if desc.span > 1
+                 else jnp.asarray(bufs["tokens"])) if stage.is_first
                 else eng.recv_hidden(stage.index, desc.iteration))
         cache_rows = jax.tree.map(lambda c: c[:, rows], self.cache)
-        out, new_cache = stage.decode_fn(stage.params, cache_rows, x_in, positions)
+        if desc.span > 1:
+            out, new_cache = stage.chunk_fn(
+                stage.params, cache_rows, x_in,
+                jnp.asarray(bufs["span_positions"]),
+                jnp.asarray(bufs["counts"] - 1))
+        else:
+            out, new_cache = stage.decode_fn(
+                stage.params, cache_rows, x_in, jnp.asarray(bufs["positions"]))
         self.cache = jax.tree.map(lambda c, n: c.at[:, rows].set(n),
                                   self.cache, new_cache)
         out = jax.block_until_ready(out)
@@ -241,8 +272,14 @@ class PPEngineBase:
         self.model = model
         self.cfg = cfg
         self.arch: ArchConfig = model.cfg
+        if cfg.prefill_chunk_tokens is not None and \
+                self.arch.family not in ("dense", "moe"):
+            raise NotImplementedError(
+                "chunked prefill requires the dense/moe 'chunk' model mode; "
+                f"family {self.arch.family!r} is not supported yet")
         self.scheduler = Scheduler(max_batch=cfg.max_batch, pp_degree=cfg.pp_degree,
-                                   max_seq_len=cfg.max_seq_len)
+                                   max_seq_len=cfg.max_seq_len,
+                                   token_budget=cfg.prefill_chunk_tokens)
         self.seq_cache = SequenceCache(cfg.max_batch * cfg.pp_degree)
         self.stages = [
             _StageWorker(s, self)
@@ -290,16 +327,24 @@ class PPEngineBase:
 
     def _dispatch_sampling(self, sched: SchedulingOutput, logits: np.ndarray):
         t0 = time.monotonic()
+        # drop in-progress prefill columns up front: their samples would be
+        # discarded anyway, and vocab-wide sampling is the expensive part
+        eligible = sched.sample_indices()
+        if len(eligible) != logits.shape[0]:
+            logits = logits[eligible]
+        if logits.shape[0] == 0:       # nothing to sample this iteration
+            self._on_sampled(sched, np.zeros(0, np.int32))
+            return
         k = self.cfg.n_samplers
         b = logits.shape[0]
-        parts: List[np.ndarray] = [None] * k  # type: ignore
+        eligible_ids = [sched.seq_ids[i] for i in eligible]
         sp = self._params_for(sched)
 
         def run(j):
             cols = np.arange(j, b, k)
             ids = self.samplers[j].sample(
                 logits[cols], sp, slot=sched.slot,
-                seq_ids=[sched.seq_ids[c] for c in cols])
+                seq_ids=[eligible_ids[c] for c in cols])
             self.bic_o.put(sched.iteration, j, (cols, ids))
 
         threads = [threading.Thread(target=run, args=(j,)) for j in range(k)]
@@ -318,16 +363,24 @@ class PPEngineBase:
 
     def _on_sampled(self, sched: SchedulingOutput, token_ids: np.ndarray):
         now = time.monotonic()
-        self.iter_done_t[sched.iteration] = now
-        finished = self.scheduler.complete(sched.iteration, sched.seq_ids, token_ids)
+        # chunked prefill: only sequences whose span reached a sampling
+        # point (decode steps + prompt-completing chunks) take a token;
+        # ``token_ids`` is already aligned to sample_indices()
+        sampled_ids = [sched.seq_ids[i] for i in sched.sample_indices()]
+        finished = self.scheduler.complete(
+            sched.iteration, sampled_ids, token_ids)
         for sid in finished:
             self.seq_cache.release(sid)
+        mixed = sched.needs_sample is not None and not all(sched.needs_sample)
         for s in self.samplers:
-            if finished and isinstance(s, ColumnWiseSampler):
+            if (finished or mixed) and isinstance(s, ColumnWiseSampler):
                 s.evict(sched.slot)  # batch recomposition -> replica rebuild
-        for sid in sched.seq_ids:
+        for sid in sampled_ids:
             if sid not in finished:
                 self.seq_cache.advance(sid)
+        # publish completion LAST: _await_iteration releases the driver to
+        # schedule n+p, which must see this iteration's sequence updates
+        self.iter_done_t[sched.iteration] = now
 
     # -- public API ------------------------------------------------------------
     def add_request(self, prompt_ids: List[int], params: SamplingParams) -> int:
@@ -375,10 +428,20 @@ class PPEngineBase:
         while it < max_iterations:
             sched = self.scheduler.schedule(it)
             if sched is not None:
-                if sched.is_prefill:
+                if sched.is_prefill:     # monolithic path (chunking off)
+                    # drain in-flight iterations first: run_prefill writes
+                    # stage caches on this thread and must not race the
+                    # device threads' cache read-modify-writes
+                    while inflight:
+                        self._await_iteration(inflight.pop(0))
                     self._admit_and_prefill(sched)
                     sched = self.scheduler.schedule(it)  # rebuilt after prefill
                 if sched is not None:
+                    # chunked path admits KV rows lazily, on first chunk
+                    for sid in sched.seq_ids:
+                        if self.seq_cache.lookup(sid) is None:
+                            self.seq_cache.admit(
+                                sid, self.scheduler.seqs[sid].prompt_len)
                     self.bic_i.put(sched)
                     self._submit(sched)
                     inflight.append(sched)

@@ -99,7 +99,12 @@ class StructureUnawareChannel:
             self.wire.send(np.ascontiguousarray(tensors[m.key]).tobytes())
 
     def recv(self, timeout: float = 30.0) -> Dict[str, np.ndarray]:
-        size = int.from_bytes(self.wire.recv(timeout), "little")
+        self.wire.recv(timeout)                               # size header
+        return self._recv_body(timeout)
+
+    def _recv_body(self, timeout: float) -> Dict[str, np.ndarray]:
+        """Rounds after the size header: metadata blob + per-tensor
+        payloads (shared with StructureAwareChannel's capture path)."""
         metas: List[TensorMeta] = pickle.loads(self.wire.recv(timeout))
         out = {}
         for m in metas:
@@ -112,12 +117,20 @@ class StructureUnawareChannel:
 
 class StructureAwareChannel:
     """SAT: capture structure once; steady-state sends one fused payload
-    into a receiver-preallocated buffer (the async-irecv analogue)."""
+    into a receiver-preallocated buffer (the async-irecv analogue).
+
+    Capture (fallback-protocol) rounds and steady payloads share ONE wire:
+    a producer may run a full iteration ahead of the consumer, so putting
+    them on separate queues would let a recapture (e.g. a chunked-prefill
+    span-width change) be consumed out of order.  The receiver tells them
+    apart by length — the fallback's first round is exactly the 8-byte
+    metadata-size header, while steady payloads are 8 + fused bytes."""
 
     def __init__(self, round_latency_s: float = 0.0):
         self.wire = _Wire(round_latency_s)
         self._sig: Optional[StructureSignature] = None
         self._fallback = StructureUnawareChannel(round_latency_s)
+        self._fallback.wire = self.wire     # single FIFO for both protocols
         self._prealloc: Dict[Tuple[int, ...], List[np.ndarray]] = {}
         self.captures = 0
 
@@ -125,11 +138,8 @@ class StructureAwareChannel:
     def send(self, tensors: Dict[str, np.ndarray]):
         sig = StructureSignature.of(tensors)
         if self._sig != sig:
-            # first iteration (or batch recomposition): full protocol
+            # first iteration (or structure change): full protocol
             self._fallback.send(tensors)
-            self.wire.rounds += self._fallback.wire.rounds
-            self.wire.bytes_moved += self._fallback.wire.bytes_moved
-            self._fallback.wire.rounds = self._fallback.wire.bytes_moved = 0
             self._sig = sig
             self.captures += 1
             return
@@ -152,13 +162,12 @@ class StructureAwareChannel:
             ]
 
     def recv(self, timeout: float = 30.0) -> Dict[str, np.ndarray]:
-        if self._sig is None or self._fallback.wire.q.qsize():
-            out = self._fallback.recv(timeout)
-            self._sig = StructureSignature.of(out)
-            return out
         payload = self.wire.recv(timeout)
-        if len(payload) == 8:  # stray size header from a capture round
-            raise RuntimeError("protocol desync")
+        if len(payload) == 8:  # metadata-size header: a capture iteration
+            out = self._fallback._recv_body(timeout)
+            self._sig = StructureSignature.of(out)
+            self._prealloc.clear()   # trailing dims changed: buffers stale
+            return out
         batch = int.from_bytes(payload[:8], "little")
         self.post_recv(batch)
         bufs = self._prealloc[(batch,)]

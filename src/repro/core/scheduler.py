@@ -1,17 +1,36 @@
-"""Continuous-batching scheduler (SiPipe §4.2).
+"""Continuous-batching scheduler (SiPipe §4.2) with chunked prefill.
 
 Keeps p microbatches in flight (one per pipeline stage).  On receiving
 iteration n's sampling output it immediately dispatches iteration n+p with
 the same sequence set minus finished ones plus admitted waiters — which is
 exactly the stability property the column-wise sampler and the TSEM
 BatchMetadata replicas rely on (batches n and n+p are near-identical).
+
+Chunked prefill (SARATHI-style, opt-in via ``token_budget``): instead of
+dispatching whole-prompt prefills as monolithic pipeline-blocking batches,
+long prompts are split into fixed-token-budget chunks that piggyback on
+the slot's in-flight decode tokens, so every iteration of every slot
+carries a near-constant token count:
+
+  * each scheduled iteration emits per-seq *spans* ``(offset, n_tokens)``
+    — a decode step is the degenerate span ``(length-1, 1)``;
+  * decode tokens are always scheduled; the remaining budget is handed to
+    prefilling members (admission order) as chunks;
+  * sampling fires only for sequences whose span reaches the last prompt
+    token (``needs_sample``) — earlier chunks produce no token;
+  * total tokens per iteration never exceed ``token_budget`` (the budget
+    is clamped to ``max_batch + 1`` so prefill always makes progress).
+
+With ``token_budget=None`` the scheduler behaves exactly like the seed
+monolithic path (``is_prefill`` batches handled by the engine's
+``_admit_and_prefill``).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -27,27 +46,76 @@ class SchedulingOutput:
     slot: int                      # iteration %% p — the TSEM replica index
     seq_ids: List[int]
     # per-seq state the CPU executor needs to build model inputs
-    positions: np.ndarray          # [B] next-token positions
-    tokens: np.ndarray             # [B] last sampled token ids (input tokens)
-    is_prefill: bool               # True -> prefill the batch first
+    positions: np.ndarray          # [B] span start (decode: next-token position)
+    tokens: np.ndarray             # [B] first input token of each span
+    is_prefill: bool               # True -> monolithic-prefill the batch first
     prompt_lens: Optional[List[int]] = None
     batch_recomposed: bool = False
+    # ---- chunked-prefill extensions (None on pure monolithic/decode paths) --
+    spans: Optional[List[Tuple[int, int]]] = None   # per-seq (offset, n_tokens)
+    span_tokens: Optional[List[List[int]]] = None   # input ids for each span
+    needs_sample: Optional[List[bool]] = None       # span reaches a sampling point
+    pad_span: Optional[int] = None                  # fixed [B, C] width (budget)
+
+    @property
+    def max_span(self) -> int:
+        """Widest span in the batch; 1 for pure-decode iterations."""
+        if not self.spans:
+            return 1
+        return max(c for _, c in self.spans)
+
+    @property
+    def exec_span(self) -> int:
+        """Staged span width: chunk-carrying batches pad to ``pad_span``
+        (the token budget) so XLA compiles one chunk step per batch size
+        instead of one per distinct chunk width; pure decode stays 1."""
+        s = self.max_span
+        if s == 1:
+            return 1
+        return max(s, self.pad_span or 0)
+
+    @property
+    def total_tokens(self) -> int:
+        if not self.spans:
+            return len(self.seq_ids)
+        return sum(c for _, c in self.spans)
+
+    def sample_indices(self) -> List[int]:
+        """Batch columns whose logits must be sampled this iteration."""
+        if self.needs_sample is None:
+            return list(range(len(self.seq_ids)))
+        return [i for i, ns in enumerate(self.needs_sample) if ns]
 
 
 class Scheduler:
     def __init__(self, *, max_batch: int, pp_degree: int = 1,
-                 max_seq_len: int = 4096):
+                 max_seq_len: int = 4096,
+                 token_budget: Optional[int] = None):
         self.max_batch = max_batch
         self.p = pp_degree
         self.max_seq_len = max_seq_len
+        # chunked prefill is enabled iff a budget is given; decode members
+        # take 1 token each, so budget > max_batch guarantees progress
+        self.token_budget = (max(token_budget, max_batch + 1)
+                             if token_budget is not None else None)
         self.waiting: Deque[Sequence] = deque()
         self.seqs: Dict[int, Sequence] = {}
         self.slot_members: List[List[int]] = [[] for _ in range(pp_degree)]
         self.iteration = 0
         self.finished: List[Sequence] = []
 
+    @property
+    def chunked(self) -> bool:
+        return self.token_budget is not None
+
     # -- request ingestion --------------------------------------------------
     def add_request(self, seq: Sequence):
+        if len(seq.prompt_ids) >= self.max_seq_len:
+            # fail loudly up front: the chunked path would otherwise issue
+            # chunks past the KV cache and silently produce garbage
+            raise ValueError(
+                f"prompt of {len(seq.prompt_ids)} tokens does not fit "
+                f"max_seq_len={self.max_seq_len} (need >= 1 output slot)")
         seq.arrival_t = seq.arrival_t or time.monotonic()
         self.seqs[seq.seq_id] = seq
         self.waiting.append(seq)
@@ -61,6 +129,8 @@ class Scheduler:
         """Build the scheduling output for the next iteration of slot
         ``iteration %% p``, topping the slot up from the waiting queue."""
         it = self.iteration if iteration is None else iteration
+        if self.chunked:
+            return self._schedule_chunked(it)
         slot = it % self.p
         members = [sid for sid in self.slot_members[slot]
                    if self.seqs[sid].status == SeqStatus.RUNNING]
@@ -69,6 +139,7 @@ class Scheduler:
         while self.waiting and len(members) < self.max_batch:
             seq = self.waiting.popleft()
             seq.status = SeqStatus.RUNNING
+            seq.prefilled = len(seq.prompt_ids)   # monolithic: all at once
             members.append(seq.seq_id)
             new_prefill.append(seq.seq_id)
             recomposed = True
@@ -87,6 +158,81 @@ class Scheduler:
             is_prefill=bool(new_prefill),
             prompt_lens=[len(self.seqs[s].prompt_ids) for s in members],
             batch_recomposed=recomposed,
+        )
+        self.iteration = max(self.iteration, it + 1)
+        return out
+
+    # -- chunked-prefill dispatch ------------------------------------------
+    def _schedule_chunked(self, it: int) -> Optional[SchedulingOutput]:
+        slot = it % self.p
+        members = [sid for sid in self.slot_members[slot]
+                   if self.seqs[sid].status == SeqStatus.RUNNING]
+        recomposed = len(members) != len(self.slot_members[slot])
+
+        # decode members are always carried (1 token each); prefill chunks
+        # share whatever budget remains, in slot-membership order
+        n_decode = sum(1 for sid in members if self.seqs[sid].prefill_done)
+        budget_left = self.token_budget - n_decode
+
+        batch_ids: List[int] = []
+        spans: List[Tuple[int, int]] = []
+        span_tokens: List[List[int]] = []
+        needs_sample: List[bool] = []
+
+        def emit(seq: Sequence):
+            nonlocal budget_left
+            if seq.prefill_done:
+                off = seq.length - 1
+                spans.append((off, 1))
+                span_tokens.append([seq.last_token])
+                needs_sample.append(True)
+                batch_ids.append(seq.seq_id)
+                return True
+            c = min(seq.prompt_len - seq.prefilled, budget_left)
+            if c <= 0:
+                return False          # deferred: stays a slot member
+            off = seq.prefilled
+            spans.append((off, c))
+            span_tokens.append(list(seq.prompt_ids[off:off + c]))
+            needs_sample.append(off + c >= seq.prompt_len)
+            batch_ids.append(seq.seq_id)
+            seq.prefilled = off + c   # chunk issued: next schedule continues
+            budget_left -= c
+            return True
+
+        deferred = False
+        for sid in members:
+            if not emit(self.seqs[sid]):
+                deferred = True
+        while (self.waiting and len(members) < self.max_batch
+               and budget_left > 0):
+            seq = self.waiting.popleft()
+            seq.status = SeqStatus.RUNNING
+            members.append(seq.seq_id)
+            recomposed = True
+            emit(seq)
+
+        self.slot_members[slot] = members
+        if not batch_ids:
+            return None
+        # any chunked batch (or deferral gap) recomposes vs. pure decode
+        recomposed = recomposed or deferred or any(c > 1 for _, c in spans)
+
+        tokens = np.array([t[0] for t in span_tokens], np.int32)
+        positions = np.array([off for off, _ in spans], np.int32)
+        out = SchedulingOutput(
+            iteration=it,
+            slot=slot,
+            seq_ids=batch_ids,
+            positions=positions,
+            tokens=tokens,
+            is_prefill=False,          # no monolithic pipeline-blocking pass
+            prompt_lens=[self.seqs[s].prompt_len for s in batch_ids],
+            batch_recomposed=recomposed,
+            spans=spans,
+            span_tokens=span_tokens,
+            needs_sample=needs_sample,
+            pad_span=self.token_budget,
         )
         self.iteration = max(self.iteration, it + 1)
         return out

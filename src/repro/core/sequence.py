@@ -27,10 +27,22 @@ class Sequence:
     arrival_t: float = 0.0
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
+    # chunked-prefill progress: prompt tokens whose KV is (or is being)
+    # written into the cache.  Advanced by the scheduler at chunk-issue
+    # time; the monolithic path sets it to the full prompt on admission.
+    prefilled: int = 0
 
     @property
     def length(self) -> int:
         return len(self.prompt_ids) + len(self.output_ids)
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt_ids)
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.prefilled >= len(self.prompt_ids)
 
     @property
     def last_token(self) -> int:

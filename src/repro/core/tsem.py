@@ -35,13 +35,25 @@ from repro.core.scheduler import SchedulingOutput
 
 @dataclasses.dataclass
 class BatchMetadata:
-    """Preprocessed CPU tensors for one microbatch (one TSEM replica)."""
+    """Preprocessed CPU tensors for one microbatch (one TSEM replica).
+
+    Pure-decode batches use the flat [B] layout (``span == 1``).  Mixed
+    chunked-prefill batches additionally carry padded [B, C] token and
+    position matrices plus per-seq span counts; padding entries are
+    *clamped duplicates of the last valid span element* (same token, same
+    position) so downstream cache scatters stay deterministic without a
+    validity mask.
+    """
 
     seq_ids: List[int]
     rows: np.ndarray           # [B] cache-row assignment
-    tokens: np.ndarray         # [B] input token ids
-    positions: np.ndarray      # [B] positions of the new token
+    tokens: np.ndarray         # [B] first input token of each span
+    positions: np.ndarray      # [B] span start positions
     iteration: int = -1
+    span: int = 1              # widest span in the batch (1 = pure decode)
+    span_tokens: Optional[np.ndarray] = None     # [B, C] int32
+    span_positions: Optional[np.ndarray] = None  # [B, C] int32
+    counts: Optional[np.ndarray] = None          # [B] valid tokens per seq
 
     def advance_inplace(self, sched: SchedulingOutput, rows: np.ndarray):
         """Incremental update: same sequence set, next iteration."""
@@ -51,8 +63,29 @@ class BatchMetadata:
         self.iteration = sched.iteration
 
 
+def _build_span_matrices(sched: SchedulingOutput):
+    """Padded [B, C] matrices with clamp-to-last-valid padding."""
+    b = len(sched.seq_ids)
+    c = sched.exec_span
+    tok = np.zeros((b, c), np.int32)
+    pos = np.zeros((b, c), np.int32)
+    counts = np.zeros(b, np.int32)
+    for i, ((off, n), ids) in enumerate(zip(sched.spans, sched.span_tokens)):
+        idx = np.minimum(np.arange(c), n - 1)
+        tok[i] = np.asarray(ids, np.int32)[idx]
+        pos[i] = off + idx
+        counts[i] = n
+    return tok, pos, counts
+
+
 class BatchMetadataCache:
-    """p versions of BatchMetadata, indexed by iteration %% p."""
+    """p versions of BatchMetadata, indexed by iteration %% p.
+
+    The incremental-update fast path applies only when both the cached
+    replica and the incoming batch are pure decode (span 1) with the same
+    sequence set; iterations carrying prefill chunks rebuild, since their
+    per-seq token spans change between n and n+p as prefill progresses.
+    """
 
     def __init__(self, pp_degree: int):
         self.p = pp_degree
@@ -63,7 +96,9 @@ class BatchMetadataCache:
     def update(self, sched: SchedulingOutput, rows: np.ndarray) -> BatchMetadata:
         slot = sched.iteration % self.p
         meta = self._meta[slot]
-        if meta is not None and meta.seq_ids == sched.seq_ids:
+        span = sched.exec_span
+        if (meta is not None and meta.seq_ids == sched.seq_ids
+                and meta.span == 1 and span == 1):
             meta.advance_inplace(sched, rows)
             self.incremental_hits += 1
             return meta
@@ -73,26 +108,41 @@ class BatchMetadataCache:
             tokens=np.array(sched.tokens, np.int32),
             positions=np.array(sched.positions, np.int32),
             iteration=sched.iteration,
+            span=span,
         )
+        if span > 1:
+            meta.span_tokens, meta.span_positions, meta.counts = \
+                _build_span_matrices(sched)
         self._meta[slot] = meta
         self.rebuilds += 1
         return meta
 
 
 class VersionedStaging:
-    """Two host-side staging buffer sets per batch size (v0 / v1)."""
+    """Two host-side staging buffer sets per batch shape (v0 / v1).
+
+    Pure-decode iterations stage flat [B] arrays; chunked iterations are
+    keyed additionally by span width C and stage [B, C] token/position
+    matrices plus per-seq counts.
+    """
 
     def __init__(self):
-        self._bufs: Dict[Tuple[int, int], Dict[str, np.ndarray]] = {}
+        self._bufs: Dict[Tuple[int, int, int], Dict[str, np.ndarray]] = {}
 
-    def buffers(self, version: int, batch: int) -> Dict[str, np.ndarray]:
-        key = (version & 1, batch)
+    def buffers(self, version: int, batch: int,
+                span: int = 1) -> Dict[str, np.ndarray]:
+        key = (version & 1, batch, span)
         if key not in self._bufs:
-            self._bufs[key] = {
+            bufs = {
                 "tokens": np.zeros(batch, np.int32),
                 "positions": np.zeros(batch, np.int32),
                 "rows": np.zeros(batch, np.int32),
             }
+            if span > 1:
+                bufs["span_tokens"] = np.zeros((batch, span), np.int32)
+                bufs["span_positions"] = np.zeros((batch, span), np.int32)
+                bufs["counts"] = np.zeros(batch, np.int32)
+            self._bufs[key] = bufs
         return self._bufs[key]
 
 
@@ -106,6 +156,7 @@ class ModelInputDescriptor:
     batch: int
     is_prefill: bool
     sched: SchedulingOutput
+    span: int = 1
 
 
 class TokenSafeExecutor:
@@ -164,14 +215,15 @@ class TokenSafeExecutor:
                 sched = self._sched_q.pop(0)
                 version = (self.ci + 1) & 1
             t0 = time.monotonic()
-            bufs = self.staging.buffers(version, len(sched.seq_ids))
+            span = sched.exec_span
+            bufs = self.staging.buffers(version, len(sched.seq_ids), span)
             self.prepare_fn(sched, bufs)
             self.prep_time += time.monotonic() - t0
             with self._cv:
                 self.ci += 1
                 self._input_q.append(ModelInputDescriptor(
                     sched.iteration, version, len(sched.seq_ids),
-                    sched.is_prefill, sched))
+                    sched.is_prefill, sched, span))
                 self._cv.notify_all()
 
     def _device_loop(self):
@@ -187,7 +239,7 @@ class TokenSafeExecutor:
                 self._cv.notify_all()
             self.stall_time += time.monotonic() - t_wait
             t0 = time.monotonic()
-            bufs = self.staging.buffers(desc.version, desc.batch)
+            bufs = self.staging.buffers(desc.version, desc.batch, desc.span)
             out = self.execute_fn(desc, bufs)
             self.exec_time += time.monotonic() - t0
             with self._cv:
@@ -222,13 +274,14 @@ class SynchronousExecutor:
         self.stall_time = 0.0
 
     def run(self, sched: SchedulingOutput) -> Any:
-        bufs = self.staging.buffers(0, len(sched.seq_ids))
+        span = sched.exec_span
+        bufs = self.staging.buffers(0, len(sched.seq_ids), span)
         t0 = time.monotonic()
         self.prepare_fn(sched, bufs)
         t1 = time.monotonic()
         out = self.execute_fn(
             ModelInputDescriptor(sched.iteration, 0, len(sched.seq_ids),
-                                 sched.is_prefill, sched), bufs)
+                                 sched.is_prefill, sched, span), bufs)
         t2 = time.monotonic()
         self.prep_time += t1 - t0
         self.exec_time += t2 - t1

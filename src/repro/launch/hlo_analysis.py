@@ -102,11 +102,11 @@ def _split_operands(rest: str) -> List[str]:
     args = []
     cur = []
     for ch in rest:
-        if ch == "(":
+        if ch in "([{":
             depth += 1
             cur.append(ch)
-        elif ch == ")":
-            if depth == 0:
+        elif ch in ")]}":
+            if ch == ")" and depth == 0:
                 break
             depth -= 1
             cur.append(ch)
@@ -119,7 +119,12 @@ def _split_operands(rest: str) -> List[str]:
         args.append("".join(cur).strip())
     names = []
     for a in args:
-        m = re.match(r"%?([\w.\-]+)", a)
+        # newer XLA prints operands with inline types: 'f32[32,64]{1,0} %x';
+        # prefer the %-prefixed name, else strip the type prefix first
+        m = re.search(r"%([\w.\-]+)", a)
+        if m is None:
+            a = re.sub(r"^\w+\[[\d,]*\](\{[^}]*\})?\s*", "", a).strip() or a
+            m = re.match(r"([\w.\-]+)", a)
         if m:
             names.append(m.group(1))
     return names

@@ -21,12 +21,14 @@ from repro.runtime.data import ShareGPTLike
 
 def run(arch: str, *, engine: str = "sipipe", pp: int = 2, requests: int = 8,
         max_batch: int = 4, max_new_tokens: int = 16, max_seq_len: int = 256,
-        n_samplers: int = 2, seed: int = 0, verbose: bool = True) -> dict:
+        n_samplers: int = 2, chunk_tokens: int = 0, seed: int = 0,
+        verbose: bool = True) -> dict:
     cfg = get_config(arch + "-smoke" if not arch.endswith("-smoke") else arch)
     model = build_model(cfg, ShardCtx.single(), ModelOptions())
     params = model.init(jax.random.key(0))
     ecfg = EngineConfig(pp_degree=pp, max_batch=max_batch,
                         max_seq_len=max_seq_len, n_samplers=n_samplers,
+                        prefill_chunk_tokens=chunk_tokens or None,
                         seed=seed)
     eng = (SiPipeEngine if engine == "sipipe" else NaivePPEngine)(
         model, params, ecfg)
@@ -61,10 +63,13 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--samplers", type=int, default=2)
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="per-iteration token budget for chunked prefill "
+                         "(0 = monolithic whole-prompt prefill)")
     args = ap.parse_args()
     run(args.arch, engine=args.engine, pp=args.pp, requests=args.requests,
         max_batch=args.max_batch, max_new_tokens=args.max_new_tokens,
-        n_samplers=args.samplers)
+        n_samplers=args.samplers, chunk_tokens=args.chunk_tokens)
 
 
 if __name__ == "__main__":

@@ -233,6 +233,35 @@ def decode_attention(
     return out.reshape(b, hq * hd)
 
 
+def span_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    positions: jax.Array,
+) -> jax.Array:
+    """Multi-token attention over a KV cache for chunked prefill.
+
+    Generalizes :func:`decode_attention` to a span of C new tokens per
+    sequence with per-sequence positions: q [B, C, Hq, hd]; caches
+    [B, S, Kv, hd] (already containing the span's K/V); positions [B, C]
+    absolute position of each span token.  Causal validity is positional:
+    cache entry s is visible to span token (b, c) iff s <= positions[b, c]
+    — entries beyond the filled region are masked out, so chunk i attends
+    chunks 0..i plus itself and nothing else.  Output [B, C, Hq*hd].
+    """
+    b, c, hq, hd = q.shape
+    s, n_kv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // n_kv
+    qg = q.reshape(b, c, n_kv, g, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bcgqd,bsgd->bgqcs", qg, k_cache).astype(jnp.float32) * scale
+    valid = jnp.arange(s)[None, None, :] <= positions[:, :, None]   # [B, C, S]
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgqcs,bsgd->bcgqd", p.astype(q.dtype), v_cache)
+    return out.reshape(b, c, hq * hd)
+
+
 def cross_attention(
     q: jax.Array,
     k: jax.Array,

@@ -83,7 +83,7 @@ def run_stack(
         pack = (lambda t: jax.tree.map(lambda l: l[None], t)) if new_c is not None else (lambda t: None)
         return x, pack(new_c)
 
-    if ctx.mode == "decode":
+    if ctx.mode in ("decode", "chunk"):
         def body(xc, inp):
             gp, cg = inp
             xo, ncg = stack.apply(gp, xc, ctx, cg)

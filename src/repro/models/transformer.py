@@ -132,6 +132,34 @@ def self_attn_block(p, x, ctx: Ctx, cache, cfg: ArchConfig, *, causal=True,
         x = x + o @ p["wo"]
         return x, {"k": kc, "v": vc}
 
+    if ctx.mode == "chunk":
+        # chunked prefill: a span of C prompt tokens per sequence, with
+        # per-sequence absolute positions (mixed prefill/decode batches);
+        # the cache already holds all earlier chunks.  Padding rows are
+        # clamped duplicates of the last valid span entry (same token,
+        # same position), so duplicate cache scatters write identical
+        # values and the update stays deterministic.
+        if w:
+            raise NotImplementedError("chunked prefill with sliding-window "
+                                      "attention is not supported")
+        if "ks" in (cache or {}):
+            raise NotImplementedError("chunked prefill with int8 KV cache "
+                                      "is not supported")
+        h = rmsnorm(x, p["ln"], cfg.norm_eps)            # x [B, C, d]
+        q, k, v = _qkv(p, h, cfg, tp)                    # [B, C, H, hd]
+        if use_rope:
+            cos = ctx.rope_cos[:, :, None, :]            # [B, C, 1, hd/2]
+            sin = ctx.rope_sin[:, :, None, :]
+            q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+        b = x.shape[0]
+        rows = jnp.arange(b)[:, None]                    # [B, 1]
+        kc = cache["k"].at[rows, ctx.positions].set(k)
+        vc = cache["v"].at[rows, ctx.positions].set(v)
+        kc = shard.constrain(kc, _cache_axes(cfg, tp))
+        vc = shard.constrain(vc, _cache_axes(cfg, tp))
+        o = attn.span_attention(q, kc, vc, ctx.positions)
+        return x + o @ p["wo"], {"k": kc, "v": vc}
+
     h = rmsnorm(x, p["ln"], cfg.norm_eps)                # x [B, S, d]
     q, k, v = _qkv(p, h, cfg, tp)                        # [B, S, H, hd]
     if use_rope:

@@ -1,0 +1,200 @@
+"""Minimal vendored fallback for the ``hypothesis`` API surface this
+test suite uses, loaded by conftest.py only when the real package is
+absent.  It is NOT a property-based testing engine: it draws a fixed
+number of deterministic pseudo-random examples per test (seeded from the
+test's qualified name), which keeps the suite green and still exercises
+the properties across a spread of inputs.
+
+Supported surface:
+  given(**kwargs)                        keyword-style strategies only
+  settings(max_examples=, deadline=, ...)
+  strategies.integers(min, max)
+  strategies.floats(min, max)
+  strategies.booleans()
+  strategies.sampled_from(seq)
+  strategies.lists(elem, min_size=, max_size=)
+  strategies.tuples(*elems)
+
+On a failing example the draw is attached to the exception message so
+the failure is reproducible (seeds are stable across runs).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rnd: fn(self._draw(rnd)))
+
+    def filter(self, pred, _tries: int = 100):
+        def draw(rnd):
+            for _ in range(_tries):
+                v = self._draw(rnd)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+
+        return SearchStrategy(draw)
+
+
+def integers(min_value=-(2 ** 31), max_value=2 ** 31 - 1) -> SearchStrategy:
+    lo, hi = int(min_value), int(max_value)
+    # bias toward the boundaries: they are where invariants break
+    def draw(rnd):
+        r = rnd.random()
+        if r < 0.10:
+            return lo
+        if r < 0.20:
+            return hi
+        return rnd.randint(lo, hi)
+
+    return SearchStrategy(draw)
+
+
+def floats(min_value=0.0, max_value=1.0, **_) -> SearchStrategy:
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rnd):
+        r = rnd.random()
+        if r < 0.10:
+            return lo
+        if r < 0.20:
+            return hi
+        return lo + (hi - lo) * rnd.random()
+
+    return SearchStrategy(draw)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.random() < 0.5)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elems = list(elements)
+    if not elems:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return SearchStrategy(lambda rnd: elems[rnd.randrange(len(elems))])
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int = 10, **_) -> SearchStrategy:
+    def draw(rnd):
+        n = rnd.randint(min_size, max_size)
+        return [elements.example(rnd) for _ in range(n)]
+
+    return SearchStrategy(draw)
+
+
+def tuples(*elems: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: tuple(e.example(rnd) for e in elems))
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: value)
+
+
+def one_of(*strategies) -> SearchStrategy:
+    opts = list(strategies)
+    return SearchStrategy(lambda rnd: opts[rnd.randrange(len(opts))].example(rnd))
+
+
+def _stable_seed(fn) -> int:
+    name = f"{getattr(fn, '__module__', '')}.{getattr(fn, '__qualname__', fn)}"
+    return zlib.crc32(name.encode())
+
+
+def given(*gargs, **gkwargs):
+    if gargs:
+        raise TypeError("shim supports keyword-style given(...) only")
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", DEFAULT_MAX_EXAMPLES)
+            rnd = random.Random(_stable_seed(fn))
+            for i in range(n):
+                drawn = {k: s.example(rnd) for k, s in gkwargs.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except _Unsatisfied:
+                    continue  # assume() rejected this example
+                except Exception as e:  # attach the falsifying example
+                    e.args = (f"falsifying example #{i}: {drawn!r} -> "
+                              f"{e.args[0] if e.args else e!r}",) + e.args[1:]
+                    raise
+
+        # hide the drawn parameters from pytest's fixture resolution:
+        # expose only the non-strategy parameters (fixtures) in the
+        # signature, and drop __wrapped__ so introspection stops here
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in gkwargs])
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    def decorate(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+class HealthCheck:  # referenced by some suites via settings(suppress_health_check=…)
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+
+
+def assume(condition) -> bool:
+    """True-path passthrough; failing assumptions just skip the example."""
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+# Module object that mirrors ``hypothesis.strategies`` for
+# ``from hypothesis import strategies as st`` / ``import hypothesis.strategies``.
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in ("integers", "floats", "booleans", "sampled_from", "lists",
+              "tuples", "just", "one_of", "SearchStrategy"):
+    setattr(strategies, _name, globals()[_name])
+
+
+def install() -> None:
+    """Register this shim as ``hypothesis`` in sys.modules."""
+    mod = sys.modules.get("hypothesis")
+    if mod is not None and getattr(mod, "__shim__", False):
+        return
+    shim = types.ModuleType("hypothesis")
+    shim.__shim__ = True
+    shim.given = given
+    shim.settings = settings
+    shim.assume = assume
+    shim.HealthCheck = HealthCheck
+    shim.strategies = strategies
+    sys.modules["hypothesis"] = shim
+    sys.modules["hypothesis.strategies"] = strategies

@@ -7,6 +7,17 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# The container may lack `hypothesis`; fall back to the minimal vendored
+# shim so property-style tests still collect and run (deterministic
+# pseudo-random examples instead of real shrinking search).
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_shim
+
+    _hypothesis_shim.install()
+
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)

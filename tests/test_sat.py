@@ -83,3 +83,87 @@ def test_prealloc_buffers_are_reused():
     o2 = ch.recv()
     # steady state writes into the same pre-posted buffer (zero-alloc)
     assert o1["hidden"] is o2["hidden"]
+
+
+# ---------------------------------------------------------------------------
+# Steady-state equivalence with the structure-unaware baseline
+# ---------------------------------------------------------------------------
+
+def _assert_same_payload(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        assert a[k].dtype == b[k].dtype
+        assert a[k].shape == b[k].shape
+        assert a[k].tobytes() == b[k].tobytes()
+
+
+def test_aware_matches_unaware_across_batch_changes():
+    """SAT must be a pure transport optimization: across batch-size
+    changes its steady-state output matches the unaware channel
+    byte-for-byte."""
+    aware, unaware = StructureAwareChannel(), StructureUnawareChannel()
+    for i, b in enumerate((4, 4, 2, 6, 2, 8)):
+        t = _tensors(b, seed=100 + i)
+        aware.send(t)
+        unaware.send(t)
+        _assert_same_payload(aware.recv(), unaware.recv())
+    assert aware.captures == 1          # batch dim alone never recaptures
+
+
+def test_aware_matches_unaware_across_structure_recaptures():
+    """Structure changes (new keys, dtype flips) force a recapture round;
+    payloads must still match the baseline byte-for-byte through it."""
+    aware, unaware = StructureAwareChannel(), StructureUnawareChannel()
+    payloads = [
+        _tensors(4, seed=0),
+        _tensors(3, seed=1),
+        {**_tensors(3, seed=2), "extra": np.arange(6, dtype=np.int32).reshape(3, 2)},
+        {**_tensors(5, seed=3), "extra": np.arange(10, dtype=np.int32).reshape(5, 2)},
+        _tensors(4, seed=4),            # key removed -> recapture again
+        _tensors(2, seed=5),
+    ]
+    for t in payloads:
+        aware.send(t)
+        unaware.send(t)
+        _assert_same_payload(aware.recv(), unaware.recv())
+    assert aware.captures == 3
+
+
+def test_aware_single_round_in_steady_state_after_recapture():
+    ch = StructureAwareChannel()
+    ch.send(_tensors(4))
+    ch.recv()
+    before = ch.wire.rounds
+    for i in range(3):
+        ch.send(_tensors(4, seed=10 + i))
+        ch.recv()
+    assert ch.wire.rounds - before == 3  # one round per steady iteration
+
+
+def test_prealloc_invalidated_on_recapture():
+    """Same batch size, different trailing dims across a recapture: the
+    receiver must not reuse buffers preallocated under the old structure
+    (chunked-prefill phase boundaries hit exactly this)."""
+    ch = StructureAwareChannel()
+    wide = {"hidden": np.ones((1, 6, 64), np.float32)}
+    flat = {"hidden": np.full((1, 64), 2.0, np.float32)}
+    for payload in (wide, wide, flat, flat, wide, flat):
+        ch.send(payload)
+        out = ch.recv()
+        assert out["hidden"].shape == payload["hidden"].shape
+        np.testing.assert_array_equal(out["hidden"], payload["hidden"])
+    assert ch.captures == 4
+
+
+def test_producer_running_ahead_of_consumer():
+    """A pipeline producer can send iteration n+1 (even a recapture)
+    before the consumer reads iteration n; the single-wire FIFO must
+    keep parsing aligned."""
+    ch = StructureAwareChannel()
+    payloads = [_tensors(4, seed=0), _tensors(4, seed=1),
+                {"other": np.arange(8, dtype=np.float32)},   # recapture
+                _tensors(2, seed=2)]                          # recapture back
+    for t in payloads:
+        ch.send(t)          # all sends queued before any recv
+    for t in payloads:
+        _assert_same_payload(ch.recv(), t)

@@ -94,3 +94,119 @@ def test_property_no_seq_in_two_slots_and_all_finish(n, max_batch, p, rounds, se
         assert len(s.finished) == n
         for seq in s.finished:
             assert len(seq.output_ids) == seq.params.max_new_tokens
+
+
+# ---------------------------------------------------------------------------
+# Chunked-prefill invariants (property-based)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 10),
+    max_batch=st.integers(1, 4),
+    p=st.integers(1, 3),
+    budget=st.integers(2, 24),
+    seed=st.integers(0, 99),
+)
+def test_property_chunk_accounting_and_budget(n, max_batch, p, budget, seed):
+    """Under random prompt lengths / finish times: (a) total tokens per
+    iteration never exceed the (clamped) budget; (b) the prefill chunks of
+    every sequence tile [0, prompt_len) exactly, in order."""
+    rng = np.random.default_rng(seed)
+    s = Scheduler(max_batch=max_batch, pp_degree=p, max_seq_len=512,
+                  token_budget=budget)
+    plens = {}
+    for i in range(n):
+        plens[i] = int(rng.integers(1, 60))
+        s.add_request(Sequence(i, list(range(1, plens[i] + 1)), SamplingParams(
+            greedy=True, max_new_tokens=int(rng.integers(1, 4)))))
+    chunks = {i: [] for i in range(n)}
+    for it in range(3000):
+        o = s.schedule(it)
+        if o is None:
+            if not s.has_work:
+                break
+            continue
+        assert o.total_tokens <= s.token_budget
+        assert len(o.seq_ids) <= max_batch
+        for sid, (off, c) in zip(o.seq_ids, o.spans):
+            assert c >= 1
+            if off + c <= plens[sid]:          # prefill chunk
+                chunks[sid].append((off, c))
+        ids = [o.seq_ids[i] for i in o.sample_indices()]
+        s.complete(it, ids, rng.integers(3, 50, len(ids)).astype(np.int32))
+    assert not s.has_work
+    for i in range(n):
+        # chunks tile the prompt: contiguous, in-order, summing to len
+        off = 0
+        for o_, c_ in chunks[i]:
+            assert o_ == off
+            off += c_
+        assert off == plens[i]
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 8),
+    max_batch=st.integers(2, 4),
+    p=st.integers(1, 3),
+    budget=st.integers(4, 24),
+    seed=st.integers(0, 99),
+)
+def test_property_slot_stability_in_steady_state(n, max_batch, p, budget, seed):
+    """Once admission and prefill settle (no admits/finishes), iterations
+    n and n+p of a slot carry the same sequence set — the §5.1 batch
+    stability the TSEM replicas and column-wise sampler rely on."""
+    rng = np.random.default_rng(seed)
+    s = Scheduler(max_batch=max_batch, pp_degree=p, max_seq_len=4096,
+                  token_budget=budget)
+    for i in range(n):
+        s.add_request(Sequence(i, list(range(1, int(rng.integers(1, 40)) + 1)),
+                               SamplingParams(greedy=True,
+                                              max_new_tokens=10 ** 6)))
+    it = 0
+    # settle: run until admission stalls (slots full or queue empty) and
+    # every running sequence has completed its prefill
+    while it < 500:
+        o = s.schedule(it)
+        if o is not None:
+            ids = [o.seq_ids[i] for i in o.sample_indices()]
+            s.complete(it, ids, np.full(len(ids), 7, np.int32))
+        it += 1
+        admission_stalled = (not s.waiting or
+                             all(len(m) >= max_batch for m in s.slot_members))
+        if admission_stalled and all(s.seqs[sid].prefill_done
+                                     for m in s.slot_members for sid in m):
+            break
+    # steady state: two consecutive rounds of each slot must match
+    # (slots may be empty when there are fewer sequences than slots)
+    first = {}
+    for k in range(2 * p):
+        o = s.schedule(it + k)
+        if o is None:
+            assert not s.slot_members[(it + k) % p]
+            continue
+        if o.slot in first:
+            assert o.seq_ids == first[o.slot]
+            assert o.max_span == 1
+        else:
+            first[o.slot] = list(o.seq_ids)
+        ids = [o.seq_ids[i] for i in o.sample_indices()]
+        s.complete(it + k, ids, np.full(len(ids), 7, np.int32))
+
+
+def test_budget_is_clamped_above_max_batch():
+    s = Scheduler(max_batch=4, pp_degree=1, max_seq_len=64, token_budget=2)
+    assert s.token_budget == 5          # max_batch + 1: prefill can progress
+    assert s.chunked
+    assert Scheduler(max_batch=4, pp_degree=1, max_seq_len=64).token_budget is None
+
+
+def test_overlong_prompt_rejected_up_front():
+    s = Scheduler(max_batch=2, pp_degree=1, max_seq_len=16, token_budget=8)
+    with pytest.raises(ValueError, match="does not fit"):
+        s.add_request(Sequence(0, list(range(1, 17)),
+                               SamplingParams(greedy=True, max_new_tokens=2)))
+    # one below the limit is admissible
+    s.add_request(Sequence(1, list(range(1, 16)),
+                           SamplingParams(greedy=True, max_new_tokens=1)))
