@@ -58,7 +58,7 @@ class PPStage:
     params: Any
     prefill_fn: Callable                 # (params, x_or_tokens, pos0) -> (x|logits, cache)
     decode_fn: Callable                  # (params, cache, x_or_tokens, positions) -> (x|logits, cache)
-    chunk_fn: Callable                   # (params, cache, x_or_tokens, positions[B,C], last_idx) -> (x|logits, cache)
+    chunk_fn: Callable                   # (params, cache, x_or_tokens[T], positions[T], seq_idx[T], span_starts[B], last_idx[B], n_valid) -> (x|logits, cache)
     init_cache: Callable                 # (rows, s_max) -> cache tree
 
     @property
@@ -122,20 +122,25 @@ def _make_stage(model: Model, idx: int, p: int, bounds, sp) -> PPStage:
             return model.lm_head(params, x), cache
         return x, cache
 
-    def chunk_fn(params, cache, x_or_tokens, positions, last_idx):
-        """Mixed chunked-prefill/decode step: a span of C tokens per
-        sequence with per-seq absolute positions [B, C] (decode steps are
-        width-1 spans; padding entries duplicate the last valid element).
-        ``last_idx`` [B] selects the span element whose logits feed the
-        sampler (the true last prompt/decode token, not the pad tail)."""
-        ctx = model.make_ctx("chunk", positions)
+    def chunk_fn(params, cache, x_or_tokens, positions, seq_idx, span_starts,
+                 last_idx, n_valid):
+        """Mixed chunked-prefill/decode step over the packed ragged layout:
+        the batch's valid span tokens concatenated into flat [T] vectors
+        (T = the power-of-two bucket; padding duplicates the last valid
+        token).  ``seq_idx`` [T] maps each token to its batch row,
+        ``span_starts`` [B] are the per-row span offsets (rolling-window
+        attention), ``last_idx`` [B] the packed index of each row's final
+        token whose logits feed the sampler, and ``n_valid`` the unpadded
+        token count.  Embedding, RoPE, attention, cache scatter and the
+        FFN all run at [T] — no padded [B, C] compute anywhere."""
+        ctx = model.make_ctx("chunk", positions, seq_idx=seq_idx,
+                             span_starts=span_starts, n_valid=n_valid)
         x = model.embed_tokens({"embed": params["embed"]}, x_or_tokens) if first \
             else x_or_tokens
         x, cache = run_stack(sub, params["blocks"], x, ctx, cache_stacked=cache,
                              remat=False)
         if last:
-            b = x.shape[0]
-            return model.lm_head(params, x[jnp.arange(b), last_idx]), cache
+            return model.lm_head(params, x[last_idx]), cache
         return x, cache
 
     def init_cache(rows, s_max):
@@ -207,25 +212,38 @@ class _StageWorker:
         np.copyto(bufs["tokens"], meta.tokens)
         np.copyto(bufs["positions"], meta.positions)
         np.copyto(bufs["rows"], meta.rows)
-        if meta.span > 1:
-            np.copyto(bufs["span_tokens"], meta.span_tokens)
-            np.copyto(bufs["span_positions"], meta.span_positions)
-            np.copyto(bufs["counts"], meta.counts)
+        if meta.width > 1:
+            np.copyto(bufs["pack_tokens"], meta.pack_tokens)
+            np.copyto(bufs["pack_positions"], meta.pack_positions)
+            np.copyto(bufs["pack_seq"], meta.pack_seq)
+            np.copyto(bufs["last_index"], meta.last_index)
+            bufs["n_valid"][0] = meta.n_valid
+        # SAT: pre-post this stage's incoming receive while the producer is
+        # still in its forward — the leading dim (packed bucket or batch
+        # size) is known from the scheduling output alone (§5.3)
+        if not self.stage.is_first:
+            ch = self.engine.stages[self.stage.index - 1].out_channel
+            if isinstance(ch, StructureAwareChannel):
+                ch.post_recv(meta.width if meta.width > 1
+                             else len(sched.seq_ids))
 
     # -- device executor side -----------------------------------------------
     def _execute(self, desc: ModelInputDescriptor, bufs: Dict[str, np.ndarray]):
         t0 = time.monotonic()
         stage, eng = self.stage, self.engine
         rows = jnp.asarray(bufs["rows"])
-        x_in = ((jnp.asarray(bufs["span_tokens"]) if desc.span > 1
+        x_in = ((jnp.asarray(bufs["pack_tokens"]) if desc.width > 1
                  else jnp.asarray(bufs["tokens"])) if stage.is_first
                 else eng.recv_hidden(stage.index, desc.iteration))
         cache_rows = jax.tree.map(lambda c: c[:, rows], self.cache)
-        if desc.span > 1:
+        if desc.width > 1:
             out, new_cache = stage.chunk_fn(
                 stage.params, cache_rows, x_in,
-                jnp.asarray(bufs["span_positions"]),
-                jnp.asarray(bufs["counts"] - 1))
+                jnp.asarray(bufs["pack_positions"]),
+                jnp.asarray(bufs["pack_seq"]),
+                jnp.asarray(bufs["positions"]),
+                jnp.asarray(bufs["last_index"]),
+                jnp.asarray(bufs["n_valid"])[0])
         else:
             out, new_cache = stage.decode_fn(
                 stage.params, cache_rows, x_in, jnp.asarray(bufs["positions"]))
@@ -280,6 +298,16 @@ class PPEngineBase:
         self.scheduler = Scheduler(max_batch=cfg.max_batch, pp_degree=cfg.pp_degree,
                                    max_seq_len=cfg.max_seq_len,
                                    token_budget=cfg.prefill_chunk_tokens)
+        if self.scheduler.chunked and self.arch.window and \
+                self.scheduler.token_budget > self.arch.window:
+            # rolling caches scatter one slot per span token (slot = pos % W);
+            # a chunk wider than the window would write conflicting values
+            # into the same slot (and its head would be outside the window
+            # anyway), so the clamped per-iteration budget must fit the window
+            raise ValueError(
+                f"prefill_chunk_tokens budget {self.scheduler.token_budget} "
+                f"exceeds the sliding window {self.arch.window}; chunks "
+                "must fit the rolling KV cache")
         self.seq_cache = SequenceCache(cfg.max_batch * cfg.pp_degree)
         self.stages = [
             _StageWorker(s, self)
@@ -335,17 +363,36 @@ class PPEngineBase:
         if logits.shape[0] == 0:       # nothing to sample this iteration
             self._on_sampled(sched, np.zeros(0, np.int32))
             return
+        eligible_ids = [sched.seq_ids[i] for i in eligible]
+        out = self._pool_sample(sched.iteration, sched.slot, eligible_ids,
+                                logits, self._params_for(sched))
+        self.sample_time += time.monotonic() - t0
+        self._on_sampled(sched, out)
+
+    def _pool_sample(self, iteration: int, slot: int, seq_ids: List[int],
+                     logits: np.ndarray, sp: SamplingParams) -> np.ndarray:
+        """Fan a batch's logits out over the sampler pool.
+
+        Columns are partitioned by ``seq_id % n_samplers`` — a pure
+        function of the sequence, not its batch column — so a sequence's
+        incremental penalty state (freq/pres/output history) always lives
+        in the same sampler instance, surviving batch recomposition and
+        chunked-prefill phase changes (the per-sequence carryover in
+        ColumnWiseSampler._replica is per instance).
+        """
         k = self.cfg.n_samplers
         b = logits.shape[0]
-        eligible_ids = [sched.seq_ids[i] for i in eligible]
-        sp = self._params_for(sched)
 
         def run(j):
-            cols = np.arange(j, b, k)
-            ids = self.samplers[j].sample(
-                logits[cols], sp, slot=sched.slot,
-                seq_ids=[eligible_ids[c] for c in cols])
-            self.bic_o.put(sched.iteration, j, (cols, ids))
+            cols = np.array([i for i, sid in enumerate(seq_ids)
+                             if sid % k == j], np.int64)
+            if cols.size:
+                ids = self.samplers[j].sample(
+                    logits[cols], sp, slot=slot,
+                    seq_ids=[seq_ids[c] for c in cols])
+            else:
+                ids = np.zeros(0, np.int32)
+            self.bic_o.put(iteration, j, (cols, ids))
 
         threads = [threading.Thread(target=run, args=(j,)) for j in range(k)]
         for t in threads:
@@ -353,10 +400,9 @@ class PPEngineBase:
         for t in threads:
             t.join()
         out = np.zeros(b, np.int32)
-        for cols, ids in self.bic_o.get(sched.iteration):
+        for cols, ids in self.bic_o.get(iteration):
             out[cols] = ids
-        self.sample_time += time.monotonic() - t0
-        self._on_sampled(sched, out)
+        return out
 
     def _params_for(self, sched: SchedulingOutput) -> SamplingParams:
         return self.scheduler.seqs[sched.seq_ids[0]].params
@@ -371,10 +417,9 @@ class PPEngineBase:
             sched.iteration, sampled_ids, token_ids)
         for sid in finished:
             self.seq_cache.release(sid)
-        mixed = sched.needs_sample is not None and not all(sched.needs_sample)
-        for s in self.samplers:
-            if (finished or mixed) and isinstance(s, ColumnWiseSampler):
-                s.evict(sched.slot)  # batch recomposition -> replica rebuild
+        # batch recomposition (finishes, chunk phases) needs no sampler
+        # eviction: ColumnWiseSampler carries per-sequence penalty columns
+        # across replica rebuilds, keyed by seq id (§5.1 + chunked prefill)
         for sid in sampled_ids:
             if sid not in finished:
                 self.seq_cache.advance(sid)
@@ -408,13 +453,12 @@ class PPEngineBase:
             x_np = w.run_prefill(seqs, x, 0, rows, last_idx)
             if not w.stage.is_last:
                 x = jnp.asarray(x_np, jnp.bfloat16)  # inter-stage hidden
-        # last stage output = logits at each sequence's final position
+        # last stage output = logits at each sequence's final position;
+        # sample through the pool partition so each sequence's penalty
+        # state starts in (and stays with) its own sampler instance
         logits = np.asarray(x_np, np.float32)
-        sp = seqs[0].params
-        sampler = self.samplers[0]
-        ids = sampler.sample(logits, sp, slot=sched.slot, seq_ids=new) \
-            if isinstance(sampler, ColumnWiseSampler) else \
-            sampler.sample(logits, sp, slot=sched.slot)
+        ids = self._pool_sample(sched.iteration, sched.slot, new, logits,
+                                seqs[0].params)
         self.scheduler.complete(sched.iteration, new, ids)
         for sid in new:
             if self.scheduler.seqs[sid].status.name != "FINISHED":

@@ -72,21 +72,47 @@ class ColumnWiseSampler:
     # ---- replica management ---------------------------------------------
     def _replica(self, slot: int, batch: int, seq_ids: Sequence[int],
                  layout: str) -> _Replica:
+        """Fetch (or rebuild) the slot's penalty replica.
+
+        Rebuilds carry per-sequence state over: when the sequence set
+        shrinks, grows or is reordered (mixed-batch evictions, chunked
+        prefill phases), every sequence still present keeps its freq /
+        pres / output columns — only departed sequences are dropped and
+        new ones start from zero.  This is what makes chunked prefill
+        compose exactly with frequency/presence penalties.
+        """
         r = self._replicas.get(slot)
         ids = list(seq_ids)
-        if (r is None or r.out_len.shape[0] != batch or r.seq_ids != ids
-                or r.layout != layout):
-            shape = (self.v, batch) if layout == "cw" else (batch, self.v)
-            r = _Replica(
-                layout=layout,
-                freq=np.zeros(shape, np.float32),
-                pres=np.zeros(shape, np.float32),
-                out=np.zeros((self.max_len, batch), np.int32),
-                out_len=np.zeros(batch, np.int32),
-                seq_ids=ids,
-            )
-            self._replicas[slot] = r
-        return r
+        if (r is not None and r.out_len.shape[0] == batch
+                and r.seq_ids == ids and r.layout == layout):
+            return r
+        shape = (self.v, batch) if layout == "cw" else (batch, self.v)
+        new = _Replica(
+            layout=layout,
+            freq=np.zeros(shape, np.float32),
+            pres=np.zeros(shape, np.float32),
+            out=np.zeros((self.max_len, batch), np.int32),
+            out_len=np.zeros(batch, np.int32),
+            seq_ids=ids,
+        )
+        if r is not None:
+            old_col = {sid: j for j, sid in enumerate(r.seq_ids)}
+            for col, sid in enumerate(ids):
+                j = old_col.get(sid)
+                if j is None:
+                    continue
+                src_f = r.freq[:, j] if r.layout == "cw" else r.freq[j]
+                src_p = r.pres[:, j] if r.layout == "cw" else r.pres[j]
+                if layout == "cw":
+                    new.freq[:, col] = src_f
+                    new.pres[:, col] = src_p
+                else:
+                    new.freq[col] = src_f
+                    new.pres[col] = src_p
+                new.out[:, col] = r.out[:, j]
+                new.out_len[col] = r.out_len[j]
+        self._replicas[slot] = new
+        return new
 
     def reset(self):
         self._replicas.clear()
@@ -129,6 +155,10 @@ class ColumnWiseSampler:
         return ids
 
     def _sample_cw(self, zt, params, slot, seq_ids):
+        # np.asarray does NOT copy an already-float32 input, and both the
+        # penalty ops below and _draw mutate in place — copy so the
+        # caller's logits buffer (shipped over BIC-L) survives intact
+        zt = np.array(zt, np.float32, copy=True)
         v, b = zt.shape
         assert v == self.v, (v, self.v)
         r = self._replica(slot % self.p, b, seq_ids or list(range(b)), "cw")

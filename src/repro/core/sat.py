@@ -151,7 +151,13 @@ class StructureAwareChannel:
     # -- receiver --------------------------------------------------------------
     def post_recv(self, batch: int):
         """Pre-allocate target buffers from the captured structure + the
-        scheduling output's batch size (the only dynamic factor)."""
+        payload's leading dim, the only dynamic factor: the batch size for
+        decode hiddens [B, d], the packed bucket width for chunk hiddens
+        [T, d].  Buffers are kept per leading-dim key, so revisiting a
+        (batch, bucket) allocates nothing and span-width changes never
+        cost a recapture round — the engine's stage workers call this
+        during input preparation, before the producer finishes its
+        forward (the async-irecv analogue)."""
         if self._sig is None:
             return
         key = (batch,)

@@ -24,6 +24,11 @@ carries a near-constant token count:
 With ``token_budget=None`` the scheduler behaves exactly like the seed
 monolithic path (``is_prefill`` batches handled by the engine's
 ``_admit_and_prefill``).
+
+Chunk-carrying iterations are executed over a *packed ragged* layout —
+the batch's valid span tokens concatenated into flat [T] vectors and
+bucketed to a small set of power-of-two widths (``packed_layout()`` /
+``packed_width``) — see docs/scheduling.md.
 """
 from __future__ import annotations
 
@@ -36,6 +41,20 @@ import numpy as np
 
 from repro.core.sampling_params import SamplingParams
 from repro.core.sequence import SeqStatus, Sequence
+
+
+BUCKET_FLOOR = 8
+
+
+def bucket_width(n_tokens: int) -> int:
+    """Packed execution width for ``n_tokens`` valid span tokens: the
+    smallest power of two >= n_tokens (floor 8).  Bucketing the ragged
+    total to a small set of widths means XLA compiles one chunk step per
+    (bucket, batch) pair instead of one per distinct token count."""
+    b = BUCKET_FLOOR
+    while b < n_tokens:
+        b <<= 1
+    return b
 
 
 @dataclasses.dataclass
@@ -55,7 +74,6 @@ class SchedulingOutput:
     spans: Optional[List[Tuple[int, int]]] = None   # per-seq (offset, n_tokens)
     span_tokens: Optional[List[List[int]]] = None   # input ids for each span
     needs_sample: Optional[List[bool]] = None       # span reaches a sampling point
-    pad_span: Optional[int] = None                  # fixed [B, C] width (budget)
 
     @property
     def max_span(self) -> int:
@@ -65,20 +83,40 @@ class SchedulingOutput:
         return max(c for _, c in self.spans)
 
     @property
-    def exec_span(self) -> int:
-        """Staged span width: chunk-carrying batches pad to ``pad_span``
-        (the token budget) so XLA compiles one chunk step per batch size
-        instead of one per distinct chunk width; pure decode stays 1."""
-        s = self.max_span
-        if s == 1:
-            return 1
-        return max(s, self.pad_span or 0)
-
-    @property
     def total_tokens(self) -> int:
         if not self.spans:
             return len(self.seq_ids)
         return sum(c for _, c in self.spans)
+
+    @property
+    def packed_width(self) -> int:
+        """Execution width of the packed ragged token layout: 1 for pure
+        decode (the flat [B] fast path), else the power-of-two bucket that
+        ``total_tokens`` rounds up to (see :func:`bucket_width`)."""
+        if self.max_span == 1:
+            return 1
+        return bucket_width(self.total_tokens)
+
+    def packed_layout(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                     np.ndarray]:
+        """The packed [T] token layout (T = total_tokens, unpadded).
+
+        Returns ``(tokens, positions, seq_idx, last_index)`` int32 arrays:
+        every valid span token exactly once, batch columns concatenated in
+        order, positions monotone within each column; ``last_index[i]`` is
+        the packed index of column i's final (sampling) token.
+        """
+        toks: List[int] = []
+        pos: List[int] = []
+        seq: List[int] = []
+        last = np.zeros(len(self.seq_ids), np.int32)
+        for i, ((off, n), ids) in enumerate(zip(self.spans, self.span_tokens)):
+            toks.extend(ids)
+            pos.extend(range(off, off + n))
+            seq.extend([i] * n)
+            last[i] = len(toks) - 1
+        return (np.asarray(toks, np.int32), np.asarray(pos, np.int32),
+                np.asarray(seq, np.int32), last)
 
     def sample_indices(self) -> List[int]:
         """Batch columns whose logits must be sampled this iteration."""
@@ -232,7 +270,6 @@ class Scheduler:
             spans=spans,
             span_tokens=span_tokens,
             needs_sample=needs_sample,
-            pad_span=self.token_budget,
         )
         self.iteration = max(self.iteration, it + 1)
         return out

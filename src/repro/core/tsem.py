@@ -37,12 +37,14 @@ from repro.core.scheduler import SchedulingOutput
 class BatchMetadata:
     """Preprocessed CPU tensors for one microbatch (one TSEM replica).
 
-    Pure-decode batches use the flat [B] layout (``span == 1``).  Mixed
-    chunked-prefill batches additionally carry padded [B, C] token and
-    position matrices plus per-seq span counts; padding entries are
-    *clamped duplicates of the last valid span element* (same token, same
-    position) so downstream cache scatters stay deterministic without a
-    validity mask.
+    Pure-decode batches use the flat [B] layout (``width == 1``).  Mixed
+    chunked-prefill batches carry the *packed ragged* layout instead of
+    padded [B, C] matrices: flat [W] token/position/seq-index vectors
+    (W = the power-of-two bucket ``SchedulingOutput.packed_width``), so
+    a mostly-decode batch with one chunk does sum(T_i) work, not B x C.
+    Padding entries duplicate the last valid packed element (same token,
+    position AND batch row), so downstream cache scatters write identical
+    values at duplicate indices and stay deterministic without a mask.
     """
 
     seq_ids: List[int]
@@ -50,10 +52,12 @@ class BatchMetadata:
     tokens: np.ndarray         # [B] first input token of each span
     positions: np.ndarray      # [B] span start positions
     iteration: int = -1
-    span: int = 1              # widest span in the batch (1 = pure decode)
-    span_tokens: Optional[np.ndarray] = None     # [B, C] int32
-    span_positions: Optional[np.ndarray] = None  # [B, C] int32
-    counts: Optional[np.ndarray] = None          # [B] valid tokens per seq
+    width: int = 1             # packed bucket width (1 = pure decode)
+    n_valid: int = 0           # valid packed tokens (T <= width)
+    pack_tokens: Optional[np.ndarray] = None     # [W] int32
+    pack_positions: Optional[np.ndarray] = None  # [W] int32
+    pack_seq: Optional[np.ndarray] = None        # [W] batch column per token
+    last_index: Optional[np.ndarray] = None      # [B] packed idx of last valid
 
     def advance_inplace(self, sched: SchedulingOutput, rows: np.ndarray):
         """Incremental update: same sequence set, next iteration."""
@@ -63,26 +67,26 @@ class BatchMetadata:
         self.iteration = sched.iteration
 
 
-def _build_span_matrices(sched: SchedulingOutput):
-    """Padded [B, C] matrices with clamp-to-last-valid padding."""
-    b = len(sched.seq_ids)
-    c = sched.exec_span
-    tok = np.zeros((b, c), np.int32)
-    pos = np.zeros((b, c), np.int32)
-    counts = np.zeros(b, np.int32)
-    for i, ((off, n), ids) in enumerate(zip(sched.spans, sched.span_tokens)):
-        idx = np.minimum(np.arange(c), n - 1)
-        tok[i] = np.asarray(ids, np.int32)[idx]
-        pos[i] = off + idx
-        counts[i] = n
-    return tok, pos, counts
+def _build_packed(sched: SchedulingOutput):
+    """Packed [W] vectors, padded to the bucket with last-valid duplicates."""
+    tok, pos, seq, last = sched.packed_layout()
+    t = tok.shape[0]
+    w = sched.packed_width
+
+    def pad(a):
+        out = np.empty(w, np.int32)
+        out[:t] = a
+        out[t:] = a[-1]
+        return out
+
+    return pad(tok), pad(pos), pad(seq), last, t
 
 
 class BatchMetadataCache:
     """p versions of BatchMetadata, indexed by iteration %% p.
 
     The incremental-update fast path applies only when both the cached
-    replica and the incoming batch are pure decode (span 1) with the same
+    replica and the incoming batch are pure decode (width 1) with the same
     sequence set; iterations carrying prefill chunks rebuild, since their
     per-seq token spans change between n and n+p as prefill progresses.
     """
@@ -96,9 +100,9 @@ class BatchMetadataCache:
     def update(self, sched: SchedulingOutput, rows: np.ndarray) -> BatchMetadata:
         slot = sched.iteration % self.p
         meta = self._meta[slot]
-        span = sched.exec_span
+        width = sched.packed_width
         if (meta is not None and meta.seq_ids == sched.seq_ids
-                and meta.span == 1 and span == 1):
+                and meta.width == 1 and width == 1):
             meta.advance_inplace(sched, rows)
             self.incremental_hits += 1
             return meta
@@ -108,11 +112,11 @@ class BatchMetadataCache:
             tokens=np.array(sched.tokens, np.int32),
             positions=np.array(sched.positions, np.int32),
             iteration=sched.iteration,
-            span=span,
+            width=width,
         )
-        if span > 1:
-            meta.span_tokens, meta.span_positions, meta.counts = \
-                _build_span_matrices(sched)
+        if width > 1:
+            (meta.pack_tokens, meta.pack_positions, meta.pack_seq,
+             meta.last_index, meta.n_valid) = _build_packed(sched)
         self._meta[slot] = meta
         self.rebuilds += 1
         return meta
@@ -122,26 +126,28 @@ class VersionedStaging:
     """Two host-side staging buffer sets per batch shape (v0 / v1).
 
     Pure-decode iterations stage flat [B] arrays; chunked iterations are
-    keyed additionally by span width C and stage [B, C] token/position
-    matrices plus per-seq counts.
+    keyed additionally by the packed bucket width W and stage flat [W]
+    token/position/seq-index vectors plus the [B] last-valid indices.
     """
 
     def __init__(self):
         self._bufs: Dict[Tuple[int, int, int], Dict[str, np.ndarray]] = {}
 
     def buffers(self, version: int, batch: int,
-                span: int = 1) -> Dict[str, np.ndarray]:
-        key = (version & 1, batch, span)
+                width: int = 1) -> Dict[str, np.ndarray]:
+        key = (version & 1, batch, width)
         if key not in self._bufs:
             bufs = {
                 "tokens": np.zeros(batch, np.int32),
                 "positions": np.zeros(batch, np.int32),
                 "rows": np.zeros(batch, np.int32),
             }
-            if span > 1:
-                bufs["span_tokens"] = np.zeros((batch, span), np.int32)
-                bufs["span_positions"] = np.zeros((batch, span), np.int32)
-                bufs["counts"] = np.zeros(batch, np.int32)
+            if width > 1:
+                bufs["pack_tokens"] = np.zeros(width, np.int32)
+                bufs["pack_positions"] = np.zeros(width, np.int32)
+                bufs["pack_seq"] = np.zeros(width, np.int32)
+                bufs["last_index"] = np.zeros(batch, np.int32)
+                bufs["n_valid"] = np.zeros(1, np.int32)
             self._bufs[key] = bufs
         return self._bufs[key]
 
@@ -156,7 +162,7 @@ class ModelInputDescriptor:
     batch: int
     is_prefill: bool
     sched: SchedulingOutput
-    span: int = 1
+    width: int = 1             # packed bucket width (1 = flat decode)
 
 
 class TokenSafeExecutor:
@@ -215,15 +221,15 @@ class TokenSafeExecutor:
                 sched = self._sched_q.pop(0)
                 version = (self.ci + 1) & 1
             t0 = time.monotonic()
-            span = sched.exec_span
-            bufs = self.staging.buffers(version, len(sched.seq_ids), span)
+            width = sched.packed_width
+            bufs = self.staging.buffers(version, len(sched.seq_ids), width)
             self.prepare_fn(sched, bufs)
             self.prep_time += time.monotonic() - t0
             with self._cv:
                 self.ci += 1
                 self._input_q.append(ModelInputDescriptor(
                     sched.iteration, version, len(sched.seq_ids),
-                    sched.is_prefill, sched, span))
+                    sched.is_prefill, sched, width))
                 self._cv.notify_all()
 
     def _device_loop(self):
@@ -239,7 +245,7 @@ class TokenSafeExecutor:
                 self._cv.notify_all()
             self.stall_time += time.monotonic() - t_wait
             t0 = time.monotonic()
-            bufs = self.staging.buffers(desc.version, desc.batch, desc.span)
+            bufs = self.staging.buffers(desc.version, desc.batch, desc.width)
             out = self.execute_fn(desc, bufs)
             self.exec_time += time.monotonic() - t0
             with self._cv:
@@ -274,14 +280,14 @@ class SynchronousExecutor:
         self.stall_time = 0.0
 
     def run(self, sched: SchedulingOutput) -> Any:
-        span = sched.exec_span
-        bufs = self.staging.buffers(0, len(sched.seq_ids), span)
+        width = sched.packed_width
+        bufs = self.staging.buffers(0, len(sched.seq_ids), width)
         t0 = time.monotonic()
         self.prepare_fn(sched, bufs)
         t1 = time.monotonic()
         out = self.execute_fn(
             ModelInputDescriptor(sched.iteration, 0, len(sched.seq_ids),
-                                 sched.is_prefill, sched, span), bufs)
+                                 sched.is_prefill, sched, width), bufs)
         t2 = time.monotonic()
         self.prep_time += t1 - t0
         self.exec_time += t2 - t1

@@ -6,4 +6,9 @@ shapes/dtypes and assert_allclose against the oracles in interpret mode.
 """
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
 from repro.kernels.decode_attention import decode_attention  # noqa: F401
+from repro.kernels.span_attention import (  # noqa: F401
+    span_attention,
+    span_attention_quant,
+    span_attention_rolling,
+)
 from repro.kernels.swiglu import swiglu  # noqa: F401

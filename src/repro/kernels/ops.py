@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.span_attention import span_attention as _span
 from repro.kernels.swiglu import swiglu as _swiglu
 from repro.kernels.rmsnorm_matmul import rmsnorm_matmul as _rmsnorm_mm
 
@@ -40,6 +41,15 @@ def decode_attention_cached(q, k_cache, v_cache, lengths, *, kv_block: int = 512
     """q [B,H,hd]; caches [B,S,Kv,hd]; lengths [B] -> [B, H*hd]."""
     return _decode(q, k_cache, v_cache, lengths, kv_block=kv_block,
                    interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("window", "kv_block"))
+def span_attention_packed(q, k_cache, v_cache, positions, seq_idx, *,
+                          window: int = 0, kv_block: int = 512):
+    """Packed ragged chunk attention: q [T,H,hd]; caches [B,S,Kv,hd];
+    positions/seq_idx [T] -> [T, H*hd]."""
+    return _span(q, k_cache, v_cache, positions, seq_idx, window=window,
+                 kv_block=kv_block, interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("t_block", "f_block"))

@@ -262,6 +262,155 @@ def span_attention(
     return out.reshape(b, c, hq * hd)
 
 
+def packed_span_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    positions: jax.Array,
+    seq_idx: jax.Array,
+    *,
+    window: int = 0,
+    kv_block: int = 512,
+) -> jax.Array:
+    """Ragged multi-token attention over a KV cache (packed chunk layout).
+
+    The packed layout replaces the padded [B, C] span matrices: the batch's
+    valid span tokens are concatenated into flat [T] vectors, so a mixed
+    iteration does ``sum(len_i x T_i)`` attention work instead of
+    ``B x C x S``.  q [T, Hq, hd]; caches [B, S, Kv, hd] (already containing
+    the span's K/V); positions [T] absolute position of each packed token;
+    seq_idx [T] batch row of each token.  Cache entry s of row seq_idx[t]
+    is visible to token t iff ``s <= positions[t]`` (and, with ``window``,
+    ``s > positions[t] - window`` — full-length cache semantics).  The scan
+    streams the cache in kv blocks with a running softmax, so no [T, S]
+    score tensor is ever materialized.  Output [T, Hq*hd].
+    """
+    t, hq, hd = q.shape
+    s, n_kv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // n_kv
+    kv_block = min(kv_block, s)
+    while s % kv_block:
+        kv_block //= 2
+    nb = s // kv_block
+    qg = q.reshape(t, n_kv, g, hd)
+    scale = hd ** -0.5
+    kb = k_cache.reshape(-1, nb, kv_block, n_kv, hd).swapaxes(0, 1)
+    vb = v_cache.reshape(-1, nb, kv_block, n_kv, hd).swapaxes(0, 1)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, i = inp
+        kt = kblk[seq_idx]                       # [T, kb, Kv, hd]
+        vt = vblk[seq_idx]
+        kpos = i * kv_block + jnp.arange(kv_block)
+        sc = jnp.einsum("tngd,tknd->tngk", qg, kt).astype(jnp.float32) * scale
+        mask = kpos[None, :] <= positions[:, None]
+        if window:
+            mask &= kpos[None, :] > positions[:, None] - window
+        sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
+        mn = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - mn[..., None])
+        corr = jnp.exp(m - mn)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "tngk,tknd->tngd", p.astype(q.dtype), vt).astype(jnp.float32)
+        return (mn, l, acc), None
+
+    m0 = jnp.full((t, n_kv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((t, n_kv, g), jnp.float32)
+    a0 = jnp.zeros((t, n_kv, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype).reshape(t, hq * hd)
+
+
+def packed_span_attention_rolling(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    k_span: jax.Array,
+    v_span: jax.Array,
+    positions: jax.Array,
+    seq_idx: jax.Array,
+    offsets: jax.Array,
+    n_valid: jax.Array,
+    *,
+    window: int,
+    kv_block: int = 512,
+) -> jax.Array:
+    """Packed span attention for sliding-window models with *rolling* caches.
+
+    A rolling cache (slot = pos %% W) cannot use scatter-then-attend: a
+    chunk's writes would overwrite window entries its earlier tokens still
+    need.  So the span attends two sources under one running softmax:
+
+      1. the old cache, holding each row's tokens [off-W, off) at slots
+         pos %% W — slot s stores position ``off-1-((off-1-s) mod W)``,
+         which is reconstructed per query to mask age and window;
+      2. the span's own fresh K/V [T, Kv, hd] with an intra-span causal +
+         window + same-row mask (``u < n_valid`` drops bucket padding,
+         whose duplicated entries would otherwise be double-counted).
+
+    offsets [T] = each token's row span start (tokens already in cache).
+    The caller scatters the span K/V into the cache *after* this returns.
+    """
+    t, hq, hd = q.shape
+    w_slots, n_kv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // n_kv
+    kv_block = min(kv_block, w_slots)
+    while w_slots % kv_block:
+        kv_block //= 2
+    nb = w_slots // kv_block
+    qg = q.reshape(t, n_kv, g, hd)
+    scale = hd ** -0.5
+    kb = k_cache.reshape(-1, nb, kv_block, n_kv, hd).swapaxes(0, 1)
+    vb = v_cache.reshape(-1, nb, kv_block, n_kv, hd).swapaxes(0, 1)
+
+    def cache_body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, i = inp
+        kt = kblk[seq_idx]
+        vt = vblk[seq_idx]
+        slot = i * kv_block + jnp.arange(kv_block)
+        # position stored in slot s of a row whose cache holds [0, off)
+        stored = offsets[:, None] - 1 - (
+            (offsets[:, None] - 1 - slot[None, :]) % w_slots)
+        mask = (offsets[:, None] >= 1) & (stored >= 0) & (
+            stored > positions[:, None] - window)
+        sc = jnp.einsum("tngd,tknd->tngk", qg, kt).astype(jnp.float32) * scale
+        sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
+        mn = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - mn[..., None])
+        corr = jnp.exp(m - mn)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "tngk,tknd->tngd", p.astype(q.dtype), vt).astype(jnp.float32)
+        return (mn, l, acc), None
+
+    m0 = jnp.full((t, n_kv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((t, n_kv, g), jnp.float32)
+    a0 = jnp.zeros((t, n_kv, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(cache_body, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nb)))
+
+    # intra-span source: fresh K/V of the packed chunk itself
+    sc = jnp.einsum("tngd,und->tngu", qg, k_span).astype(jnp.float32) * scale
+    upos, useq = positions, seq_idx
+    mask = (useq[None, :] == seq_idx[:, None]) \
+        & (upos[None, :] <= positions[:, None]) \
+        & (upos[None, :] > positions[:, None] - window) \
+        & (jnp.arange(t)[None, :] < n_valid)
+    sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
+    mn = jnp.maximum(m, sc.max(-1))
+    p = jnp.exp(sc - mn[..., None])
+    corr = jnp.exp(m - mn)
+    l = l * corr + p.sum(-1)
+    acc = acc * corr[..., None] + jnp.einsum(
+        "tngu,und->tngd", p.astype(q.dtype), v_span).astype(jnp.float32)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype).reshape(t, hq * hd)
+
+
 def cross_attention(
     q: jax.Array,
     k: jax.Array,
@@ -327,6 +476,158 @@ def decode_attention_quant(
                      preferred_element_type=jnp.int32)
     out = o32.astype(jnp.float32) * ps[..., None].astype(jnp.float32)
     return out.astype(q.dtype).reshape(b, hq * hd)
+
+
+def packed_span_attention_quant(
+    q: jax.Array,
+    k8: jax.Array, ks: jax.Array,
+    v8: jax.Array, vs: jax.Array,
+    positions: jax.Array,
+    seq_idx: jax.Array,
+    *,
+    kv_block: int = 512,
+) -> jax.Array:
+    """Packed ragged span attention over an int8 KV cache.
+
+    Generalizes :func:`decode_attention_quant` to the packed chunk layout:
+    both contractions are s8 x s8 -> s32 dots with the per-position K/V
+    scales folded outside them (q and the probability rows are quantized
+    on the fly, per kv block).  q [T,Hq,hd]; k8/v8 [B,S,Kv,hd] int8;
+    ks/vs [B,S,Kv] bf16; positions/seq_idx [T].  Output [T, Hq*hd].
+    """
+    t, hq, hd = q.shape
+    s, n_kv = k8.shape[1], k8.shape[2]
+    g = hq // n_kv
+    kv_block = min(kv_block, s)
+    while s % kv_block:
+        kv_block //= 2
+    nb = s // kv_block
+    qg = q.reshape(t, n_kv, g, hd)
+    q8, qs = quantize_kv(qg)                     # [T,Kv,G,hd], [T,Kv,G]
+    scale = hd ** -0.5
+    kb = k8.reshape(-1, nb, kv_block, n_kv, hd).swapaxes(0, 1)
+    vb = v8.reshape(-1, nb, kv_block, n_kv, hd).swapaxes(0, 1)
+    ksb = ks.reshape(-1, nb, kv_block, n_kv).swapaxes(0, 1)
+    vsb = vs.reshape(-1, nb, kv_block, n_kv).swapaxes(0, 1)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, ksblk, vsblk, i = inp
+        kt, vt = kblk[seq_idx], vblk[seq_idx]    # [T, kb, Kv, hd] int8
+        kst = ksblk[seq_idx].transpose(0, 2, 1)[:, :, None, :]  # [T,Kv,1,kb]
+        vst = vsblk[seq_idx].transpose(0, 2, 1)[:, :, None, :]
+        s32 = jnp.einsum("tngd,tknd->tngk", q8, kt,
+                         preferred_element_type=jnp.int32)
+        sc = s32.astype(jnp.float32) * qs[..., None].astype(jnp.float32) \
+            * kst.astype(jnp.float32) * scale
+        kpos = i * kv_block + jnp.arange(kv_block)
+        mask = kpos[None, :] <= positions[:, None]
+        sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
+        mn = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - mn[..., None])
+        corr = jnp.exp(m - mn)
+        l = l * corr + p.sum(-1)
+        pv = p * vst.astype(jnp.float32)         # fold V scales, then requant
+        p8, ps = quantize_kv(pv)
+        o32 = jnp.einsum("tngk,tknd->tngd", p8, vt,
+                         preferred_element_type=jnp.int32)
+        acc = acc * corr[..., None] + \
+            o32.astype(jnp.float32) * ps[..., None].astype(jnp.float32)
+        return (mn, l, acc), None
+
+    m0 = jnp.full((t, n_kv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((t, n_kv, g), jnp.float32)
+    a0 = jnp.zeros((t, n_kv, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kb, vb, ksb, vsb, jnp.arange(nb)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype).reshape(t, hq * hd)
+
+
+def packed_span_attention_rolling_quant(
+    q: jax.Array,
+    k8: jax.Array, ks: jax.Array,
+    v8: jax.Array, vs: jax.Array,
+    k_span: jax.Array,
+    v_span: jax.Array,
+    positions: jax.Array,
+    seq_idx: jax.Array,
+    offsets: jax.Array,
+    n_valid: jax.Array,
+    *,
+    window: int,
+    kv_block: int = 512,
+) -> jax.Array:
+    """Rolling-cache windowed span attention with an int8 cache.
+
+    The old-cache source runs as s8 x s8 -> s32 dots with folded scales
+    (as :func:`packed_span_attention_quant`); the span's own fresh K/V is
+    still bf16, so the intra-span source uses full-precision dots — both
+    feed one running softmax, mirroring the fp rolling variant.
+    """
+    t, hq, hd = q.shape
+    w_slots, n_kv = k8.shape[1], k8.shape[2]
+    g = hq // n_kv
+    kv_block = min(kv_block, w_slots)
+    while w_slots % kv_block:
+        kv_block //= 2
+    nb = w_slots // kv_block
+    qg = q.reshape(t, n_kv, g, hd)
+    q8, qs = quantize_kv(qg)
+    scale = hd ** -0.5
+    kb = k8.reshape(-1, nb, kv_block, n_kv, hd).swapaxes(0, 1)
+    vb = v8.reshape(-1, nb, kv_block, n_kv, hd).swapaxes(0, 1)
+    ksb = ks.reshape(-1, nb, kv_block, n_kv).swapaxes(0, 1)
+    vsb = vs.reshape(-1, nb, kv_block, n_kv).swapaxes(0, 1)
+
+    def cache_body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, ksblk, vsblk, i = inp
+        kt, vt = kblk[seq_idx], vblk[seq_idx]
+        kst = ksblk[seq_idx].transpose(0, 2, 1)[:, :, None, :]
+        vst = vsblk[seq_idx].transpose(0, 2, 1)[:, :, None, :]
+        slot = i * kv_block + jnp.arange(kv_block)
+        stored = offsets[:, None] - 1 - (
+            (offsets[:, None] - 1 - slot[None, :]) % w_slots)
+        mask = (offsets[:, None] >= 1) & (stored >= 0) & (
+            stored > positions[:, None] - window)
+        s32 = jnp.einsum("tngd,tknd->tngk", q8, kt,
+                         preferred_element_type=jnp.int32)
+        sc = s32.astype(jnp.float32) * qs[..., None].astype(jnp.float32) \
+            * kst.astype(jnp.float32) * scale
+        sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
+        mn = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - mn[..., None])
+        corr = jnp.exp(m - mn)
+        l = l * corr + p.sum(-1)
+        pv = p * vst.astype(jnp.float32)
+        p8, ps = quantize_kv(pv)
+        o32 = jnp.einsum("tngk,tknd->tngd", p8, vt,
+                         preferred_element_type=jnp.int32)
+        acc = acc * corr[..., None] + \
+            o32.astype(jnp.float32) * ps[..., None].astype(jnp.float32)
+        return (mn, l, acc), None
+
+    m0 = jnp.full((t, n_kv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((t, n_kv, g), jnp.float32)
+    a0 = jnp.zeros((t, n_kv, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(cache_body, (m0, l0, a0),
+                                  (kb, vb, ksb, vsb, jnp.arange(nb)))
+
+    sc = jnp.einsum("tngd,und->tngu", qg, k_span).astype(jnp.float32) * scale
+    mask = (seq_idx[None, :] == seq_idx[:, None]) \
+        & (positions[None, :] <= positions[:, None]) \
+        & (positions[None, :] > positions[:, None] - window) \
+        & (jnp.arange(t)[None, :] < n_valid)
+    sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
+    mn = jnp.maximum(m, sc.max(-1))
+    p = jnp.exp(sc - mn[..., None])
+    corr = jnp.exp(m - mn)
+    l = l * corr + p.sum(-1)
+    acc = acc * corr[..., None] + jnp.einsum(
+        "tngu,und->tngd", p.astype(q.dtype), v_span).astype(jnp.float32)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype).reshape(t, hq * hd)
 
 
 def fill_rolling_cache(k: jax.Array, window: int) -> jax.Array:

@@ -23,11 +23,16 @@ PyTree = Any
 class Ctx:
     """Per-call context threaded through block apply functions."""
 
-    mode: str                      # train | prefill | decode
+    mode: str                      # train | prefill | decode | chunk
     shard: ShardCtx
-    positions: jax.Array           # prefill: [S]; decode: [B]
+    positions: jax.Array           # prefill: [S]; decode: [B]; chunk: [T]
     rope_cos: Optional[jax.Array] = None
     rope_sin: Optional[jax.Array] = None
+    # chunk mode (packed ragged layout): batch row of each packed token [T]
+    # and each row's span-start offset [B] (rolling-cache window attention)
+    seq_idx: Optional[jax.Array] = None
+    span_starts: Optional[jax.Array] = None
+    n_valid: Optional[jax.Array] = None    # scalar: valid packed tokens
     patches: Optional[jax.Array] = None    # vlm cross-attn memory [B, P, d]
     enc_out: Optional[jax.Array] = None    # whisper encoder output [B, Se, d]
     kv_block: int = 512

@@ -133,31 +133,68 @@ def self_attn_block(p, x, ctx: Ctx, cache, cfg: ArchConfig, *, causal=True,
         return x, {"k": kc, "v": vc}
 
     if ctx.mode == "chunk":
-        # chunked prefill: a span of C prompt tokens per sequence, with
-        # per-sequence absolute positions (mixed prefill/decode batches);
-        # the cache already holds all earlier chunks.  Padding rows are
-        # clamped duplicates of the last valid span entry (same token,
-        # same position), so duplicate cache scatters write identical
-        # values and the update stays deterministic.
-        if w:
-            raise NotImplementedError("chunked prefill with sliding-window "
-                                      "attention is not supported")
-        if "ks" in (cache or {}):
-            raise NotImplementedError("chunked prefill with int8 KV cache "
-                                      "is not supported")
-        h = rmsnorm(x, p["ln"], cfg.norm_eps)            # x [B, C, d]
-        q, k, v = _qkv(p, h, cfg, tp)                    # [B, C, H, hd]
+        # chunked prefill, packed ragged layout: x [T, d] is the batch's
+        # valid span tokens concatenated (T = bucket width), with per-token
+        # absolute positions [T] and batch rows ctx.seq_idx [T]; the cache
+        # already holds all earlier chunks.  Bucket padding duplicates the
+        # last valid token (same token, position AND row), so duplicate
+        # cache scatters write identical values and stay deterministic.
+        h = rmsnorm(x, p["ln"], cfg.norm_eps)            # x [T, d]
+        q, k, v = _qkv(p, h, cfg, tp)                    # [T, H, hd]
         if use_rope:
-            cos = ctx.rope_cos[:, :, None, :]            # [B, C, 1, hd/2]
-            sin = ctx.rope_sin[:, :, None, :]
+            cos = ctx.rope_cos[:, None, :]               # [T, 1, hd/2]
+            sin = ctx.rope_sin[:, None, :]
             q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
-        b = x.shape[0]
-        rows = jnp.arange(b)[:, None]                    # [B, 1]
-        kc = cache["k"].at[rows, ctx.positions].set(k)
-        vc = cache["v"].at[rows, ctx.positions].set(v)
-        kc = shard.constrain(kc, _cache_axes(cfg, tp))
-        vc = shard.constrain(vc, _cache_axes(cfg, tp))
-        o = attn.span_attention(q, kc, vc, ctx.positions)
+        si = ctx.seq_idx
+        ca = _cache_axes(cfg, tp)
+        if w:
+            # rolling cache: attend (old cache + the span's own fresh K/V),
+            # THEN scatter — scatter-first would overwrite window entries
+            # earlier span tokens still need (see attention.py docstrings).
+            offs = ctx.span_starts[si]                   # [T] row span start
+            n_valid = ctx.n_valid if ctx.n_valid is not None else x.shape[0]
+            if "ks" in (cache or {}):
+                o = attn.packed_span_attention_rolling_quant(
+                    q, cache["k"], cache["ks"], cache["v"], cache["vs"],
+                    k, v, ctx.positions, si, offs, n_valid, window=w)
+                k8, ks1 = attn.quantize_kv(k)
+                v8, vs1 = attn.quantize_kv(v)
+                slot = ctx.positions % w
+                new_cache = {
+                    "k": cache["k"].at[si, slot].set(k8),
+                    "v": cache["v"].at[si, slot].set(v8),
+                    "ks": cache["ks"].at[si, slot].set(ks1),
+                    "vs": cache["vs"].at[si, slot].set(vs1),
+                }
+                new_cache = {kk: shard.constrain(vv, ca if vv.ndim == 4
+                                                 else ca[:3])
+                             for kk, vv in new_cache.items()}
+                return x + o @ p["wo"], new_cache
+            o = attn.packed_span_attention_rolling(
+                q, cache["k"], cache["v"], k, v, ctx.positions, si, offs,
+                n_valid, window=w)
+            slot = ctx.positions % w
+            kc = shard.constrain(cache["k"].at[si, slot].set(k), ca)
+            vc = shard.constrain(cache["v"].at[si, slot].set(v), ca)
+            return x + o @ p["wo"], {"k": kc, "v": vc}
+        if "ks" in (cache or {}):
+            k8, ks1 = attn.quantize_kv(k)
+            v8, vs1 = attn.quantize_kv(v)
+            new_cache = {
+                "k": cache["k"].at[si, ctx.positions].set(k8),
+                "v": cache["v"].at[si, ctx.positions].set(v8),
+                "ks": cache["ks"].at[si, ctx.positions].set(ks1),
+                "vs": cache["vs"].at[si, ctx.positions].set(vs1),
+            }
+            new_cache = {kk: shard.constrain(vv, ca if vv.ndim == 4 else ca[:3])
+                         for kk, vv in new_cache.items()}
+            o = attn.packed_span_attention_quant(
+                q, new_cache["k"], new_cache["ks"], new_cache["v"],
+                new_cache["vs"], ctx.positions, si)
+            return x + o @ p["wo"], new_cache
+        kc = shard.constrain(cache["k"].at[si, ctx.positions].set(k), ca)
+        vc = shard.constrain(cache["v"].at[si, ctx.positions].set(v), ca)
+        o = attn.packed_span_attention(q, kc, vc, ctx.positions, si)
         return x + o @ p["wo"], {"k": kc, "v": vc}
 
     h = rmsnorm(x, p["ln"], cfg.norm_eps)                # x [B, S, d]

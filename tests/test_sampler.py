@@ -155,3 +155,80 @@ def test_prompt_seeding_affects_penalties():
                     layout="cw")
     rep2 = cw2._replicas[0]
     assert rep2.freq[5, 0] == 3 and rep2.pres[7, 1] == 1
+
+
+def test_transposed_sample_does_not_mutate_input():
+    """Regression: np.asarray(float32) is a no-copy view, and the penalty
+    ops run in place — the caller's (shipped) logits must survive."""
+    rng = np.random.default_rng(11)
+    zt = np.ascontiguousarray(rng.normal(size=(V, B)).astype(np.float32))
+    before = zt.copy()
+    cw = ColumnWiseSampler(V, B)
+    p = SamplingParams(greedy=True, frequency_penalty=0.5,
+                       presence_penalty=0.3, repetition_penalty=1.3)
+    cw.sample(zt, p, transposed=True)   # builds penalty state
+    cw.sample(zt, p, transposed=True)   # penalties now non-zero
+    np.testing.assert_array_equal(zt, before)
+    # the stochastic pipeline (temperature/top-k) mutates its working copy
+    p2 = SamplingParams(temperature=0.7, top_k=5, frequency_penalty=0.5)
+    cw.sample(zt, p2, transposed=True)
+    np.testing.assert_array_equal(zt, before)
+
+
+# ---------------------------------------------------------------------------
+# Penalty-state carryover across mixed-batch evictions / reorders
+# ---------------------------------------------------------------------------
+
+def test_replica_carries_columns_across_shrink_and_reorder():
+    cw = ColumnWiseSampler(V, 4)
+    p = SamplingParams(greedy=True, frequency_penalty=1.0)
+    rng = np.random.default_rng(12)
+    z = rng.normal(size=(4, V)).astype(np.float32)
+    ids = cw.sample(z, p, seq_ids=[10, 11, 12, 13])
+    rep = cw._replicas[0]
+    assert rep.freq.sum() == 4
+    # shrink + reorder: 11 evicted, order flipped — columns must follow ids
+    z2 = rng.normal(size=(3, V)).astype(np.float32)
+    cw.sample(z2, p, seq_ids=[13, 12, 10])
+    rep2 = cw._replicas[0]
+    assert rep2.seq_ids == [13, 12, 10]
+    assert rep2.freq[0, ids[3]] >= 1    # col 0 now holds seq 13's history
+    assert rep2.freq[2, ids[0]] >= 1    # col 2 holds seq 10's history
+    assert rep2.out_len.tolist()[0] >= 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rounds=st.integers(2, 10),
+    fp=st.floats(0.1, 1.5),
+    pp=st.floats(0.0, 1.0),
+    seed=st.integers(0, 999),
+)
+def test_property_carryover_matches_naive_per_seq_history(rounds, fp, pp, seed):
+    """Under random evictions, arrivals and reorders the incremental
+    sampler must match a NaiveSampler fed each batch's exact per-sequence
+    output histories — i.e. penalties follow the sequence, not the column."""
+    rng = np.random.default_rng(seed)
+    cw = ColumnWiseSampler(V, 8, max_len=64)
+    p = SamplingParams(greedy=True, frequency_penalty=fp, presence_penalty=pp)
+    hist = {}
+    active = list(range(3))
+    next_id = 3
+    for _ in range(rounds):
+        ids = list(active)
+        rng.shuffle(ids)
+        b = len(ids)
+        z = rng.normal(size=(b, V)).astype(np.float32)
+        nv = NaiveSampler(V)
+        nv.history[0] = [np.asarray(hist.get(s, []), np.int64) for s in ids]
+        expect = nv.sample(z.copy(), p)
+        got = cw.sample(z.copy(), p, seq_ids=ids)
+        np.testing.assert_array_equal(got, expect)
+        for s, t in zip(ids, got):
+            hist.setdefault(s, []).append(int(t))
+        # random recomposition: evict one, admit one
+        if len(active) > 1 and rng.random() < 0.5:
+            active.remove(active[int(rng.integers(len(active)))])
+        if rng.random() < 0.5:
+            active.append(next_id)
+            next_id += 1

@@ -167,3 +167,32 @@ def test_producer_running_ahead_of_consumer():
         ch.send(t)          # all sends queued before any recv
     for t in payloads:
         _assert_same_payload(ch.recv(), t)
+
+
+def test_single_round_steady_state_across_span_width_changes():
+    """Packed chunk layout: inter-stage hiddens are [T, d] with T the
+    bucket width, so a span-width change is a *leading-dim* change — the
+    captured structure (trailing dims, dtypes) is untouched and steady
+    state must stay single-round with per-(batch, bucket) pre-posted
+    buffers, never paying a recapture round (ROADMAP item)."""
+    d = 32
+    ch = StructureAwareChannel()
+    widths = [4, 8, 16, 8, 4, 32, 4, 16]   # decode [B,d] <-> chunk [T,d]
+    ch.send({"hidden": np.zeros((widths[0], d), np.float32)})
+    ch.recv()                               # capture iteration
+    assert ch.captures == 1
+    before = ch.wire.rounds
+    for i, w in enumerate(widths):
+        t = {"hidden": np.full((w, d), float(i), np.float32)}
+        ch.post_recv(w)                     # pre-posted async receive
+        ch.send(t)
+        out = ch.recv()
+        np.testing.assert_array_equal(out["hidden"], t["hidden"])
+    assert ch.captures == 1                 # no recapture, ever
+    assert ch.wire.rounds - before == len(widths)   # one round per iter
+    # buffers are keyed per width and reused across revisits
+    ch.send({"hidden": np.ones((8, d), np.float32)})
+    o1 = ch.recv()
+    ch.send({"hidden": np.full((8, d), 2.0, np.float32)})
+    o2 = ch.recv()
+    assert o1["hidden"] is o2["hidden"]

@@ -195,6 +195,72 @@ def test_property_slot_stability_in_steady_state(n, max_batch, p, budget, seed):
         s.complete(it + k, ids, np.full(len(ids), 7, np.int32))
 
 
+# ---------------------------------------------------------------------------
+# Packed ragged layout + bucket policy (property-based)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(t=st.integers(1, 4096))
+def test_property_bucket_is_minimal_power_of_two(t):
+    from repro.core.scheduler import BUCKET_FLOOR, bucket_width
+
+    b = bucket_width(t)
+    assert b >= max(t, BUCKET_FLOOR)
+    assert b & (b - 1) == 0                     # power of two
+    assert b == BUCKET_FLOOR or b // 2 < t      # minimal such bucket
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 8),
+    max_batch=st.integers(1, 4),
+    p=st.integers(1, 3),
+    budget=st.integers(2, 24),
+    seed=st.integers(0, 99),
+)
+def test_property_packed_layout_invariants(n, max_batch, p, budget, seed):
+    """Across a whole scheduled run: every valid (seq, position) token
+    appears exactly once in the packed layouts; positions are monotone
+    per row within one layout; last_index points at each row's final
+    token; the bucket covers the valid count."""
+    rng = np.random.default_rng(seed)
+    s = Scheduler(max_batch=max_batch, pp_degree=p, max_seq_len=256,
+                  token_budget=budget)
+    plens = {}
+    for i in range(n):
+        plens[i] = int(rng.integers(1, 40))
+        s.add_request(Sequence(i, list(range(1, plens[i] + 1)), SamplingParams(
+            greedy=True, max_new_tokens=int(rng.integers(1, 4)))))
+    seen = {i: set() for i in range(n)}
+    for it in range(2000):
+        o = s.schedule(it)
+        if o is None:
+            if not s.has_work:
+                break
+            continue
+        tok, pos, seq, last = o.packed_layout()
+        t = o.total_tokens
+        assert len(tok) == len(pos) == len(seq) == t
+        assert o.packed_width == 1 or (o.packed_width >= max(t, 8)
+                                       and o.packed_width & (o.packed_width - 1) == 0)
+        for col in range(len(o.seq_ids)):
+            idx = np.flatnonzero(seq == col)
+            assert idx.size == o.spans[col][1]
+            assert (np.diff(pos[idx]) == 1).all()     # monotone positions
+            assert last[col] == idx[-1]               # final token of the row
+            sid = o.seq_ids[col]
+            # prefill chunks: record coverage of [0, prompt_len)
+            for q in pos[idx]:
+                if q < plens[sid]:
+                    assert q not in seen[sid]         # exactly once
+                    seen[sid].add(int(q))
+        ids = [o.seq_ids[i] for i in o.sample_indices()]
+        s.complete(it, ids, rng.integers(3, 50, len(ids)).astype(np.int32))
+    assert not s.has_work
+    for i in range(n):
+        assert seen[i] == set(range(plens[i]))        # full prompt coverage
+
+
 def test_budget_is_clamped_above_max_batch():
     s = Scheduler(max_batch=4, pp_degree=1, max_seq_len=64, token_budget=2)
     assert s.token_budget == 5          # max_batch + 1: prefill can progress

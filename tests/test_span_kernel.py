@@ -1,0 +1,207 @@
+"""Pallas span-attention kernels vs. the pure-jnp packed oracles
+(interpret mode): GQA ratios, ragged positions, sliding windows, int8
+caches, and the rolling-cache two-source variant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.span_attention import (
+    span_attention,
+    span_attention_quant,
+    span_attention_rolling,
+)
+from repro.models import attention as A
+
+TOL = dict(rtol=2e-2, atol=2e-2)
+
+
+def _rand(rng, shape, dtype=jnp.bfloat16):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32).astype(dtype)
+
+
+def _packed_batch(rng, b, s, t):
+    """Random ragged packed layout: sorted rows, positions < s."""
+    seq = np.sort(rng.integers(0, b, t)).astype(np.int32)
+    pos = rng.integers(0, s, t).astype(np.int32)
+    return jnp.asarray(pos), jnp.asarray(seq)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("b,s,h,kv,hd,t", [
+    (2, 64, 4, 4, 64, 8),      # MHA
+    (3, 128, 8, 2, 64, 12),    # GQA 4:1
+    (1, 96, 6, 1, 128, 5),     # MQA, non-pow2 cache len
+])
+def test_span_attention_sweep(b, s, h, kv, hd, t, dtype):
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (t, h, hd), dtype)
+    kc = _rand(rng, (b, s, kv, hd), dtype)
+    vc = _rand(rng, (b, s, kv, hd), dtype)
+    pos, seq = _packed_batch(rng, b, s, t)
+    o = span_attention(q, kc, vc, pos, seq, kv_block=32, interpret=True)
+    o_ref = A.packed_span_attention(q, kc, vc, pos, seq, kv_block=32)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **TOL)
+
+
+@pytest.mark.parametrize("window", [16, 48])
+def test_span_attention_window_lower_bound(window):
+    """Sliding window on a full-length cache: the kernel skips kv blocks
+    entirely below the window and masks the boundary block."""
+    b, s, h, kv, hd, t = 2, 128, 4, 2, 64, 10
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (t, h, hd))
+    kc = _rand(rng, (b, s, kv, hd))
+    vc = _rand(rng, (b, s, kv, hd))
+    pos, seq = _packed_batch(rng, b, s, t)
+    o = span_attention(q, kc, vc, pos, seq, window=window, kv_block=32,
+                       interpret=True)
+    o_ref = A.packed_span_attention(q, kc, vc, pos, seq, window=window,
+                                    kv_block=32)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **TOL)
+
+
+def test_span_attention_matches_padded_reference():
+    """Kernel output at each packed token equals the padded [B, C]
+    span_attention reference at the corresponding (row, span) entry."""
+    b, s, kv, g, hd = 3, 64, 2, 2, 32
+    h = kv * g
+    spans = [(5, 4), (20, 1), (0, 3)]
+    rng = np.random.default_rng(2)
+    kc = _rand(rng, (b, s, kv, hd))
+    vc = _rand(rng, (b, s, kv, hd))
+    c = max(n for _, n in spans)
+    qpad = _rand(rng, (b, c, h, hd))
+    pos_pad = np.zeros((b, c), np.int32)
+    for i, (off, n) in enumerate(spans):
+        pos_pad[i] = off + np.minimum(np.arange(c), n - 1)
+    o_pad = A.span_attention(qpad, kc, vc, jnp.asarray(pos_pad))
+
+    qp, pos, seq = [], [], []
+    for i, (off, n) in enumerate(spans):
+        for j in range(n):
+            qp.append(np.asarray(qpad[i, j], np.float32))
+            pos.append(off + j)
+            seq.append(i)
+    q = jnp.asarray(np.stack(qp)).astype(jnp.bfloat16)
+    o = span_attention(q, kc, vc, jnp.asarray(pos, jnp.int32),
+                       jnp.asarray(seq, jnp.int32), kv_block=16,
+                       interpret=True)
+    k = 0
+    for i, (off, n) in enumerate(spans):
+        for j in range(n):
+            np.testing.assert_allclose(
+                np.asarray(o[k], np.float32),
+                np.asarray(o_pad[i, j], np.float32).reshape(-1), **TOL)
+            k += 1
+
+
+@pytest.mark.parametrize("b,s,h,kv,hd,t", [
+    (2, 64, 8, 2, 64, 9),
+    (3, 128, 4, 4, 32, 6),
+])
+def test_span_attention_quant(b, s, h, kv, hd, t):
+    rng = np.random.default_rng(3)
+    q = _rand(rng, (t, h, hd))
+    kc = _rand(rng, (b, s, kv, hd))
+    vc = _rand(rng, (b, s, kv, hd))
+    pos, seq = _packed_batch(rng, b, s, t)
+    k8, ks = A.quantize_kv(kc)
+    v8, vs = A.quantize_kv(vc)
+    o = span_attention_quant(q, k8, ks, v8, vs, pos, seq, kv_block=32,
+                             interpret=True)
+    o_ref = A.packed_span_attention_quant(q, k8, ks, v8, vs, pos, seq,
+                                          kv_block=32)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=5e-2, atol=5e-2)
+    # s8 x s8 path stays close to the full-precision oracle
+    o_fp = A.packed_span_attention(q, kc, vc, pos, seq, kv_block=32)
+    a, bq = np.asarray(o_fp, np.float32), np.asarray(o, np.float32)
+    assert np.abs(a - bq).max() / (np.abs(a).max() + 1e-6) < 0.08
+
+
+def test_span_attention_rolling_two_sources():
+    """Rolling-cache variant vs the jnp oracle AND a from-scratch
+    full-history oracle with window masking."""
+    b, w, kv, g, hd, t = 2, 16, 2, 2, 32, 7
+    h = kv * g
+    rng = np.random.default_rng(4)
+    s_full = 48
+    kfull = rng.normal(size=(b, s_full, kv, hd)).astype(np.float32)
+    vfull = rng.normal(size=(b, s_full, kv, hd)).astype(np.float32)
+    offs_row = [20, 3]
+    lens_row = [4, 3]
+    kroll = np.zeros((b, w, kv, hd), np.float32)
+    vroll = np.zeros((b, w, kv, hd), np.float32)
+    for i in range(b):
+        for m in range(offs_row[i]):
+            kroll[i, m % w] = kfull[i, m]
+            vroll[i, m % w] = vfull[i, m]
+    pos, seq, ksp, vsp, offs = [], [], [], [], []
+    for i in range(b):
+        for j in range(lens_row[i]):
+            p = offs_row[i] + j
+            pos.append(p)
+            seq.append(i)
+            offs.append(offs_row[i])
+            ksp.append(kfull[i, p])
+            vsp.append(vfull[i, p])
+    q = _rand(rng, (t, h, hd), jnp.float32)
+    args = (q, jnp.asarray(kroll), jnp.asarray(vroll),
+            jnp.asarray(np.stack(ksp)), jnp.asarray(np.stack(vsp)),
+            jnp.asarray(pos, jnp.int32), jnp.asarray(seq, jnp.int32),
+            jnp.asarray(offs, jnp.int32))
+    nv = jnp.asarray([t], jnp.int32)
+    o = span_attention_rolling(*args, nv, window=w, kv_block=8,
+                               interpret=True)
+    o_ref = A.packed_span_attention_rolling(*args, nv[0], window=w,
+                                            kv_block=8)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **TOL)
+    # full-history oracle
+    for k in range(t):
+        i, p = seq[k], pos[k]
+        qg = np.asarray(q[k], np.float32).reshape(kv, g, hd)
+        sc = np.einsum("ngd,snd->ngs", qg, kfull[i]) * hd ** -0.5
+        valid = (np.arange(s_full) <= p) & (np.arange(s_full) > p - w)
+        sc = np.where(valid[None, None], sc, -1e30)
+        pr = np.exp(sc - sc.max(-1, keepdims=True))
+        pr /= pr.sum(-1, keepdims=True)
+        ref = np.einsum("ngs,snd->ngd", pr, vfull[i]).reshape(-1)
+        np.testing.assert_allclose(np.asarray(o[k], np.float32), ref,
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_span_attention_rolling_masks_bucket_padding():
+    """Bucket-padded span entries duplicate the last valid token; without
+    the n_valid mask they would be double-counted in the intra-span
+    source.  The kernel and oracle must both drop them."""
+    b, w, kv, g, hd = 1, 8, 1, 2, 16
+    h = kv * g
+    rng = np.random.default_rng(5)
+    t_valid, t_pad = 3, 6
+    pos_v = np.array([4, 5, 6], np.int32)
+    kroll = _rand(rng, (b, w, kv, hd), jnp.float32)
+    vroll = _rand(rng, (b, w, kv, hd), jnp.float32)
+    ksp_v = rng.normal(size=(t_valid, kv, hd)).astype(np.float32)
+    vsp_v = rng.normal(size=(t_valid, kv, hd)).astype(np.float32)
+
+    def run(t_total):
+        pos = np.concatenate([pos_v, np.full(t_total - t_valid, pos_v[-1])])
+        seq = np.zeros(t_total, np.int32)
+        offs = np.full(t_total, 4, np.int32)
+        ksp = np.concatenate([ksp_v, np.repeat(ksp_v[-1:], t_total - t_valid, 0)])
+        vsp = np.concatenate([vsp_v, np.repeat(vsp_v[-1:], t_total - t_valid, 0)])
+        q = np.concatenate([np.ones((t_valid, h, hd), np.float32),
+                            np.ones((t_total - t_valid, h, hd), np.float32)])
+        o = span_attention_rolling(
+            jnp.asarray(q), kroll, vroll, jnp.asarray(ksp), jnp.asarray(vsp),
+            jnp.asarray(pos.astype(np.int32)), jnp.asarray(seq),
+            jnp.asarray(offs), jnp.asarray([t_valid], jnp.int32),
+            window=w, kv_block=8, interpret=True)
+        return np.asarray(o[:t_valid], np.float32)
+
+    np.testing.assert_allclose(run(t_valid), run(t_pad), rtol=1e-5, atol=1e-5)
