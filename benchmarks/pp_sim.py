@@ -198,6 +198,8 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
                             t_token: float = 1e-4,
                             t_fixed: float = 5e-4,
                             chunked: bool = True,
+                            policy: Optional[str] = None,
+                            hysteresis_tokens: Optional[int] = None,
                             max_iters: int = 100_000) -> MixedWorkloadResult:
     """Drive the REAL continuous-batching scheduler (repro.core.scheduler)
     through a discrete-event pipeline timing model.
@@ -207,6 +209,12 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
     monolithic whole-prompt prefills (engine ``_admit_and_prefill``: a
     pipeline-blocking pass over every stage) stall the other p-1 slots,
     while chunked prefill keeps every slot near the token budget.
+
+    ``policy`` selects the scheduling policy directly ("monolithic",
+    "chunked", "disaggregated"); the legacy ``chunked`` flag is kept as a
+    shorthand for the first two.  All three run through the same span
+    interface, so the timing model needs no per-policy branches beyond
+    the monolithic ``is_prefill`` pipeline-blocking pass.
     """
     from repro.core.sampling_params import SamplingParams
     from repro.core.scheduler import Scheduler
@@ -214,9 +222,13 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
 
     import numpy as np
 
+    if policy is None:
+        policy = "chunked" if chunked else "monolithic"
     sched = Scheduler(max_batch=max_batch, pp_degree=p,
                       max_seq_len=max(prompt_lens) + max_new_tokens + 4,
-                      token_budget=token_budget if chunked else None)
+                      token_budget=(token_budget if policy != "monolithic"
+                                    else None),
+                      policy=policy, hysteresis_tokens=hysteresis_tokens)
     for i, plen in enumerate(prompt_lens):
         sched.add_request(Sequence(i, list(range(1, plen + 1)),
                                    SamplingParams(greedy=True,
@@ -268,9 +280,16 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
             stage_free[s] = end
             stage_busy[s] += dur
             dep = end
-        slot_prev_end[out.slot] = dep
-        wall = max(wall, dep)
         cols = out.sample_indices()
+        if cols:
+            # autoregressive gate: only iterations that SAMPLE gate the
+            # slot's next round through the full pipeline + sampler
+            # round-trip (the engine's per-slot await).  Chunk-only
+            # iterations (a disaggregated prefill phase's body) stream
+            # back-to-back — the next chunk only needs the previous one's
+            # same-stage cache write, enforced by stage_free ordering.
+            slot_prev_end[out.slot] = dep
+        wall = max(wall, dep)
         ids = [out.seq_ids[i] for i in cols]
         sched.complete(it, ids, np.full(len(ids), 7, np.int32))
         it += 1
@@ -283,6 +302,32 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
         iterations=len(iter_tokens), wall_s=wall, tokens_total=toks,
         stage_busy=stage_busy, occupancy=occ, bubble_ticks=bubble_ticks,
         prefill_block_s=prefill_block, iteration_tokens=iter_tokens)
+
+
+def simulate_disaggregated(*, p: int = 2, max_batch: int = 4,
+                           token_budget: int = 32,
+                           prompt_lens: List[int],
+                           max_new_tokens: int = 16,
+                           t_token: float = 1e-4,
+                           t_fixed: float = 5e-4,
+                           hysteresis_tokens: Optional[int] = None,
+                           max_iters: int = 100_000) -> MixedWorkloadResult:
+    """TD-Pipe-style temporally-disaggregated phase scheduling through the
+    same timing model as :func:`simulate_mixed_workload` — directly
+    comparable against the chunked and monolithic policies on one trace.
+
+    The gain over chunked comes from phase-uniform iteration durations:
+    chunked interleaves budget-wide prefill-carrying iterations with
+    short decode-only iterations across slots, and the pipeline's
+    dependency structure makes every such pair cost ~2x the LONG
+    duration; grouping iterations into prefill phases (full budget, no
+    decode piggybacking) and decode phases packs the stages instead.
+    """
+    return simulate_mixed_workload(
+        p=p, max_batch=max_batch, token_budget=token_budget,
+        prompt_lens=prompt_lens, max_new_tokens=max_new_tokens,
+        t_token=t_token, t_fixed=t_fixed, policy="disaggregated",
+        hysteresis_tokens=hysteresis_tokens, max_iters=max_iters)
 
 
 def simulate_variant(costs: PipeCosts, mode, n_iters: int = 64) -> SimResult:

@@ -325,7 +325,14 @@ def bench_chunked_prefill() -> None:
     """Packed-vs-padded model time on a skewed mixed batch, plus the
     mixed-workload simulation with t_token/t_fixed CALIBRATED from the
     measured chunk-step latencies of the real engine stage (rather than
-    the previous hard-coded guesses), all recorded in BENCH_chunked.json."""
+    the previous hard-coded guesses), all recorded in BENCH_chunked.json.
+
+    Since PR 3 this is a THREE-way scheduling-policy comparison
+    (monolithic / chunked / disaggregated, docs/scheduling.md
+    §Scheduling policies), plus a prefill-heavy long-prompt trace where
+    TD-Pipe-style temporal disaggregation beats chunked piggybacking:
+    its prefill phases carry no sampling, so phase chunks stream through
+    the pipeline without the per-slot sampler round-trip."""
     import json
 
     import jax
@@ -361,32 +368,57 @@ def bench_chunked_prefill() -> None:
     emit("chunked_prefill/padded_model_time", t_padded * 1e6,
          f"tokens={len(skewed) * budget} reduction={reduction:.2%}")
 
+    POLICIES = ("monolithic", "chunked", "disaggregated")
     prompts = [200, 8, 150, 6, 180, 10, 90, 120, 5, 160, 7, 140]
     sim = {}
     for p in (2, 4):
         results = {}
-        for chunked in (False, True):
+        for policy in POLICIES:
             r = simulate_mixed_workload(
                 p=p, max_batch=4, token_budget=budget, prompt_lens=prompts,
-                max_new_tokens=24, chunked=chunked,
+                max_new_tokens=24, policy=policy,
                 t_token=t_token, t_fixed=t_fixed)
-            results[chunked] = r
-            name = "chunked" if chunked else "monolithic"
-            emit(f"chunked_prefill/p{p}_{name}", r.wall_s * 1e6,
+            results[policy] = r
+            emit(f"chunked_prefill/p{p}_{policy}", r.wall_s * 1e6,
                  f"occupancy={r.occupancy:.3f} bubble_ticks={r.bubble_ticks} "
                  f"bubble_frac={max(r.bubble_fracs):.3f} "
                  f"prefill_block_ms={r.prefill_block_s * 1e3:.1f}")
-        gain = results[False].wall_s / results[True].wall_s
+        gain = results["monolithic"].wall_s / results["chunked"].wall_s
         emit(f"chunked_prefill/p{p}_speedup", 0.0,
              f"wall_gain={gain:.2f}x occupancy "
-             f"{results[False].occupancy:.3f}->{results[True].occupancy:.3f}")
+             f"{results['monolithic'].occupancy:.3f}->"
+             f"{results['chunked'].occupancy:.3f}")
         sim[f"p{p}"] = {
             "wall_gain": gain,
-            "occupancy_monolithic": results[False].occupancy,
-            "occupancy_chunked": results[True].occupancy,
-            "bubble_ticks_monolithic": results[False].bubble_ticks,
-            "bubble_ticks_chunked": results[True].bubble_ticks,
+            "wall_s": {k: results[k].wall_s for k in POLICIES},
+            "occupancy_monolithic": results["monolithic"].occupancy,
+            "occupancy_chunked": results["chunked"].occupancy,
+            "occupancy_disaggregated": results["disaggregated"].occupancy,
+            "bubble_ticks_monolithic": results["monolithic"].bubble_ticks,
+            "bubble_ticks_chunked": results["chunked"].bubble_ticks,
+            "bubble_ticks_disaggregated": results["disaggregated"].bubble_ticks,
         }
+
+    # -- prefill-heavy long-prompt trace: the TD-Pipe regime --------------
+    # chunked piggybacks decodes into every iteration, so every iteration
+    # pays the per-slot pipeline+sampler round-trip before the slot's next
+    # batch can be built; disaggregated prefill phases sample nothing and
+    # stream their chunks back-to-back (engine run-loop per-slot gate)
+    heavy = [2400, 40, 2000, 30, 2200, 50, 1800, 60]
+    heavy_budget, heavy_new = 512, 16
+    hres = {}
+    for policy in POLICIES:
+        r = simulate_mixed_workload(
+            p=2, max_batch=4, token_budget=heavy_budget, prompt_lens=heavy,
+            max_new_tokens=heavy_new, policy=policy,
+            t_token=t_token, t_fixed=t_fixed)
+        hres[policy] = r
+        emit(f"chunked_prefill/prefill_heavy_{policy}", r.wall_s * 1e6,
+             f"occupancy={r.occupancy:.3f} iterations={r.iterations}")
+    d_vs_c = hres["chunked"].wall_s / hres["disaggregated"].wall_s
+    d_vs_m = hres["monolithic"].wall_s / hres["disaggregated"].wall_s
+    emit("chunked_prefill/prefill_heavy_disagg_gain", 0.0,
+         f"wall_gain_vs_chunked={d_vs_c:.2f}x vs_monolithic={d_vs_m:.2f}x")
 
     with open("BENCH_chunked.json", "w") as f:
         json.dump({
@@ -402,6 +434,15 @@ def bench_chunked_prefill() -> None:
                 "model_time_reduction": reduction,
             },
             "simulation": sim,
+            "prefill_heavy": {
+                "trace": heavy,
+                "token_budget": heavy_budget,
+                "max_new_tokens": heavy_new,
+                "p": 2,
+                "wall_s": {k: hres[k].wall_s for k in POLICIES},
+                "wall_gain_disaggregated_vs_chunked": d_vs_c,
+                "wall_gain_disaggregated_vs_monolithic": d_vs_m,
+            },
         }, f, indent=2)
     emit("chunked_prefill/bench_json", 0.0, "wrote BENCH_chunked.json")
 

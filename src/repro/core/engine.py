@@ -100,9 +100,11 @@ def _make_stage(model: Model, idx: int, p: int, bounds, sp) -> PPStage:
     def prefill_fn(params, x_or_tokens, pos0, last_idx):
         """last_idx [B]: each sequence's final real position (ragged
         batches are right-padded; logits must come from the true last
-        token, not the pad tail)."""
+        token, not the pad tail — and windowed models also need the real
+        lengths so pad-tail K/V stays out of the rolling cache)."""
         s = x_or_tokens.shape[1]
-        ctx = model.make_ctx("prefill", pos0 + jnp.arange(s))
+        ctx = model.make_ctx("prefill", pos0 + jnp.arange(s),
+                             seq_lens=last_idx + 1)
         x = model.embed_tokens({"embed": params["embed"]}, x_or_tokens) if first \
             else x_or_tokens
         x, cache = run_stack(sub, params["blocks"], x, ctx, remat=False)
@@ -168,9 +170,16 @@ class EngineConfig:
     tsem: bool = True               # False -> synchronous prepare+execute
     sat: bool = True                # False -> structure-unaware transmission
     channel_round_latency_s: float = 0.0   # inject per-round cost for benches
-    # per-iteration token budget for chunked prefill (None = monolithic
-    # whole-prompt prefill, the seed behavior); see docs/scheduling.md
+    # per-iteration token budget for span scheduling policies (None =
+    # monolithic whole-prompt prefill, the seed behavior)
     prefill_chunk_tokens: Optional[int] = None
+    # scheduling policy: "auto" (budget -> chunked, else monolithic),
+    # "monolithic", "chunked", or "disaggregated" (TD-Pipe-style phase
+    # scheduling); see docs/scheduling.md §Scheduling policies
+    scheduling_policy: str = "auto"
+    # disaggregated decode->prefill switch threshold in pending prefill
+    # tokens per paused decode slot (None = the token budget)
+    phase_hysteresis_tokens: Optional[int] = None
     seed: int = 0
 
 
@@ -290,14 +299,16 @@ class PPEngineBase:
         self.model = model
         self.cfg = cfg
         self.arch: ArchConfig = model.cfg
-        if cfg.prefill_chunk_tokens is not None and \
-                self.arch.family not in ("dense", "moe"):
-            raise NotImplementedError(
-                "chunked prefill requires the dense/moe 'chunk' model mode; "
-                f"family {self.arch.family!r} is not supported yet")
         self.scheduler = Scheduler(max_batch=cfg.max_batch, pp_degree=cfg.pp_degree,
                                    max_seq_len=cfg.max_seq_len,
-                                   token_budget=cfg.prefill_chunk_tokens)
+                                   token_budget=cfg.prefill_chunk_tokens,
+                                   policy=cfg.scheduling_policy,
+                                   hysteresis_tokens=cfg.phase_hysteresis_tokens)
+        if self.scheduler.chunked and self.arch.family not in ("dense", "moe"):
+            raise NotImplementedError(
+                "span scheduling policies (chunked/disaggregated) require "
+                "the dense/moe 'chunk' model mode; "
+                f"family {self.arch.family!r} is not supported yet")
         if self.scheduler.chunked and self.arch.window and \
                 self.scheduler.token_budget > self.arch.window:
             # rolling caches scatter one slot per span token (slot = pos % W);
@@ -465,11 +476,34 @@ class PPEngineBase:
                 self.seq_cache.advance(sid)
 
     def run(self, max_iterations: int = 10_000) -> List[Sequence]:
-        """Drive the pipeline until all requests finish."""
+        """Drive the pipeline until all requests finish.
+
+        The admission/drain loop is policy-agnostic thanks to the span
+        interface.  Monolithic admission (``is_prefill``) drains in-flight
+        iterations and runs the pipeline-blocking prefill; span policies
+        (chunked/disaggregated) admit KV rows lazily on a sequence's first
+        chunk.  Disaggregated phase boundaries need no special casing
+        here: prefill phases emit chunk-only spans at the full token
+        budget, decode phases emit pure 1-token spans (``max_span == 1``)
+        that take the flat ``decode_fn`` path and TSEM's incremental
+        n/n+p metadata fast path; a slot with no schedulable work in the
+        current phase yields ``sched is None`` and simply idles.
+        """
         self.t_start = time.monotonic()
         it = 0
         inflight: List[SchedulingOutput] = []
         while it < max_iterations:
+            # autoregressive gate: this slot's prior SAMPLING iterations
+            # must land before building its next batch (their tokens and
+            # finishes feed the spans); chunk-only iterations (empty
+            # sample set — the body of a disaggregated prefill phase)
+            # don't gate, so phase chunks stream through the pipeline
+            # back-to-back like training microbatches
+            for d in [d for d in inflight
+                      if d.slot == it % self.cfg.pp_degree
+                      and d.sample_indices()]:
+                self._await_iteration(d)
+                inflight.remove(d)
             sched = self.scheduler.schedule(it)
             if sched is not None:
                 if sched.is_prefill:     # monolithic path (chunking off)
@@ -481,7 +515,7 @@ class PPEngineBase:
                     self._admit_and_prefill(sched)
                     sched = self.scheduler.schedule(it)  # rebuilt after prefill
                 if sched is not None:
-                    # chunked path admits KV rows lazily, on first chunk
+                    # span policies admit KV rows lazily, on first chunk
                     for sid in sched.seq_ids:
                         if self.seq_cache.lookup(sid) is None:
                             self.seq_cache.admit(
@@ -489,8 +523,19 @@ class PPEngineBase:
                     self.bic_i.put(sched)
                     self._submit(sched)
                     inflight.append(sched)
-            # retire in order once the pipeline depth is reached
+            # retire in order once the pipeline depth is reached; a
+            # chunk-only head (no sampled columns) streams instead of
+            # gating, bounded at 4p so the executor queues stay shallow.
+            # Streaming holds even when THIS slot yielded no work (a
+            # prefill phase routinely idles decode-deferred slots): a
+            # chunk-only iteration in flight implies a mid-prefill slot
+            # member, so its slot keeps producing output and the loop
+            # cannot spin — only sampling heads must gate on completion
             while len(inflight) >= (self.cfg.pp_degree if sched is not None else 1):
+                if (inflight[0].spans
+                        and not inflight[0].sample_indices()
+                        and len(inflight) < 4 * self.cfg.pp_degree):
+                    break
                 done = inflight.pop(0)
                 self._await_iteration(done)
             if not self.scheduler.has_work and not inflight:
@@ -525,7 +570,7 @@ class PPEngineBase:
         for s in self.scheduler.finished:
             if s.finish_t and s.first_token_t and len(s.output_ids) > 1:
                 tpots.append((s.finish_t - s.first_token_t) / (len(s.output_ids) - 1))
-        return {
+        out = {
             "wall_s": wall,
             "tokens": toks,
             "throughput_tok_s": toks / wall,
@@ -535,7 +580,11 @@ class PPEngineBase:
             "stages": per_stage,
             "incremental_hits": sum(w.meta_cache.incremental_hits for w in self.stages),
             "meta_rebuilds": sum(w.meta_cache.rebuilds for w in self.stages),
+            "policy": self.scheduler.policy.name,
         }
+        for k, v in self.scheduler.policy.metrics().items():
+            out[f"policy_{k}"] = v
+        return out
 
 
 class SiPipeEngine(PPEngineBase):

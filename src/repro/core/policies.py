@@ -1,0 +1,399 @@
+"""Pluggable scheduling policies behind the SchedulingOutput span interface.
+
+The continuous-batching scheduler (repro.core.scheduler) owns the durable
+state — sequences, the waiting queue, per-slot membership — and delegates
+each iteration's admission + span construction to a ``SchedulingPolicy``:
+
+  monolithic     whole-prompt prefills dispatched as pipeline-blocking
+                 ``is_prefill`` batches (the seed behavior; the engine's
+                 ``_admit_and_prefill`` runs them through every stage).
+  chunked        SARATHI-style chunked prefill: decode members always carry
+                 their 1 token, the remaining per-iteration token budget is
+                 handed to prefilling members as prompt chunks (PR 1-2).
+  disaggregated  TD-Pipe-style temporal disaggregation: the pipeline
+                 alternates *prefill phases* (iterations carry only prompt
+                 chunks at the full token budget, zero decode piggybacking;
+                 admission happens here) and *decode phases* (pure 1-token
+                 iterations that keep the TSEM incremental n/n+p fast path),
+                 switched by a hysteresis threshold on pending-prefill
+                 tokens vs. the in-flight decode slots being paused.
+
+Every policy emits the same per-seq ``(offset, n_tokens)`` spans, so TSEM
+staging, the packed [T] chunk execution path, SAT transmission and the
+sampler pool need no wire changes; a new policy (e.g. a latency-SLO
+adaptive budget) is a subclass here, not an engine fork.  See
+docs/scheduling.md §Scheduling policies.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.sequence import SeqStatus, Sequence
+
+if TYPE_CHECKING:  # avoid the runtime cycle scheduler <-> policies
+    from repro.core.scheduler import Scheduler, SchedulingOutput
+
+
+def _span_output(s: "Scheduler", it: int, slot: int, batch_ids: List[int],
+                 spans: List[Tuple[int, int]], span_tokens: List[List[int]],
+                 needs_sample: List[bool], recomposed: bool) -> "SchedulingOutput":
+    """Assemble a span-carrying SchedulingOutput (shared by span policies)."""
+    from repro.core.scheduler import SchedulingOutput
+
+    return SchedulingOutput(
+        iteration=it,
+        slot=slot,
+        seq_ids=batch_ids,
+        positions=np.array([off for off, _ in spans], np.int32),
+        tokens=np.array([t[0] for t in span_tokens], np.int32),
+        is_prefill=False,          # no monolithic pipeline-blocking pass
+        prompt_lens=[s.seqs[q].prompt_len for q in batch_ids],
+        batch_recomposed=recomposed,
+        spans=spans,
+        span_tokens=span_tokens,
+        needs_sample=needs_sample,
+    )
+
+
+class SchedulingPolicy:
+    """Builds one iteration's SchedulingOutput from scheduler state.
+
+    ``uses_spans`` declares the execution contract: span policies emit
+    per-seq ``(offset, n_tokens)`` spans executed through the packed-[T]
+    chunk path (and require a token budget); the monolithic policy emits
+    flat decode batches plus ``is_prefill`` admission batches.
+    """
+
+    name: str = "?"
+    uses_spans: bool = False
+
+    def schedule(self, s: "Scheduler", it: int) -> Optional["SchedulingOutput"]:
+        raise NotImplementedError
+
+    def metrics(self) -> Dict[str, int]:
+        """Policy-specific counters, merged into engine metrics."""
+        return {}
+
+    @staticmethod
+    def _alive_members(s: "Scheduler", slot: int) -> Tuple[List[int], bool]:
+        """Slot membership minus finished sequences; True if it shrank."""
+        members = [sid for sid in s.slot_members[slot]
+                   if s.seqs[sid].status == SeqStatus.RUNNING]
+        return members, len(members) != len(s.slot_members[slot])
+
+
+class MonolithicPolicy(SchedulingPolicy):
+    """Seed behavior: admit waiters as whole-prompt ``is_prefill`` batches
+    (the engine prefills them through every stage, pipeline-blocking), then
+    run flat 1-token decode iterations."""
+
+    name = "monolithic"
+    uses_spans = False
+
+    def schedule(self, s: "Scheduler", it: int) -> Optional["SchedulingOutput"]:
+        from repro.core.scheduler import SchedulingOutput
+
+        slot = it % s.p
+        members, recomposed = self._alive_members(s, slot)
+        new_prefill: List[int] = []
+        while s.waiting and len(members) < s.max_batch:
+            seq = s.waiting.popleft()
+            seq.status = SeqStatus.RUNNING
+            seq.prefilled = len(seq.prompt_ids)   # monolithic: all at once
+            members.append(seq.seq_id)
+            new_prefill.append(seq.seq_id)
+            recomposed = True
+        s.slot_members[slot] = members
+        if not members:
+            return None
+
+        tokens = np.array([s.seqs[sid].last_token for sid in members], np.int32)
+        positions = np.array([s.seqs[sid].length - 1 for sid in members], np.int32)
+        return SchedulingOutput(
+            iteration=it,
+            slot=slot,
+            seq_ids=list(members),
+            positions=positions,
+            tokens=tokens,
+            is_prefill=bool(new_prefill),
+            prompt_lens=[len(s.seqs[q].prompt_ids) for q in members],
+            batch_recomposed=recomposed,
+        )
+
+
+class ChunkedPolicy(SchedulingPolicy):
+    """SARATHI-style chunked prefill piggybacked on decodes (PR 1-2).
+
+    Decode members are always carried (1 token each); prefill chunks share
+    whatever budget remains, in slot-membership order; admission continues
+    while the slot has space and budget."""
+
+    name = "chunked"
+    uses_spans = True
+
+    def schedule(self, s: "Scheduler", it: int) -> Optional["SchedulingOutput"]:
+        slot = it % s.p
+        members, recomposed = self._alive_members(s, slot)
+
+        n_decode = sum(1 for sid in members if s.seqs[sid].prefill_done)
+        budget_left = s.token_budget - n_decode
+
+        batch_ids: List[int] = []
+        spans: List[Tuple[int, int]] = []
+        span_tokens: List[List[int]] = []
+        needs_sample: List[bool] = []
+
+        def emit(seq: Sequence):
+            nonlocal budget_left
+            if seq.prefill_done:
+                off = seq.length - 1
+                spans.append((off, 1))
+                span_tokens.append([seq.last_token])
+                needs_sample.append(True)
+                batch_ids.append(seq.seq_id)
+                return True
+            c = min(seq.prompt_len - seq.prefilled, budget_left)
+            if c <= 0:
+                return False          # deferred: stays a slot member
+            off = seq.prefilled
+            spans.append((off, c))
+            span_tokens.append(list(seq.prompt_ids[off:off + c]))
+            needs_sample.append(off + c >= seq.prompt_len)
+            batch_ids.append(seq.seq_id)
+            seq.prefilled = off + c   # chunk issued: next schedule continues
+            budget_left -= c
+            return True
+
+        deferred = False
+        for sid in members:
+            if not emit(s.seqs[sid]):
+                deferred = True
+        while (s.waiting and len(members) < s.max_batch
+               and budget_left > 0):
+            seq = s.waiting.popleft()
+            seq.status = SeqStatus.RUNNING
+            members.append(seq.seq_id)
+            recomposed = True
+            emit(seq)
+
+        s.slot_members[slot] = members
+        if not batch_ids:
+            return None
+        # any chunked batch (or deferral gap) recomposes vs. pure decode
+        recomposed = recomposed or deferred or any(c > 1 for _, c in spans)
+        return _span_output(s, it, slot, batch_ids, spans, span_tokens,
+                            needs_sample, recomposed)
+
+
+class DisaggregatedPolicy(SchedulingPolicy):
+    """TD-Pipe-style temporally-disaggregated phase scheduling.
+
+    The whole pipeline (all p slots) is either in a *prefill phase* or a
+    *decode phase*:
+
+      prefill phase  iterations carry only prompt chunks, each slot using
+                     the FULL token budget (zero decode piggybacking);
+                     waiting sequences are admitted here.  Decode-ready
+                     members are deferred (stay slot members, excluded from
+                     the batch).
+      decode phase   pure 1-token decode iterations — ``max_span == 1``, so
+                     the engine runs the flat decode fast path and TSEM's
+                     incremental n/n+p metadata update applies.  Prefilling
+                     is never interleaved; no admission happens here.
+
+    Phase machine (re-evaluated before every schedule call; the switch is
+    global, so iteration durations stay uniform within a phase — the
+    load-imbalance bubble TD-Pipe targets):
+
+      PREFILL -> DECODE  when no prefill work is schedulable: every running
+                         sequence finished its prefill and no waiter can be
+                         admitted (queue empty or slots full).  Entering
+                         decode therefore never strands a half-prefilled
+                         sequence.
+      DECODE  -> PREFILL when the pending prefill backlog justifies pausing
+                         the in-flight decodes:
+                           pending_tokens >= hysteresis_tokens * n_decode_slots
+                         where ``pending_tokens`` counts only ADMISSIBLE
+                         waiting prompts (the first ``free-seat-count``
+                         queue entries — a deep queue behind one free seat
+                         must not thrash the phase), ``n_decode_slots`` is
+                         the number of slots currently carrying decode work
+                         (the slots a prefill phase would pause), and
+                         ``hysteresis_tokens`` defaults to the token budget
+                         (one full prefill iteration per paused slot).
+                         Forced immediately when no decode work remains, so
+                         waiters never starve.
+
+    On a static workload (everything admitted, empty queue) the phase
+    switches at most once, PREFILL -> DECODE; the threshold cannot re-fire
+    because pending prefill stays zero — the no-oscillation property
+    (tests/test_policies.py).
+    """
+
+    name = "disaggregated"
+    uses_spans = True
+
+    PREFILL = "prefill"
+    DECODE = "decode"
+
+    def __init__(self, hysteresis_tokens: Optional[int] = None):
+        self.hysteresis_tokens = hysteresis_tokens   # None -> token budget
+        self.phase = self.PREFILL
+        self.phase_switches = 0
+        self.prefill_iters = 0
+        self.decode_iters = 0
+
+    def metrics(self) -> Dict[str, int]:
+        return {
+            "phase": self.phase,
+            "phase_switches": self.phase_switches,
+            "prefill_iters": self.prefill_iters,
+            "decode_iters": self.decode_iters,
+        }
+
+    # -- phase machine ------------------------------------------------------
+    def _switch(self, phase: str):
+        self.phase = phase
+        self.phase_switches += 1
+
+    def _evaluate_phase(self, s: "Scheduler"):
+        running = [q for q in s.seqs.values() if q.status == SeqStatus.RUNNING]
+        n_decode = sum(1 for q in running if q.prefill_done)
+        run_prefill = sum(q.prompt_len - q.prefilled for q in running
+                          if not q.prefill_done)
+        slot_alive = [sum(1 for sid in m
+                          if s.seqs[sid].status == SeqStatus.RUNNING)
+                      for m in s.slot_members]
+        space = sum(max(0, s.max_batch - a) for a in slot_alive)
+        # only the ADMISSIBLE backlog counts: the first `space` waiting
+        # prompts (FIFO admission) — a deep queue behind one free seat
+        # must not fire the threshold, pause every decode slot, and then
+        # flip straight back (phase thrash)
+        waiting_tokens = sum(q.prompt_len
+                             for q, _ in zip(s.waiting, range(space)))
+
+        if self.phase == self.PREFILL:
+            # leave only when nothing is prefillable: running prefills done
+            # AND no admission possible — so decode never strands a
+            # half-prefilled sequence
+            if run_prefill == 0 and waiting_tokens == 0 and n_decode > 0:
+                self._switch(self.DECODE)
+            return
+        # DECODE phase: running sequences are all prefill_done (the entry
+        # condition), so pending prefill is exactly the admissible backlog
+        if waiting_tokens == 0:
+            return
+        if n_decode == 0:
+            self._switch(self.PREFILL)   # forced: no decode work at all
+            return
+        n_decode_slots = sum(
+            1 for m in s.slot_members
+            if any(s.seqs[sid].status == SeqStatus.RUNNING
+                   and s.seqs[sid].prefill_done for sid in m))
+        h = (self.hysteresis_tokens if self.hysteresis_tokens is not None
+             else s.token_budget)
+        if waiting_tokens >= h * max(1, n_decode_slots):
+            self._switch(self.PREFILL)
+
+    # -- per-slot dispatch --------------------------------------------------
+    def schedule(self, s: "Scheduler", it: int) -> Optional["SchedulingOutput"]:
+        self._evaluate_phase(s)
+        slot = it % s.p
+        members, recomposed = self._alive_members(s, slot)
+
+        if self.phase == self.DECODE:
+            s.slot_members[slot] = members
+            batch_ids = [sid for sid in members if s.seqs[sid].prefill_done]
+            if not batch_ids:
+                return None
+            spans = []
+            span_tokens = []
+            for sid in batch_ids:
+                seq = s.seqs[sid]
+                spans.append((seq.length - 1, 1))
+                span_tokens.append([seq.last_token])
+            recomposed = recomposed or len(batch_ids) != len(members)
+            self.decode_iters += 1
+            return _span_output(s, it, slot, batch_ids, spans, span_tokens,
+                                [True] * len(batch_ids), recomposed)
+
+        # PREFILL phase: full budget to prompt chunks, decodes deferred
+        budget_left = s.token_budget
+        batch_ids, spans, span_tokens, needs_sample = [], [], [], []
+        deferred = False
+
+        def emit_chunk(seq: Sequence) -> bool:
+            nonlocal budget_left
+            c = min(seq.prompt_len - seq.prefilled, budget_left)
+            if c <= 0:
+                return False
+            off = seq.prefilled
+            spans.append((off, c))
+            span_tokens.append(list(seq.prompt_ids[off:off + c]))
+            needs_sample.append(off + c >= seq.prompt_len)
+            batch_ids.append(seq.seq_id)
+            seq.prefilled = off + c
+            budget_left -= c
+            return True
+
+        for sid in members:
+            seq = s.seqs[sid]
+            if seq.prefill_done or not emit_chunk(seq):
+                deferred = True       # decode members pause during prefill
+        while (s.waiting and len(members) < s.max_batch
+               and budget_left > 0):
+            seq = s.waiting.popleft()
+            seq.status = SeqStatus.RUNNING
+            members.append(seq.seq_id)
+            recomposed = True
+            emit_chunk(seq)
+
+        s.slot_members[slot] = members
+        if not batch_ids:
+            return None
+        self.prefill_iters += 1
+        recomposed = recomposed or deferred or any(c > 1 for _, c in spans)
+        return _span_output(s, it, slot, batch_ids, spans, span_tokens,
+                            needs_sample, recomposed)
+
+
+POLICIES = {
+    "monolithic": MonolithicPolicy,
+    "chunked": ChunkedPolicy,
+    "disaggregated": DisaggregatedPolicy,
+}
+
+
+def make_policy(name: Optional[str], *, token_budget: Optional[int] = None,
+                hysteresis_tokens: Optional[int] = None) -> SchedulingPolicy:
+    """Resolve a policy name against the token budget.
+
+    ``None``/``"auto"`` keeps the historical contract: a token budget means
+    chunked, no budget means monolithic.  Span policies require a budget;
+    the monolithic policy rejects one (it would be silently ignored).
+    """
+    if name is None or name == "auto":
+        name = "chunked" if token_budget is not None else "monolithic"
+    if name not in POLICIES:
+        raise ValueError(
+            f"unknown scheduling policy {name!r}; choose from "
+            f"{sorted(POLICIES)}")
+    if hysteresis_tokens is not None and name != "disaggregated":
+        raise ValueError(
+            "phase_hysteresis_tokens / --hysteresis-tokens applies only "
+            f"to the disaggregated policy (got policy {name!r})")
+    if name == "monolithic":
+        if token_budget is not None:
+            raise ValueError(
+                "monolithic policy takes no token budget "
+                "(prefill_chunk_tokens / --chunk-tokens must be unset)")
+        return MonolithicPolicy()
+    if token_budget is None:
+        raise ValueError(
+            f"{name} policy requires a per-iteration token budget "
+            "(set prefill_chunk_tokens / --chunk-tokens)")
+    if name == "disaggregated":
+        return DisaggregatedPolicy(hysteresis_tokens=hysteresis_tokens)
+    return ChunkedPolicy()

@@ -1,4 +1,4 @@
-"""Continuous-batching scheduler (SiPipe §4.2) with chunked prefill.
+"""Continuous-batching scheduler (SiPipe §4.2) with pluggable policies.
 
 Keeps p microbatches in flight (one per pipeline stage).  On receiving
 iteration n's sampling output it immediately dispatches iteration n+p with
@@ -6,24 +6,28 @@ the same sequence set minus finished ones plus admitted waiters — which is
 exactly the stability property the column-wise sampler and the TSEM
 BatchMetadata replicas rely on (batches n and n+p are near-identical).
 
-Chunked prefill (SARATHI-style, opt-in via ``token_budget``): instead of
-dispatching whole-prompt prefills as monolithic pipeline-blocking batches,
-long prompts are split into fixed-token-budget chunks that piggyback on
-the slot's in-flight decode tokens, so every iteration of every slot
-carries a near-constant token count:
+The scheduler owns the durable state (sequences, waiting queue, slot
+membership, completion bookkeeping); WHAT each iteration carries is
+delegated to a :class:`repro.core.policies.SchedulingPolicy`:
+
+  monolithic     whole-prompt ``is_prefill`` batches + flat decodes (the
+                 seed behavior; selected when ``token_budget`` is None).
+  chunked        SARATHI-style chunked prefill (opt-in via
+                 ``token_budget``): long prompts are split into
+                 fixed-token-budget chunks piggybacked on the slot's
+                 in-flight decode tokens.
+  disaggregated  TD-Pipe-style temporal disaggregation: the pipeline
+                 alternates prefill-only and decode-only phases under a
+                 hysteresis threshold (opt-in via ``policy=``).
+
+Span-policy contract (chunked + disaggregated):
 
   * each scheduled iteration emits per-seq *spans* ``(offset, n_tokens)``
     — a decode step is the degenerate span ``(length-1, 1)``;
-  * decode tokens are always scheduled; the remaining budget is handed to
-    prefilling members (admission order) as chunks;
   * sampling fires only for sequences whose span reaches the last prompt
     token (``needs_sample``) — earlier chunks produce no token;
   * total tokens per iteration never exceed ``token_budget`` (the budget
     is clamped to ``max_batch + 1`` so prefill always makes progress).
-
-With ``token_budget=None`` the scheduler behaves exactly like the seed
-monolithic path (``is_prefill`` batches handled by the engine's
-``_admit_and_prefill``).
 
 Chunk-carrying iterations are executed over a *packed ragged* layout —
 the batch's valid span tokens concatenated into flat [T] vectors and
@@ -39,7 +43,6 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.sampling_params import SamplingParams
 from repro.core.sequence import SeqStatus, Sequence
 
 
@@ -128,14 +131,20 @@ class SchedulingOutput:
 class Scheduler:
     def __init__(self, *, max_batch: int, pp_degree: int = 1,
                  max_seq_len: int = 4096,
-                 token_budget: Optional[int] = None):
+                 token_budget: Optional[int] = None,
+                 policy: Optional[str] = None,
+                 hysteresis_tokens: Optional[int] = None):
+        from repro.core.policies import make_policy
+
         self.max_batch = max_batch
         self.p = pp_degree
         self.max_seq_len = max_seq_len
-        # chunked prefill is enabled iff a budget is given; decode members
-        # take 1 token each, so budget > max_batch guarantees progress
+        # span policies need a budget; decode members take 1 token each,
+        # so budget > max_batch guarantees prefill progress
         self.token_budget = (max(token_budget, max_batch + 1)
                              if token_budget is not None else None)
+        self.policy = make_policy(policy, token_budget=self.token_budget,
+                                  hysteresis_tokens=hysteresis_tokens)
         self.waiting: Deque[Sequence] = deque()
         self.seqs: Dict[int, Sequence] = {}
         self.slot_members: List[List[int]] = [[] for _ in range(pp_degree)]
@@ -144,7 +153,8 @@ class Scheduler:
 
     @property
     def chunked(self) -> bool:
-        return self.token_budget is not None
+        """True when the active policy emits spans (packed-[T] execution)."""
+        return self.policy.uses_spans
 
     # -- request ingestion --------------------------------------------------
     def add_request(self, seq: Sequence):
@@ -165,113 +175,12 @@ class Scheduler:
     # -- iteration dispatch ---------------------------------------------------
     def schedule(self, iteration: Optional[int] = None) -> Optional[SchedulingOutput]:
         """Build the scheduling output for the next iteration of slot
-        ``iteration %% p``, topping the slot up from the waiting queue."""
+        ``iteration %% p``, delegating admission + span construction to the
+        active :class:`~repro.core.policies.SchedulingPolicy`."""
         it = self.iteration if iteration is None else iteration
-        if self.chunked:
-            return self._schedule_chunked(it)
-        slot = it % self.p
-        members = [sid for sid in self.slot_members[slot]
-                   if self.seqs[sid].status == SeqStatus.RUNNING]
-        recomposed = len(members) != len(self.slot_members[slot])
-        new_prefill: List[int] = []
-        while self.waiting and len(members) < self.max_batch:
-            seq = self.waiting.popleft()
-            seq.status = SeqStatus.RUNNING
-            seq.prefilled = len(seq.prompt_ids)   # monolithic: all at once
-            members.append(seq.seq_id)
-            new_prefill.append(seq.seq_id)
-            recomposed = True
-        self.slot_members[slot] = members
-        if not members:
-            return None
-
-        tokens = np.array([self.seqs[sid].last_token for sid in members], np.int32)
-        positions = np.array([self.seqs[sid].length - 1 for sid in members], np.int32)
-        out = SchedulingOutput(
-            iteration=it,
-            slot=slot,
-            seq_ids=list(members),
-            positions=positions,
-            tokens=tokens,
-            is_prefill=bool(new_prefill),
-            prompt_lens=[len(self.seqs[s].prompt_ids) for s in members],
-            batch_recomposed=recomposed,
-        )
-        self.iteration = max(self.iteration, it + 1)
-        return out
-
-    # -- chunked-prefill dispatch ------------------------------------------
-    def _schedule_chunked(self, it: int) -> Optional[SchedulingOutput]:
-        slot = it % self.p
-        members = [sid for sid in self.slot_members[slot]
-                   if self.seqs[sid].status == SeqStatus.RUNNING]
-        recomposed = len(members) != len(self.slot_members[slot])
-
-        # decode members are always carried (1 token each); prefill chunks
-        # share whatever budget remains, in slot-membership order
-        n_decode = sum(1 for sid in members if self.seqs[sid].prefill_done)
-        budget_left = self.token_budget - n_decode
-
-        batch_ids: List[int] = []
-        spans: List[Tuple[int, int]] = []
-        span_tokens: List[List[int]] = []
-        needs_sample: List[bool] = []
-
-        def emit(seq: Sequence):
-            nonlocal budget_left
-            if seq.prefill_done:
-                off = seq.length - 1
-                spans.append((off, 1))
-                span_tokens.append([seq.last_token])
-                needs_sample.append(True)
-                batch_ids.append(seq.seq_id)
-                return True
-            c = min(seq.prompt_len - seq.prefilled, budget_left)
-            if c <= 0:
-                return False          # deferred: stays a slot member
-            off = seq.prefilled
-            spans.append((off, c))
-            span_tokens.append(list(seq.prompt_ids[off:off + c]))
-            needs_sample.append(off + c >= seq.prompt_len)
-            batch_ids.append(seq.seq_id)
-            seq.prefilled = off + c   # chunk issued: next schedule continues
-            budget_left -= c
-            return True
-
-        deferred = False
-        for sid in members:
-            if not emit(self.seqs[sid]):
-                deferred = True
-        while (self.waiting and len(members) < self.max_batch
-               and budget_left > 0):
-            seq = self.waiting.popleft()
-            seq.status = SeqStatus.RUNNING
-            members.append(seq.seq_id)
-            recomposed = True
-            emit(seq)
-
-        self.slot_members[slot] = members
-        if not batch_ids:
-            return None
-        # any chunked batch (or deferral gap) recomposes vs. pure decode
-        recomposed = recomposed or deferred or any(c > 1 for _, c in spans)
-
-        tokens = np.array([t[0] for t in span_tokens], np.int32)
-        positions = np.array([off for off, _ in spans], np.int32)
-        out = SchedulingOutput(
-            iteration=it,
-            slot=slot,
-            seq_ids=batch_ids,
-            positions=positions,
-            tokens=tokens,
-            is_prefill=False,          # no monolithic pipeline-blocking pass
-            prompt_lens=[self.seqs[s].prompt_len for s in batch_ids],
-            batch_recomposed=recomposed,
-            spans=spans,
-            span_tokens=span_tokens,
-            needs_sample=needs_sample,
-        )
-        self.iteration = max(self.iteration, it + 1)
+        out = self.policy.schedule(self, it)
+        if out is not None:
+            self.iteration = max(self.iteration, it + 1)
         return out
 
     # -- sampling-output ingestion ----------------------------------------

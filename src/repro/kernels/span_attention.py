@@ -27,6 +27,13 @@ Three variants, matching the pure-jnp oracles in
                           span's fresh K/V feed one running softmax
                           (attend-then-scatter — see the jnp oracle's
                           docstring for why scatter-first is wrong).
+  span_attention_rolling_quant
+                          the int8 + sliding-window combination: the
+                          old-cache source runs s8 x s8 -> s32 dots with
+                          folded scales; the span's own fresh K/V is
+                          still bf16, so the intra-span source keeps
+                          full-precision dots — both into one running
+                          softmax.
 
 Layouts: q [T, H, hd]; caches [B, S, Kv, hd]; positions/seq_idx [T].
 """
@@ -333,6 +340,167 @@ def _rolling_kernel(seq_ref, pos_ref, off_ref, nv_ref, q_ref, k_ref, v_ref,
         denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
         out = acc_scr[...] / denom
         o_ref[0] = out.reshape(o_ref.shape[1:]).astype(o_ref.dtype)
+
+
+def _rolling_quant_kernel(seq_ref, pos_ref, off_ref, nv_ref, q_ref, k_ref,
+                          ks_ref, v_ref, vs_ref, ksp_ref, vsp_ref, posv_ref,
+                          seqv_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                          kv_block: int, g: int, scale: float, ns: int,
+                          window: int, w_slots: int):
+    i_t = pl.program_id(0)
+    i_s = pl.program_id(1)
+
+    @pl.when(i_s == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[i_t]
+    off = off_ref[i_t]
+
+    def _accumulate(s, update_acc):
+        """One running-softmax step; ``update_acc(p, corr)`` folds the AV
+        contraction (int8 cache blocks requantize p, the fp span doesn't)."""
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=2))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=2)
+        update_acc(p, corr)
+        m_scr[...] = m_new
+
+    # old-cache source: s8 x s8 -> s32 dots with folded scales, masked by
+    # the reconstructed stored position (age + window)
+    @pl.when((i_s < ns) & (off >= 1))
+    def _cache_block():
+        q = q_ref[0].astype(jnp.float32)               # [H, hd]
+        k8 = k_ref[0]                                  # [kb, Kv, hd] int8
+        v8 = v_ref[0]
+        ks = ks_ref[0].astype(jnp.float32)             # [kb, Kv]
+        vs = vs_ref[0].astype(jnp.float32)
+        h, hd = q.shape
+        kv = k8.shape[1]
+        q8, qs = _quantize(q.reshape(kv, g, hd))       # s8, [Kv, G]
+        s32 = jax.lax.dot_general(
+            q8, k8.transpose(1, 2, 0),                 # [Kv, hd, kb] s8
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32)
+        s = s32.astype(jnp.float32) * qs[..., None] \
+            * ks.T[:, None, :] * scale
+        slot = i_s * kv_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        stored = off - 1 - ((off - 1 - slot) % w_slots)
+        valid = (stored >= 0) & (stored > pos - window)
+        s = jnp.where(valid, s, NEG_INF)
+
+        def update_acc(p, corr):
+            pv = p * vs.T[:, None, :]                  # fold V scales
+            p8, ps = _quantize(pv)
+            o32 = jax.lax.dot_general(
+                p8, v8.transpose(1, 0, 2),             # [Kv, kb, hd] s8
+                (((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.int32)
+            acc_scr[...] = acc_scr[...] * corr[..., None] + \
+                o32.astype(jnp.float32) * ps[..., None]
+
+        _accumulate(s, update_acc)
+
+    # intra-span source: the packed chunk's own fresh bf16 K/V
+    @pl.when(i_s == ns)
+    def _span_block():
+        q = q_ref[0].astype(jnp.float32)
+        k = ksp_ref[...].astype(jnp.float32)           # [T, Kv, hd]
+        v = vsp_ref[...].astype(jnp.float32)
+        h, hd = q.shape
+        kv = k.shape[1]
+        qg = q.reshape(kv, g, hd)
+        s = jax.lax.dot_general(
+            qg, k.transpose(1, 2, 0),
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale
+        u = jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        upos = posv_ref[...][None, None, :]            # [1, 1, T]
+        useq = seqv_ref[...][None, None, :]
+        valid = (useq == seq_ref[i_t]) & (upos <= pos) \
+            & (upos > pos - window) & (u < nv_ref[0])
+        s = jnp.where(valid, s, NEG_INF)
+
+        def update_acc(p, corr):
+            acc_scr[...] = acc_scr[...] * corr[..., None] + jax.lax.dot_general(
+                p, v.transpose(1, 0, 2),
+                (((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32)
+
+        _accumulate(s, update_acc)
+
+    @pl.when(i_s == ns)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
+        out = acc_scr[...] / denom
+        o_ref[0] = out.reshape(o_ref.shape[1:]).astype(o_ref.dtype)
+
+
+def span_attention_rolling_quant(q: jax.Array, k8: jax.Array, ks: jax.Array,
+                                 v8: jax.Array, vs: jax.Array,
+                                 k_span: jax.Array, v_span: jax.Array,
+                                 positions: jax.Array, seq_idx: jax.Array,
+                                 offsets: jax.Array, n_valid: jax.Array, *,
+                                 window: int, kv_block: int = 512,
+                                 scale: float = 0.0,
+                                 interpret: bool = True) -> jax.Array:
+    """Two-source windowed span attention over an int8 rolling cache.
+
+    q [T,H,hd]; k8/v8 [B,W,Kv,hd] int8 (pre-scatter); ks/vs [B,W,Kv];
+    k_span/v_span [T,Kv,hd] bf16; positions/seq_idx/offsets [T];
+    n_valid [1] -> [T, H*hd].  Matches
+    :func:`repro.models.attention.packed_span_attention_rolling_quant`.
+    """
+    t, h, hd = q.shape
+    w_slots, kv = k8.shape[1], k8.shape[2]
+    g = h // kv
+    kv_block = _pick_block(w_slots, kv_block)
+    ns = w_slots // kv_block
+    scale = scale or hd ** -0.5
+
+    kernel = functools.partial(_rolling_quant_kernel, kv_block=kv_block, g=g,
+                               scale=scale, ns=ns, window=window,
+                               w_slots=w_slots)
+
+    def cache_idx(t_, i, seq, pos, off, nv):
+        return (seq[t_], jnp.minimum(i, ns - 1), 0, 0)
+
+    def scale_idx(t_, i, seq, pos, off, nv):
+        return (seq[t_], jnp.minimum(i, ns - 1), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,        # seq_idx, positions, offsets, n_valid
+        grid=(t, ns + 1),             # ns cache blocks + 1 span block
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda t_, i, *_: (t_, 0, 0)),
+            pl.BlockSpec((1, kv_block, kv, hd), cache_idx),
+            pl.BlockSpec((1, kv_block, kv), scale_idx),
+            pl.BlockSpec((1, kv_block, kv, hd), cache_idx),
+            pl.BlockSpec((1, kv_block, kv), scale_idx),
+            pl.BlockSpec((t, kv, hd), lambda t_, i, *_: (0, 0, 0)),
+            pl.BlockSpec((t, kv, hd), lambda t_, i, *_: (0, 0, 0)),
+            pl.BlockSpec((t,), lambda t_, i, *_: (0,)),
+            pl.BlockSpec((t,), lambda t_, i, *_: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda t_, i, *_: (t_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kv, g), jnp.float32),
+            pltpu.VMEM((kv, g), jnp.float32),
+            pltpu.VMEM((kv, g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, h, hd), q.dtype),
+        interpret=interpret,
+    )(seq_idx, positions, offsets, n_valid, q, k8, ks, v8, vs,
+      k_span, v_span, positions, seq_idx)
+    return out.reshape(t, h * hd)
 
 
 def span_attention_rolling(q: jax.Array, k_cache: jax.Array,

@@ -21,7 +21,8 @@ from repro.runtime.data import ShareGPTLike
 
 def run(arch: str, *, engine: str = "sipipe", pp: int = 2, requests: int = 8,
         max_batch: int = 4, max_new_tokens: int = 16, max_seq_len: int = 256,
-        n_samplers: int = 2, chunk_tokens: int = 0, seed: int = 0,
+        n_samplers: int = 2, chunk_tokens: int = 0, policy: str = "auto",
+        hysteresis_tokens: int = 0, seed: int = 0,
         verbose: bool = True) -> dict:
     cfg = get_config(arch + "-smoke" if not arch.endswith("-smoke") else arch)
     model = build_model(cfg, ShardCtx.single(), ModelOptions())
@@ -29,6 +30,8 @@ def run(arch: str, *, engine: str = "sipipe", pp: int = 2, requests: int = 8,
     ecfg = EngineConfig(pp_degree=pp, max_batch=max_batch,
                         max_seq_len=max_seq_len, n_samplers=n_samplers,
                         prefill_chunk_tokens=chunk_tokens or None,
+                        scheduling_policy=policy,
+                        phase_hysteresis_tokens=hysteresis_tokens or None,
                         seed=seed)
     eng = (SiPipeEngine if engine == "sipipe" else NaivePPEngine)(
         model, params, ecfg)
@@ -64,12 +67,22 @@ def main():
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--samplers", type=int, default=2)
     ap.add_argument("--chunk-tokens", type=int, default=0,
-                    help="per-iteration token budget for chunked prefill "
-                         "(0 = monolithic whole-prompt prefill)")
+                    help="per-iteration token budget for span scheduling "
+                         "policies (0 = monolithic whole-prompt prefill)")
+    ap.add_argument("--policy", default="auto",
+                    choices=["auto", "monolithic", "chunked", "disaggregated"],
+                    help="scheduling policy; 'auto' maps a token budget to "
+                         "chunked and no budget to monolithic "
+                         "(docs/scheduling.md §Scheduling policies)")
+    ap.add_argument("--hysteresis-tokens", type=int, default=0,
+                    help="disaggregated decode->prefill switch threshold in "
+                         "pending prefill tokens per paused decode slot "
+                         "(0 = the token budget)")
     args = ap.parse_args()
     run(args.arch, engine=args.engine, pp=args.pp, requests=args.requests,
         max_batch=args.max_batch, max_new_tokens=args.max_new_tokens,
-        n_samplers=args.samplers, chunk_tokens=args.chunk_tokens)
+        n_samplers=args.samplers, chunk_tokens=args.chunk_tokens,
+        policy=args.policy, hysteresis_tokens=args.hysteresis_tokens)
 
 
 if __name__ == "__main__":

@@ -632,10 +632,39 @@ def packed_span_attention_rolling_quant(
 
 def fill_rolling_cache(k: jax.Array, window: int) -> jax.Array:
     """Convert prefill K/V [B, S, kv, hd] into a rolling cache [B, W, kv, hd]
-    under the slot = position %% W convention."""
+    under the slot = position %% W convention.
+
+    Assumes an UNPADDED batch: every row's sequence fills all S positions.
+    Ragged (right-padded) batches must use
+    :func:`fill_rolling_cache_ragged`, else pad-tail K/V lands in slots
+    that later decode steps treat as real window entries.
+    """
     s = k.shape[1]
     if s < window:
         return jnp.pad(k, ((0, 0), (0, window - s), (0, 0), (0, 0)))
     tail = k[:, s - window:]
     shift = s % window
     return jnp.roll(tail, shift, axis=1) if shift else tail
+
+
+def fill_rolling_cache_ragged(k: jax.Array, window: int,
+                              lengths: jax.Array) -> jax.Array:
+    """Ragged-batch variant of :func:`fill_rolling_cache`.
+
+    ``k`` [B, S, kv, hd] is right-padded; ``lengths`` [B] gives each row's
+    real token count.  Slot s of row i must hold the row's LAST position
+    congruent to s mod W — ``L-1 - ((L-1 - s) mod W)`` (the same
+    reconstruction the rolling span-attention kernels use) — and slots
+    whose reconstructed position is negative (sequence shorter than the
+    window) are zeroed, exactly matching what per-token decode/chunk
+    scatters would have produced.  Gathering by position instead of
+    rolling the tail keeps pad-tail K/V out of the cache.
+    """
+    b, s = k.shape[0], k.shape[1]
+    slots = jnp.arange(window)
+    last = lengths.astype(jnp.int32)[:, None] - 1            # [B, 1]
+    stored = last - ((last - slots[None, :]) % window)       # [B, W]
+    valid = stored >= 0
+    idx = jnp.clip(stored, 0, s - 1)
+    out = k[jnp.arange(b)[:, None], idx]                     # [B, W, kv, hd]
+    return jnp.where(valid[..., None, None], out, 0).astype(k.dtype)

@@ -33,6 +33,10 @@ class Ctx:
     seq_idx: Optional[jax.Array] = None
     span_starts: Optional[jax.Array] = None
     n_valid: Optional[jax.Array] = None    # scalar: valid packed tokens
+    # prefill mode: per-row real token counts [B] for RAGGED (right-padded)
+    # batches — windowed models need them to keep pad-tail K/V out of the
+    # rolling cache (None = batch is unpadded)
+    seq_lens: Optional[jax.Array] = None
     patches: Optional[jax.Array] = None    # vlm cross-attn memory [B, P, d]
     enc_out: Optional[jax.Array] = None    # whisper encoder output [B, Se, d]
     kv_block: int = 512

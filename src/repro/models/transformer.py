@@ -216,8 +216,14 @@ def self_attn_block(p, x, ctx: Ctx, cache, cfg: ArchConfig, *, causal=True,
     new_cache = None
     if ctx.mode == "prefill" and cache is not False:
         if w:
-            kc = attn.fill_rolling_cache(k, w)
-            vc = attn.fill_rolling_cache(v, w)
+            if ctx.seq_lens is not None:
+                # ragged (right-padded) batch: gather by per-row position
+                # so pad-tail K/V never reaches a rolling slot
+                kc = attn.fill_rolling_cache_ragged(k, w, ctx.seq_lens)
+                vc = attn.fill_rolling_cache_ragged(v, w, ctx.seq_lens)
+            else:
+                kc = attn.fill_rolling_cache(k, w)
+                vc = attn.fill_rolling_cache(v, w)
         else:
             kc, vc = k, v
         ca = _cache_axes(cfg, tp)

@@ -14,6 +14,7 @@ Supported surface:
   strategies.sampled_from(seq)
   strategies.lists(elem, min_size=, max_size=)
   strategies.tuples(*elems)
+  strategies.just(v) / strategies.none() / strategies.one_of(*strats)
 
 On a failing example the draw is attached to the exception message so
 the failure is reproducible (seeds are stable across runs).
@@ -107,6 +108,10 @@ def just(value) -> SearchStrategy:
     return SearchStrategy(lambda rnd: value)
 
 
+def none() -> SearchStrategy:
+    return SearchStrategy(lambda rnd: None)
+
+
 def one_of(*strategies) -> SearchStrategy:
     opts = list(strategies)
     return SearchStrategy(lambda rnd: opts[rnd.randrange(len(opts))].example(rnd))
@@ -180,7 +185,7 @@ class _Unsatisfied(Exception):
 # ``from hypothesis import strategies as st`` / ``import hypothesis.strategies``.
 strategies = types.ModuleType("hypothesis.strategies")
 for _name in ("integers", "floats", "booleans", "sampled_from", "lists",
-              "tuples", "just", "one_of", "SearchStrategy"):
+              "tuples", "just", "none", "one_of", "SearchStrategy"):
     setattr(strategies, _name, globals()[_name])
 
 

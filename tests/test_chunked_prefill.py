@@ -167,13 +167,52 @@ def test_chunked_sliding_window_token_identical_to_monolithic():
     model = build_model(cfg, ShardCtx.single())
     params = model.init(jax.random.key(3))
     rng = np.random.default_rng(3)
-    # equal prompt lengths: the monolithic rolling prefill assumes an
-    # unpadded [B, S] batch (ragged windowed prefill is a known seed gap)
     prompts = [list(map(int, rng.integers(2, cfg.vocab_size, size=13)))
                for _ in range(2)]
     mono = _run_engine(model, params, prompts, 5, chunk=None)
     chunked = _run_engine(model, params, prompts, 5, chunk=6)
     assert chunked == mono
+
+
+def test_fill_rolling_cache_ragged_matches_per_row():
+    """Per-row gather variant == fill_rolling_cache applied to each row's
+    unpadded length, with zeroed slots for rows shorter than the window
+    (the state per-token scatters would have produced)."""
+    from repro.models.attention import fill_rolling_cache, fill_rolling_cache_ragged
+
+    rng = np.random.default_rng(0)
+    w, s, kv, hd = 8, 21, 2, 4
+    lens = np.array([21, 5, 13], np.int32)
+    k = jnp.asarray(rng.normal(size=(3, s, kv, hd)).astype(np.float32))
+    ragged = fill_rolling_cache_ragged(k, w, jnp.asarray(lens))
+    for i, L in enumerate(lens):
+        per_row = fill_rolling_cache(k[i:i + 1, :L], w)
+        np.testing.assert_allclose(np.asarray(ragged[i]),
+                                   np.asarray(per_row[0]), rtol=0, atol=0)
+
+
+@pytest.mark.slow
+def test_ragged_windowed_monolithic_matches_per_seq_prefill():
+    """ROADMAP bug regression: monolithic prefill of a RAGGED batch on a
+    sliding-window model used to roll pad-tail K/V into live rolling
+    slots (fill_rolling_cache assumed an unpadded [B, S] batch).  With
+    the per-row ragged fill, batched ragged prefill must match
+    prefilling each sequence alone — and the (unaffected) chunked path."""
+    cfg = get_config("mixtral-8x7b-smoke")
+    assert cfg.window > 0
+    model = build_model(cfg, ShardCtx.single())
+    params = model.init(jax.random.key(3))
+    rng = np.random.default_rng(3)
+    # lengths straddle the window (37 > W=32 > 9) to exercise both the
+    # wrapped-tail and the shorter-than-window fill paths
+    prompts = [list(map(int, rng.integers(2, cfg.vocab_size, size=n)))
+               for n in (37, 9)]
+    ragged_mono = _run_engine(model, params, prompts, 5, chunk=None)
+    per_seq = [_run_engine(model, params, [p], 5, chunk=None, pp=2,
+                           max_batch=1)[0] for p in prompts]
+    chunked = _run_engine(model, params, prompts, 5, chunk=6)
+    assert ragged_mono == per_seq
+    assert chunked == per_seq
 
 
 def test_chunked_window_budget_must_fit_window():

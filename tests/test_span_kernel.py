@@ -10,6 +10,7 @@ from repro.kernels.span_attention import (
     span_attention,
     span_attention_quant,
     span_attention_rolling,
+    span_attention_rolling_quant,
 )
 from repro.models import attention as A
 
@@ -173,6 +174,89 @@ def test_span_attention_rolling_two_sources():
         ref = np.einsum("ngs,snd->ngd", pr, vfull[i]).reshape(-1)
         np.testing.assert_allclose(np.asarray(o[k], np.float32), ref,
                                    rtol=5e-3, atol=5e-3)
+
+
+def test_span_attention_rolling_quant_two_sources():
+    """int8 + sliding-window kernel twin vs the jnp oracle
+    packed_span_attention_rolling_quant (previously the only
+    implementation), plus a drift bound against the fp rolling oracle."""
+    b, w, kv, g, hd, t = 2, 16, 2, 2, 32, 7
+    h = kv * g
+    rng = np.random.default_rng(6)
+    s_full = 48
+    kfull = rng.normal(size=(b, s_full, kv, hd)).astype(np.float32)
+    vfull = rng.normal(size=(b, s_full, kv, hd)).astype(np.float32)
+    offs_row = [20, 3]
+    lens_row = [4, 3]
+    kroll = np.zeros((b, w, kv, hd), np.float32)
+    vroll = np.zeros((b, w, kv, hd), np.float32)
+    for i in range(b):
+        for m in range(offs_row[i]):
+            kroll[i, m % w] = kfull[i, m]
+            vroll[i, m % w] = vfull[i, m]
+    pos, seq, ksp, vsp, offs = [], [], [], [], []
+    for i in range(b):
+        for j in range(lens_row[i]):
+            p = offs_row[i] + j
+            pos.append(p)
+            seq.append(i)
+            offs.append(offs_row[i])
+            ksp.append(kfull[i, p])
+            vsp.append(vfull[i, p])
+    q = _rand(rng, (t, h, hd), jnp.float32)
+    k8, ks = A.quantize_kv(jnp.asarray(kroll))
+    v8, vs = A.quantize_kv(jnp.asarray(vroll))
+    args = (q, k8, ks, v8, vs,
+            jnp.asarray(np.stack(ksp)), jnp.asarray(np.stack(vsp)),
+            jnp.asarray(pos, jnp.int32), jnp.asarray(seq, jnp.int32),
+            jnp.asarray(offs, jnp.int32))
+    nv = jnp.asarray([t], jnp.int32)
+    o = span_attention_rolling_quant(*args, nv, window=w, kv_block=8,
+                                     interpret=True)
+    o_ref = A.packed_span_attention_rolling_quant(*args, nv[0], window=w,
+                                                  kv_block=8)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=5e-2, atol=5e-2)
+    # the s8 x s8 cache source stays close to the fp rolling oracle
+    o_fp = A.packed_span_attention_rolling(
+        q, jnp.asarray(kroll), jnp.asarray(vroll), args[5], args[6],
+        args[7], args[8], args[9], nv[0], window=w, kv_block=8)
+    a, bq = np.asarray(o_fp, np.float32), np.asarray(o, np.float32)
+    assert np.abs(a - bq).max() / (np.abs(a).max() + 1e-6) < 0.08
+
+
+def test_span_attention_rolling_quant_masks_bucket_padding():
+    """Bucket-padded entries must be dropped by the n_valid mask in the
+    quantized rolling kernel too (mirrors the fp test below)."""
+    b, w, kv, g, hd = 1, 8, 1, 2, 16
+    h = kv * g
+    rng = np.random.default_rng(7)
+    t_valid, t_pad = 3, 6
+    pos_v = np.array([4, 5, 6], np.int32)
+    kroll = _rand(rng, (b, w, kv, hd), jnp.float32)
+    vroll = _rand(rng, (b, w, kv, hd), jnp.float32)
+    k8, ks = A.quantize_kv(kroll)
+    v8, vs = A.quantize_kv(vroll)
+    ksp_v = rng.normal(size=(t_valid, kv, hd)).astype(np.float32)
+    vsp_v = rng.normal(size=(t_valid, kv, hd)).astype(np.float32)
+
+    def run(t_total):
+        pos = np.concatenate([pos_v, np.full(t_total - t_valid, pos_v[-1])])
+        seq = np.zeros(t_total, np.int32)
+        offs = np.full(t_total, 4, np.int32)
+        ksp = np.concatenate([ksp_v, np.repeat(ksp_v[-1:], t_total - t_valid, 0)])
+        vsp = np.concatenate([vsp_v, np.repeat(vsp_v[-1:], t_total - t_valid, 0)])
+        q = np.ones((t_total, h, hd), np.float32)
+        o = span_attention_rolling_quant(
+            jnp.asarray(q), k8, ks, v8, vs,
+            jnp.asarray(ksp), jnp.asarray(vsp),
+            jnp.asarray(pos.astype(np.int32)), jnp.asarray(seq),
+            jnp.asarray(offs), jnp.asarray([t_valid], jnp.int32),
+            window=w, kv_block=8, interpret=True)
+        return np.asarray(o[:t_valid], np.float32)
+
+    np.testing.assert_allclose(run(t_valid), run(t_pad), rtol=1e-5, atol=1e-5)
 
 
 def test_span_attention_rolling_masks_bucket_padding():
