@@ -197,6 +197,7 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
                             max_new_tokens: int = 16,
                             t_token: float = 1e-4,
                             t_fixed: float = 5e-4,
+                            fwd_jitter: float = 0.0,
                             chunked: bool = True,
                             policy: Optional[str] = None,
                             hysteresis_tokens: Optional[int] = None,
@@ -209,6 +210,13 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
     monolithic whole-prompt prefills (engine ``_admit_and_prefill``: a
     pipeline-blocking pass over every stage) stall the other p-1 slots,
     while chunked prefill keeps every slot near the token budget.
+
+    ``fwd_jitter`` models per-stage heterogeneity (the paper's Obs. 3,
+    same deterministic alternating convention as ``PipeCosts.stage_time``):
+    stage ``s`` runs ``1 + fwd_jitter * (+1 if s odd else -1)`` of the
+    nominal duration, so the policy comparison no longer charges every
+    stage an identical cost — the slowest stage paces the pipeline and
+    the fast stages' idle time shows up as bubbles.
 
     ``policy`` selects the scheduling policy directly ("monolithic",
     "chunked", "disaggregated"); the legacy ``chunked`` flag is kept as a
@@ -234,6 +242,12 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
                                    SamplingParams(greedy=True,
                                                   max_new_tokens=max_new_tokens)))
 
+    def stage_dur(s: int, tokens: int) -> float:
+        d = t_fixed + t_token * tokens
+        if fwd_jitter:
+            d *= 1.0 + fwd_jitter * (1 if s % 2 else -1)
+        return d
+
     stage_free = [0.0] * p
     stage_busy = [0.0] * p
     slot_prev_end: Dict[int, float] = {}
@@ -255,7 +269,7 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
             start = max(stage_free)
             t = start
             for s in range(p):
-                dur = t_fixed + t_token * pf_tokens
+                dur = stage_dur(s, pf_tokens)
                 stage_busy[s] += dur
                 t += dur
             for s in range(p):
@@ -270,9 +284,9 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
                 continue
         tokens = out.total_tokens
         iter_tokens.append(tokens)
-        dur = t_fixed + t_token * tokens
         dep = slot_prev_end.get(out.slot, 0.0)
         for s in range(p):
+            dur = stage_dur(s, tokens)
             start = max(stage_free[s], dep)
             if start > stage_free[s] and stage_free[s] > 0.0:
                 bubble_ticks += 1
@@ -310,6 +324,7 @@ def simulate_disaggregated(*, p: int = 2, max_batch: int = 4,
                            max_new_tokens: int = 16,
                            t_token: float = 1e-4,
                            t_fixed: float = 5e-4,
+                           fwd_jitter: float = 0.0,
                            hysteresis_tokens: Optional[int] = None,
                            max_iters: int = 100_000) -> MixedWorkloadResult:
     """TD-Pipe-style temporally-disaggregated phase scheduling through the
@@ -326,7 +341,8 @@ def simulate_disaggregated(*, p: int = 2, max_batch: int = 4,
     return simulate_mixed_workload(
         p=p, max_batch=max_batch, token_budget=token_budget,
         prompt_lens=prompt_lens, max_new_tokens=max_new_tokens,
-        t_token=t_token, t_fixed=t_fixed, policy="disaggregated",
+        t_token=t_token, t_fixed=t_fixed, fwd_jitter=fwd_jitter,
+        policy="disaggregated",
         hysteresis_tokens=hysteresis_tokens, max_iters=max_iters)
 
 

@@ -370,14 +370,18 @@ def bench_chunked_prefill() -> None:
 
     POLICIES = ("monolithic", "chunked", "disaggregated")
     prompts = [200, 8, 150, 6, 180, 10, 90, 120, 5, 160, 7, 140]
-    sim = {}
+    # per-stage heterogeneity (Obs. 3): the same deterministic alternating
+    # jitter paper_costs feeds PipeCosts — stages no longer charge
+    # identical durations, so the slowest stage paces every policy
+    JITTER = 0.05
+    sim = {"fwd_jitter": JITTER}
     for p in (2, 4):
         results = {}
         for policy in POLICIES:
             r = simulate_mixed_workload(
                 p=p, max_batch=4, token_budget=budget, prompt_lens=prompts,
                 max_new_tokens=24, policy=policy,
-                t_token=t_token, t_fixed=t_fixed)
+                t_token=t_token, t_fixed=t_fixed, fwd_jitter=JITTER)
             results[policy] = r
             emit(f"chunked_prefill/p{p}_{policy}", r.wall_s * 1e6,
                  f"occupancy={r.occupancy:.3f} bubble_ticks={r.bubble_ticks} "
@@ -411,7 +415,7 @@ def bench_chunked_prefill() -> None:
         r = simulate_mixed_workload(
             p=2, max_batch=4, token_budget=heavy_budget, prompt_lens=heavy,
             max_new_tokens=heavy_new, policy=policy,
-            t_token=t_token, t_fixed=t_fixed)
+            t_token=t_token, t_fixed=t_fixed, fwd_jitter=JITTER)
         hres[policy] = r
         emit(f"chunked_prefill/prefill_heavy_{policy}", r.wall_s * 1e6,
              f"occupancy={r.occupancy:.3f} iterations={r.iterations}")
@@ -445,6 +449,62 @@ def bench_chunked_prefill() -> None:
             },
         }, f, indent=2)
     emit("chunked_prefill/bench_json", 0.0, "wrote BENCH_chunked.json")
+
+
+# ---------------------------------------------------------------------------
+# Online continuous serving (step-driven request API, Poisson arrivals)
+# ---------------------------------------------------------------------------
+
+def bench_serving() -> None:
+    """Online Poisson-arrival serving on the REAL engine through the
+    step-driven request API (serve.py run_online, docs/serving.md):
+    throughput + p50/p99 TTFT and TPOT per scheduling policy, recorded
+    in BENCH_serving.json.  CPU-scale absolute numbers; the point is the
+    per-policy latency SHAPE — chunked keeps TPOT flat, disaggregated
+    trades TPOT tails for prefill streaming, adaptive walks its chunk
+    budget to the live TPOT."""
+    import json
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.launch.serve import run_online
+    from repro.models import ShardCtx, build_model
+
+    cfg = get_config("stablelm-1.6b-smoke")
+    model = build_model(cfg, ShardCtx.single())
+    prebuilt = (cfg, model, model.init(jax.random.key(0)))
+    results = {}
+    for policy in ("chunked", "disaggregated", "adaptive"):
+        m = run_online("stablelm-1.6b", policy=policy, pp=2, requests=10,
+                       max_batch=2, max_new_tokens=8, chunk_tokens=16,
+                       arrival_rate=8.0, seed=0, verbose=False,
+                       prebuilt=prebuilt)
+        keep = {
+            "throughput_tok_s": m["throughput_tok_s"],
+            "ttft_p50_s": m["ttft_p50_s"],
+            "ttft_p99_s": m["ttft_p99_s"],
+            "tpot_p50_s": m["tpot_p50_s"],
+            "tpot_p99_s": m["tpot_p99_s"],
+            "queue_mean_s": m["queue_mean_s"],
+            "requests_finished": m["requests_finished"],
+            "wall_s": m["wall_s"],
+        }
+        for k in [k for k in m if k.startswith("policy_")]:
+            keep[k] = m[k]
+        results[policy] = keep
+        emit(f"serving/{policy}_ttft_p50", m["ttft_p50_s"] * 1e6,
+             f"tok_per_s={m['throughput_tok_s']:.2f} "
+             f"ttft_p99_ms={m['ttft_p99_s'] * 1e3:.0f} "
+             f"tpot_p99_ms={m['tpot_p99_s'] * 1e3:.0f}")
+    with open("BENCH_serving.json", "w") as f:
+        json.dump({
+            "workload": {"arch": "stablelm-1.6b-smoke", "requests": 10,
+                         "arrival_rate_rps": 8.0, "max_new_tokens": 8,
+                         "token_budget": 16, "pp": 2, "max_batch": 2},
+            "policies": results,
+        }, f, indent=2)
+    emit("serving/bench_json", 0.0, "wrote BENCH_serving.json")
 
 
 # ---------------------------------------------------------------------------
@@ -519,6 +579,8 @@ def main() -> None:
         bench_ablation(measured)
     if want("chunked"):
         bench_chunked_prefill()
+    if want("serving"):
+        bench_serving()
     if want("engine"):
         bench_engine_e2e()
     if want("kernels"):

@@ -22,7 +22,9 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from collections import deque
+from typing import Any, Callable, Deque, Dict, Iterator, List, \
+    Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,11 +32,18 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.bic import LocalRing, SubSlotRing
+from repro.core.request import (
+    Request,
+    RequestIdAllocator,
+    RequestMetrics,
+    RequestOutput,
+    RequestState,
+)
 from repro.core.sampler import ColumnWiseSampler, NaiveSampler
 from repro.core.sampling_params import SamplingParams
 from repro.core.sat import StructureAwareChannel, StructureUnawareChannel
 from repro.core.scheduler import Scheduler, SchedulingOutput
-from repro.core.sequence import Sequence, SequenceCache
+from repro.core.sequence import SeqStatus, Sequence, SequenceCache
 from repro.core.tsem import (
     BatchMetadataCache,
     ModelInputDescriptor,
@@ -174,12 +183,19 @@ class EngineConfig:
     # monolithic whole-prompt prefill, the seed behavior)
     prefill_chunk_tokens: Optional[int] = None
     # scheduling policy: "auto" (budget -> chunked, else monolithic),
-    # "monolithic", "chunked", or "disaggregated" (TD-Pipe-style phase
-    # scheduling); see docs/scheduling.md §Scheduling policies
+    # "monolithic", "chunked", "disaggregated" (TD-Pipe-style phase
+    # scheduling), or "adaptive" (TPOT-SLO adaptive budget); see
+    # docs/scheduling.md §Scheduling policies
     scheduling_policy: str = "auto"
     # disaggregated decode->prefill switch threshold in pending prefill
     # tokens per paused decode slot (None = the token budget)
     phase_hysteresis_tokens: Optional[int] = None
+    # adaptive policy: target mean inter-token latency (None = the policy
+    # self-calibrates from the first observed window)
+    tpot_slo_s: Optional[float] = None
+    # bound on retained per-request latency records (the window online
+    # metrics percentiles are computed over)
+    keep_recent_requests: int = 2048
     seed: int = 0
 
 
@@ -303,7 +319,8 @@ class PPEngineBase:
                                    max_seq_len=cfg.max_seq_len,
                                    token_budget=cfg.prefill_chunk_tokens,
                                    policy=cfg.scheduling_policy,
-                                   hysteresis_tokens=cfg.phase_hysteresis_tokens)
+                                   hysteresis_tokens=cfg.phase_hysteresis_tokens,
+                                   tpot_slo_s=cfg.tpot_slo_s)
         if self.scheduler.chunked and self.arch.family not in ("dense", "moe"):
             raise NotImplementedError(
                 "span scheduling policies (chunked/disaggregated) require "
@@ -338,8 +355,28 @@ class PPEngineBase:
             for i in range(cfg.n_samplers)
         ]
         self.sample_time = 0.0
+        # completion times of iterations still (possibly) being awaited;
+        # pruned each step once older than every in-flight iteration —
+        # the running max survives in _t_last_done (long-run memory bound)
         self.iter_done_t: Dict[int, float] = {}
+        self._t_last_done = 0.0
         self.t_start = 0.0
+        # -- continuous-serving request layer (docs/serving.md) ------------
+        self._alloc = RequestIdAllocator()
+        self.requests: Dict[int, Request] = {}        # active only
+        self._request_stats: Deque[RequestMetrics] = deque(
+            maxlen=cfg.keep_recent_requests)
+        self._n_submitted = 0
+        self._n_finished = 0
+        self._n_aborted = 0
+        self._tokens_finished = 0
+        # step-driven loop state (run() is a thin wrapper over step())
+        self._it = 0
+        self._inflight: List[SchedulingOutput] = []
+        # aborted-but-in-flight sequences: KV rows / sampler columns are
+        # reclaimed only after every referencing iteration has retired
+        self._pending_release: set = set()
+        self._stopped = False
 
     # -- inter-stage hidden-state transport ------------------------------------
     def send_hidden(self, from_stage: int, iteration: int, h: np.ndarray):
@@ -375,19 +412,26 @@ class PPEngineBase:
             self._on_sampled(sched, np.zeros(0, np.int32))
             return
         eligible_ids = [sched.seq_ids[i] for i in eligible]
+        # per-request sampling params are an API contract: each column
+        # samples with ITS OWN request's params, even in mixed batches
+        # (the pre-redesign engine applied seq_ids[0]'s params batch-wide)
+        params = [self.scheduler.seqs[sid].params for sid in eligible_ids]
         out = self._pool_sample(sched.iteration, sched.slot, eligible_ids,
-                                logits, self._params_for(sched))
+                                logits, params)
         self.sample_time += time.monotonic() - t0
         self._on_sampled(sched, out)
 
     def _pool_sample(self, iteration: int, slot: int, seq_ids: List[int],
-                     logits: np.ndarray, sp: SamplingParams) -> np.ndarray:
+                     logits: np.ndarray,
+                     params: List[SamplingParams]) -> np.ndarray:
         """Fan a batch's logits out over the sampler pool.
 
-        Columns are partitioned by ``seq_id % n_samplers`` — a pure
-        function of the sequence, not its batch column — so a sequence's
-        incremental penalty state (freq/pres/output history) always lives
-        in the same sampler instance, surviving batch recomposition and
+        ``params`` is per-sequence, aligned with ``seq_ids``; each pool
+        member receives the param slice of its own columns.  Columns are
+        partitioned by ``seq_id % n_samplers`` — a pure function of the
+        sequence, not its batch column — so a sequence's incremental
+        penalty state (freq/pres/output history) always lives in the same
+        sampler instance, surviving batch recomposition and
         chunked-prefill phase changes (the per-sequence carryover in
         ColumnWiseSampler._replica is per instance).
         """
@@ -399,7 +443,7 @@ class PPEngineBase:
                              if sid % k == j], np.int64)
             if cols.size:
                 ids = self.samplers[j].sample(
-                    logits[cols], sp, slot=slot,
+                    logits[cols], [params[c] for c in cols], slot=slot,
                     seq_ids=[seq_ids[c] for c in cols])
             else:
                 ids = np.zeros(0, np.int32)
@@ -414,9 +458,6 @@ class PPEngineBase:
         for cols, ids in self.bic_o.get(iteration):
             out[cols] = ids
         return out
-
-    def _params_for(self, sched: SchedulingOutput) -> SamplingParams:
-        return self.scheduler.seqs[sched.seq_ids[0]].params
 
     def _on_sampled(self, sched: SchedulingOutput, token_ids: np.ndarray):
         now = time.monotonic()
@@ -439,10 +480,77 @@ class PPEngineBase:
         self.iter_done_t[sched.iteration] = now
 
     # -- public API ------------------------------------------------------------
-    def add_request(self, prompt_ids: List[int], params: SamplingParams) -> int:
-        sid = len(self.scheduler.seqs)
-        self.scheduler.add_request(Sequence(sid, list(prompt_ids), params))
-        return sid
+    def add_request(self, prompt_ids: List[int], params: SamplingParams,
+                    arrival_t: Optional[float] = None) -> int:
+        """Admit a request; returns its monotonic request id.  Callable at
+        any point of the serving loop — between ``step()`` calls new
+        arrivals join the waiting queue and are scheduled continuously.
+
+        ``arrival_t`` (time.monotonic clock) backdates the request's
+        arrival for latency accounting — trace replays pass the nominal
+        arrival time so TTFT/queue-delay include time spent waiting
+        outside the engine (e.g. behind a long blocking step)."""
+        rid = self._alloc.next()
+        seq = Sequence(rid, list(prompt_ids), params,
+                       arrival_t=arrival_t or 0.0)
+        self.scheduler.add_request(seq)      # validates; may raise
+        self.requests[rid] = Request(rid, seq)
+        self._n_submitted += 1
+        return rid
+
+    def abort(self, request_id: int) -> bool:
+        """Cancel a request.  QUEUED requests are dropped immediately;
+        RUNNING ones stop decoding at once (in-flight iterations discard
+        their sampled column) and their KV row + sampler penalty columns
+        are reclaimed as soon as the last referencing iteration retires —
+        surviving sequences' tokens are never perturbed.  The final
+        ABORTED RequestOutput (with any tokens produced so far) is
+        delivered by the next ``step()``.  Returns False when the id is
+        unknown or already finished."""
+        req = self.requests.get(request_id)
+        if req is None:
+            return False
+        seq = self.scheduler.abort(request_id)
+        if seq is None:                      # already finished/aborted
+            return False
+        if any(request_id in d.seq_ids for d in self._inflight):
+            self._pending_release.add(request_id)
+        else:
+            self._release_worker_state(request_id)
+        self._reap_aborted()
+        return True
+
+    @property
+    def has_work(self) -> bool:
+        """True while any request is queued, scheduled, in flight, or has
+        a final output not yet delivered by ``step()`` (e.g. a request
+        aborted straight out of the queue)."""
+        return (self.scheduler.has_work or bool(self._inflight)
+                or bool(self._pending_release) or bool(self.requests))
+
+    def _drop_sampler_state(self, sid: int):
+        for smp in self.samplers:
+            drop = getattr(smp, "drop_seq", None)
+            if drop is not None:
+                drop(sid)
+
+    def _release_worker_state(self, sid: int):
+        """Reclaim worker-side resources of a retired sequence: the KV
+        cache row and every sampler's penalty columns."""
+        self.seq_cache.release(sid)
+        self._drop_sampler_state(sid)
+
+    def _reap_aborted(self):
+        """Release aborted sequences no longer referenced by any
+        in-flight iteration."""
+        if not self._pending_release:
+            return
+        live: set = set()
+        for d in self._inflight:
+            live.update(d.seq_ids)
+        for sid in [s for s in self._pending_release if s not in live]:
+            self._release_worker_state(sid)
+            self._pending_release.discard(sid)
 
     def _admit_and_prefill(self, sched: SchedulingOutput):
         """Prefill newly admitted sequences through all stages."""
@@ -469,81 +577,204 @@ class PPEngineBase:
         # state starts in (and stays with) its own sampler instance
         logits = np.asarray(x_np, np.float32)
         ids = self._pool_sample(sched.iteration, sched.slot, new, logits,
-                                seqs[0].params)
-        self.scheduler.complete(sched.iteration, new, ids)
+                                [s.params for s in seqs])
+        finished = self.scheduler.complete(sched.iteration, new, ids)
+        for sid in finished:
+            self.seq_cache.release(sid)
         for sid in new:
-            if self.scheduler.seqs[sid].status.name != "FINISHED":
+            if sid not in finished:
                 self.seq_cache.advance(sid)
 
-    def run(self, max_iterations: int = 10_000) -> List[Sequence]:
-        """Drive the pipeline until all requests finish.
+    def step(self) -> List[RequestOutput]:
+        """One scheduler iteration: gate, schedule, submit, retire.
 
-        The admission/drain loop is policy-agnostic thanks to the span
-        interface.  Monolithic admission (``is_prefill``) drains in-flight
-        iterations and runs the pipeline-blocking prefill; span policies
-        (chunked/disaggregated) admit KV rows lazily on a sequence's first
-        chunk.  Disaggregated phase boundaries need no special casing
-        here: prefill phases emit chunk-only spans at the full token
-        budget, decode phases emit pure 1-token spans (``max_span == 1``)
-        that take the flat ``decode_fn`` path and TSEM's incremental
-        n/n+p metadata fast path; a slot with no schedulable work in the
-        current phase yields ``sched is None`` and simply idles.
+        Re-entrant core of the serving loop — callers interleave
+        ``add_request``/``abort`` with ``step()`` and receive the
+        incremental :class:`RequestOutput` stream of every request that
+        progressed (new tokens, finishes, aborts).  The iteration logic
+        is policy-agnostic thanks to the span interface: monolithic
+        admission (``is_prefill``) drains in-flight iterations and runs
+        the pipeline-blocking prefill; span policies admit KV rows lazily
+        on a sequence's first chunk.  Disaggregated phase boundaries need
+        no special casing: prefill phases emit chunk-only spans at the
+        full token budget, decode phases emit pure 1-token spans
+        (``max_span == 1``) that take the flat ``decode_fn`` path and
+        TSEM's incremental n/n+p metadata fast path; a slot with no
+        schedulable work in the current phase yields ``sched is None``
+        and simply idles.
         """
-        self.t_start = time.monotonic()
-        it = 0
-        inflight: List[SchedulingOutput] = []
-        while it < max_iterations:
-            # autoregressive gate: this slot's prior SAMPLING iterations
-            # must land before building its next batch (their tokens and
-            # finishes feed the spans); chunk-only iterations (empty
-            # sample set — the body of a disaggregated prefill phase)
-            # don't gate, so phase chunks stream through the pipeline
-            # back-to-back like training microbatches
-            for d in [d for d in inflight
-                      if d.slot == it % self.cfg.pp_degree
-                      and d.sample_indices()]:
-                self._await_iteration(d)
-                inflight.remove(d)
-            sched = self.scheduler.schedule(it)
+        if self._stopped:
+            raise RuntimeError("engine is shut down; build a new one")
+        if self.t_start == 0.0:
+            self.t_start = time.monotonic()
+        it = self._it
+        inflight = self._inflight
+        # opportunistically retire chunk-only iterations that already
+        # completed: they carry no sampling to gate on, and an abort can
+        # orphan them (a mid-prefill sequence that will never reach its
+        # sampling chunk) — without this they'd pin the in-flight list
+        # (and their members' KV rows) until full drain
+        for d in [d for d in inflight
+                  if not d.sample_indices() and d.iteration in self.iter_done_t]:
+            inflight.remove(d)
+        # autoregressive gate: this slot's prior SAMPLING iterations
+        # must land before building its next batch (their tokens and
+        # finishes feed the spans); chunk-only iterations (empty
+        # sample set — the body of a disaggregated prefill phase)
+        # don't gate, so phase chunks stream through the pipeline
+        # back-to-back like training microbatches
+        for d in [d for d in inflight
+                  if d.slot == it % self.cfg.pp_degree
+                  and d.sample_indices()]:
+            self._await_iteration(d)
+            inflight.remove(d)
+        sched = self.scheduler.schedule(it)
+        if sched is not None:
+            if sched.is_prefill:     # monolithic path (chunking off)
+                # drain in-flight iterations first: run_prefill writes
+                # stage caches on this thread and must not race the
+                # device threads' cache read-modify-writes
+                while inflight:
+                    self._await_iteration(inflight.pop(0))
+                self._admit_and_prefill(sched)
+                sched = self.scheduler.schedule(it)  # rebuilt after prefill
             if sched is not None:
-                if sched.is_prefill:     # monolithic path (chunking off)
-                    # drain in-flight iterations first: run_prefill writes
-                    # stage caches on this thread and must not race the
-                    # device threads' cache read-modify-writes
-                    while inflight:
-                        self._await_iteration(inflight.pop(0))
-                    self._admit_and_prefill(sched)
-                    sched = self.scheduler.schedule(it)  # rebuilt after prefill
-                if sched is not None:
-                    # span policies admit KV rows lazily, on first chunk
-                    for sid in sched.seq_ids:
-                        if self.seq_cache.lookup(sid) is None:
-                            self.seq_cache.admit(
-                                sid, self.scheduler.seqs[sid].prompt_len)
-                    self.bic_i.put(sched)
-                    self._submit(sched)
-                    inflight.append(sched)
-            # retire in order once the pipeline depth is reached; a
-            # chunk-only head (no sampled columns) streams instead of
-            # gating, bounded at 4p so the executor queues stay shallow.
-            # Streaming holds even when THIS slot yielded no work (a
-            # prefill phase routinely idles decode-deferred slots): a
-            # chunk-only iteration in flight implies a mid-prefill slot
-            # member, so its slot keeps producing output and the loop
-            # cannot spin — only sampling heads must gate on completion
-            while len(inflight) >= (self.cfg.pp_degree if sched is not None else 1):
-                if (inflight[0].spans
-                        and not inflight[0].sample_indices()
-                        and len(inflight) < 4 * self.cfg.pp_degree):
-                    break
-                done = inflight.pop(0)
-                self._await_iteration(done)
-            if not self.scheduler.has_work and not inflight:
+                # span policies admit KV rows lazily, on first chunk.  An
+                # admission may need the row of a just-aborted sequence
+                # whose release is still deferred behind in-flight
+                # iterations — retire those first (oldest-first) until the
+                # reap frees a row; the KV pool has exactly max_batch * p
+                # rows, so scheduler admission implies one will free
+                self._reap_aborted()
+                for sid in sched.seq_ids:
+                    if self.seq_cache.lookup(sid) is None:
+                        while (self.seq_cache.free_rows == 0
+                                and self._pending_release and inflight):
+                            self._await_iteration(inflight.pop(0))
+                            self._reap_aborted()
+                        self.seq_cache.admit(
+                            sid, self.scheduler.seqs[sid].prompt_len)
+                self.bic_i.put(sched)
+                self._submit(sched)
+                inflight.append(sched)
+        # retire in order once the pipeline depth is reached; a
+        # chunk-only head (no sampled columns) streams instead of
+        # gating, bounded at 4p so the executor queues stay shallow.
+        # Streaming holds even when THIS slot yielded no work (a
+        # prefill phase routinely idles decode-deferred slots): a
+        # chunk-only iteration in flight implies a mid-prefill slot
+        # member, so its slot keeps producing output and the loop
+        # cannot spin — only sampling heads must gate on completion
+        while len(inflight) >= (self.cfg.pp_degree if sched is not None else 1):
+            if (inflight[0].spans
+                    and not inflight[0].sample_indices()
+                    and len(inflight) < 4 * self.cfg.pp_degree):
                 break
-            it += 1
+            done = inflight.pop(0)
+            self._await_iteration(done)
+        self._reap_aborted()
+        # prune completion stamps of fully retired iterations (nothing can
+        # await them anymore); keep the running max for metrics' wall time
+        if self.iter_done_t:
+            floor = min((d.iteration for d in inflight), default=it + 1)
+            # snapshot keys first: device threads insert stamps concurrently
+            for k in [k for k in list(self.iter_done_t) if k < floor]:
+                self._t_last_done = max(self._t_last_done,
+                                        self.iter_done_t.pop(k))
+        self._it = it + 1
+        return self._drain_outputs()
+
+    def _drain_outputs(self) -> List[RequestOutput]:
+        """Emit the incremental output of every request that progressed;
+        retire requests whose final increment is being delivered."""
+        outs: List[RequestOutput] = []
+        for rid in list(self.requests):
+            req = self.requests[rid]
+            seq = req.seq
+            status = seq.status
+            finished = status in (SeqStatus.FINISHED, SeqStatus.ABORTED)
+            if finished and rid in self._pending_release:
+                continue     # aborted but still in flight; emit post-reap
+            n = len(seq.output_ids)
+            if n == req.streamed and not finished:
+                continue
+            # output_ids holds plain ints (Sequence.append coerces); one
+            # slice-copy snapshots the cumulative stream for the caller
+            cum = seq.output_ids[:n]
+            new = cum[req.streamed:]
+            req.streamed = n
+            if not finished:
+                outs.append(RequestOutput(
+                    rid, new, cum, False, RequestState.of(seq),
+                    None, None, seq))
+                continue
+            rm = RequestMetrics.of(seq)
+            outs.append(RequestOutput(
+                rid, new, cum, True, rm.state, seq.finish_reason, rm, seq))
+            self._retire(rid, req, rm)
+        return outs
+
+    def _retire(self, rid: int, req: Request, rm: RequestMetrics):
+        """Final bookkeeping once a request's last output is delivered."""
+        self.requests.pop(rid, None)
+        self._request_stats.append(rm)
+        if req.seq.status == SeqStatus.FINISHED:
+            self._n_finished += 1
+            self._tokens_finished += len(req.seq.output_ids)
+            # finished sequences released their KV row in _on_sampled;
+            # strip their sampler penalty columns too so long-run state
+            # stays bounded by the live batch
+            self._drop_sampler_state(rid)
+        else:
+            self._n_aborted += 1
+
+    def generate(self, prompts: List[List[int]],
+                 params: Union[SamplingParams, List[SamplingParams]],
+                 ) -> Iterator[RequestOutput]:
+        """Streaming entry point: admit ``prompts`` (one SamplingParams
+        shared, or one per prompt) and yield their RequestOutput
+        increments as tokens land, until all of them finish.  Outputs of
+        OTHER concurrent requests are not consumed — drive ``step()``
+        directly for a multi-consumer serving loop."""
+        if isinstance(params, SamplingParams):
+            params = [params] * len(prompts)
+        if len(params) != len(prompts):
+            raise ValueError(
+                f"{len(prompts)} prompts but {len(params)} sampling params")
+        want = {self.add_request(p, sp)
+                for p, sp in zip(prompts, params)}
+        while want:
+            for out in self.step():
+                if out.request_id in want:
+                    if out.finished:
+                        want.discard(out.request_id)
+                    yield out
+
+    def run(self, max_iterations: int = 10_000) -> List[Sequence]:
+        """Offline-batch compatibility wrapper: drive ``step()`` until
+        every admitted request finishes, then shut the stage workers
+        down.  Token-identical to the pre-redesign blocking ``run()``
+        under greedy sampling — the step loop is the same loop."""
+        self.t_start = time.monotonic()
+        done: List[Sequence] = []
+        start_it = self._it      # cap counts THIS call's iterations
+        while self._it - start_it < max_iterations:
+            for out in self.step():
+                if out.finished and out.state == RequestState.FINISHED:
+                    done.append(out.seq)
+            if not self.has_work:
+                break
+        self.shutdown()
+        return done
+
+    def shutdown(self):
+        """Stop the stage executors (terminal — engines are not
+        restartable; finish or abort outstanding requests first)."""
+        if self._stopped:
+            return
+        self._stopped = True
         for w in self.stages:
             w.stop()
-        return self.scheduler.finished
 
     # engine-specific:
     def _submit(self, sched: SchedulingOutput):
@@ -554,9 +785,12 @@ class PPEngineBase:
 
     # -- metrics ----------------------------------------------------------------
     def metrics(self) -> Dict[str, Any]:
-        t_end = max(self.iter_done_t.values()) if self.iter_done_t else self.t_start
+        t_end = max([self._t_last_done, *list(self.iter_done_t.values())]) \
+            or self.t_start
         wall = max(t_end - self.t_start, 1e-9)
-        toks = sum(len(s.output_ids) for s in self.scheduler.finished)
+        toks = self._tokens_finished + sum(
+            len(r.seq.output_ids) for r in self.requests.values()
+            if r.seq.status == SeqStatus.FINISHED)   # finished, not yet drained
         per_stage = []
         for w in self.stages:
             busy = sum(e - s for s, e in w.metrics.busy)
@@ -566,16 +800,32 @@ class PPEngineBase:
                 "exec_s": w.executor.exec_time,
                 "bubble_frac": max(0.0, 1.0 - busy / wall),
             })
-        tpots = []
-        for s in self.scheduler.finished:
-            if s.finish_t and s.first_token_t and len(s.output_ids) > 1:
-                tpots.append((s.finish_t - s.first_token_t) / (len(s.output_ids) - 1))
+        stats = list(self._request_stats)
+        tpots = [r.tpot_s for r in stats if r.tpot_s is not None]
+        ttfts = [r.ttft_s for r in stats if r.ttft_s is not None]
+        queues = [r.queue_s for r in stats if r.queue_s is not None]
+
+        def pct(vals, q):
+            return float(np.percentile(vals, q)) if vals else 0.0
+
         out = {
             "wall_s": wall,
             "tokens": toks,
             "throughput_tok_s": toks / wall,
             "tpot_mean_s": float(np.mean(tpots)) if tpots else 0.0,
-            "tpot_p99_s": float(np.percentile(tpots, 99)) if tpots else 0.0,
+            "tpot_p50_s": pct(tpots, 50),
+            "tpot_p99_s": pct(tpots, 99),
+            "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
+            "ttft_p50_s": pct(ttfts, 50),
+            "ttft_p99_s": pct(ttfts, 99),
+            "queue_mean_s": float(np.mean(queues)) if queues else 0.0,
+            "queue_p99_s": pct(queues, 99),
+            "requests_submitted": self._n_submitted,
+            "requests_finished": self._n_finished,
+            "requests_aborted": self._n_aborted,
+            "requests_active": len(self.requests),
+            # per-request latency records over the retained window
+            "requests": {r.request_id: r.as_dict() for r in stats},
             "sample_s": self.sample_time,
             "stages": per_stage,
             "incremental_hits": sum(w.meta_cache.incremental_hits for w in self.stages),

@@ -17,12 +17,17 @@ each iteration's admission + span construction to a ``SchedulingPolicy``:
                  iterations that keep the TSEM incremental n/n+p fast path),
                  switched by a hysteresis threshold on pending-prefill
                  tokens vs. the in-flight decode slots being paused.
+  adaptive       chunked scheduling with a latency-SLO adaptive token
+                 budget: shrinks the chunk budget when the live TPOT
+                 (Scheduler.tpot_samples, fed by the request layer's
+                 completion path) breaches the SLO, grows it back under
+                 headroom.
 
 Every policy emits the same per-seq ``(offset, n_tokens)`` spans, so TSEM
 staging, the packed [T] chunk execution path, SAT transmission and the
-sampler pool need no wire changes; a new policy (e.g. a latency-SLO
-adaptive budget) is a subclass here, not an engine fork.  See
-docs/scheduling.md §Scheduling policies.
+sampler pool need no wire changes; a new policy is a subclass here, not
+an engine fork.  See docs/scheduling.md §Scheduling policies and
+docs/serving.md for the request lifecycle feeding the adaptive budget.
 """
 from __future__ import annotations
 
@@ -100,7 +105,7 @@ class MonolithicPolicy(SchedulingPolicy):
         new_prefill: List[int] = []
         while s.waiting and len(members) < s.max_batch:
             seq = s.waiting.popleft()
-            seq.status = SeqStatus.RUNNING
+            seq.mark_running()
             seq.prefilled = len(seq.prompt_ids)   # monolithic: all at once
             members.append(seq.seq_id)
             new_prefill.append(seq.seq_id)
@@ -173,7 +178,7 @@ class ChunkedPolicy(SchedulingPolicy):
         while (s.waiting and len(members) < s.max_batch
                and budget_left > 0):
             seq = s.waiting.popleft()
-            seq.status = SeqStatus.RUNNING
+            seq.mark_running()
             members.append(seq.seq_id)
             recomposed = True
             emit(seq)
@@ -345,7 +350,7 @@ class DisaggregatedPolicy(SchedulingPolicy):
         while (s.waiting and len(members) < s.max_batch
                and budget_left > 0):
             seq = s.waiting.popleft()
-            seq.status = SeqStatus.RUNNING
+            seq.mark_running()
             members.append(seq.seq_id)
             recomposed = True
             emit_chunk(seq)
@@ -359,15 +364,95 @@ class DisaggregatedPolicy(SchedulingPolicy):
                             needs_sample, recomposed)
 
 
+class AdaptivePolicy(ChunkedPolicy):
+    """Latency-SLO adaptive token budget (ROADMAP item).
+
+    Chunked scheduling whose per-iteration budget tracks the LIVE TPOT
+    the request layer exposes.  Every chunk-carrying iteration inflates
+    the inter-token latency of each co-scheduled decode (iteration cost
+    ~ t_fixed + t_token * budget), so:
+
+      * when the recent mean inter-token gap (``Scheduler.tpot_samples``,
+        fed by ``complete()``) breaches the SLO, the chunk budget shrinks
+        multiplicatively — decodes win back latency;
+      * when there is headroom (< ``GROW_AT`` x SLO), the budget grows
+        back toward the configured maximum — prefill wins back TTFT.
+
+    The budget stays within ``[max_batch + 1, initial budget]``: the
+    lower bound preserves prefill progress (the scheduler's own clamp),
+    the upper bound preserves the engine's budget-fits-sliding-window
+    validation done against the initial value.  ``tpot_slo_s=None``
+    self-calibrates: the SLO becomes ``SLO_CALIB`` x the median of the
+    first full sample window (useful on hardware whose absolute decode
+    latency is unknown up front, e.g. this CPU container).
+    """
+
+    name = "adaptive"
+
+    WINDOW = 16        # iterations between budget re-evaluations
+    MIN_SAMPLES = 8    # gaps needed before adapting / self-calibrating
+    SHRINK = 0.5       # multiplicative decrease on SLO breach
+    GROW = 1.5         # multiplicative increase under headroom
+    GROW_AT = 0.6      # grow when tpot < GROW_AT * SLO
+    SLO_CALIB = 1.5    # self-calibrated SLO = SLO_CALIB * median(window)
+
+    def __init__(self, tpot_slo_s: Optional[float] = None):
+        self.tpot_slo_s = tpot_slo_s
+        self._budget: Optional[int] = None
+        self._min_budget = 0
+        self._max_budget = 0
+        self._next_eval = self.WINDOW
+        self.budget_adjustments = 0
+
+    def metrics(self) -> Dict[str, int]:
+        return {
+            "budget": self._budget or 0,
+            "budget_max": self._max_budget,
+            "budget_adjustments": self.budget_adjustments,
+            "tpot_slo_us": int((self.tpot_slo_s or 0.0) * 1e6),
+        }
+
+    def _adapt(self, s: "Scheduler", it: int):
+        if self._budget is None:           # first call: bind to the scheduler
+            self._max_budget = s.token_budget
+            self._min_budget = min(s.max_batch + 1, s.token_budget)
+            self._budget = s.token_budget
+        if it < self._next_eval or len(s.tpot_samples) < self.MIN_SAMPLES:
+            return
+        self._next_eval = it + self.WINDOW
+        window = list(s.tpot_samples)
+        if self.tpot_slo_s is None:
+            self.tpot_slo_s = self.SLO_CALIB * float(np.median(window))
+            return
+        tpot = float(np.mean(window[-self.WINDOW:]))
+        if tpot > self.tpot_slo_s and self._budget > self._min_budget:
+            self._budget = max(self._min_budget,
+                               int(self._budget * self.SHRINK))
+            self.budget_adjustments += 1
+        elif tpot < self.GROW_AT * self.tpot_slo_s \
+                and self._budget < self._max_budget:
+            self._budget = min(self._max_budget,
+                               max(self._budget + 1,
+                                   int(self._budget * self.GROW)))
+            self.budget_adjustments += 1
+
+    def schedule(self, s: "Scheduler", it: int) -> Optional["SchedulingOutput"]:
+        self._adapt(s, it)
+        s.token_budget = self._budget      # ChunkedPolicy reads it live
+        return super().schedule(s, it)
+
+
 POLICIES = {
     "monolithic": MonolithicPolicy,
     "chunked": ChunkedPolicy,
     "disaggregated": DisaggregatedPolicy,
+    "adaptive": AdaptivePolicy,
 }
 
 
 def make_policy(name: Optional[str], *, token_budget: Optional[int] = None,
-                hysteresis_tokens: Optional[int] = None) -> SchedulingPolicy:
+                hysteresis_tokens: Optional[int] = None,
+                tpot_slo_s: Optional[float] = None) -> SchedulingPolicy:
     """Resolve a policy name against the token budget.
 
     ``None``/``"auto"`` keeps the historical contract: a token budget means
@@ -384,6 +469,10 @@ def make_policy(name: Optional[str], *, token_budget: Optional[int] = None,
         raise ValueError(
             "phase_hysteresis_tokens / --hysteresis-tokens applies only "
             f"to the disaggregated policy (got policy {name!r})")
+    if tpot_slo_s is not None and name != "adaptive":
+        raise ValueError(
+            "tpot_slo_s / --tpot-slo-ms applies only to the adaptive "
+            f"policy (got policy {name!r})")
     if name == "monolithic":
         if token_budget is not None:
             raise ValueError(
@@ -396,4 +485,6 @@ def make_policy(name: Optional[str], *, token_budget: Optional[int] = None,
             "(set prefill_chunk_tokens / --chunk-tokens)")
     if name == "disaggregated":
         return DisaggregatedPolicy(hysteresis_tokens=hysteresis_tokens)
+    if name == "adaptive":
+        return AdaptivePolicy(tpot_slo_s=tpot_slo_s)
     return ChunkedPolicy()

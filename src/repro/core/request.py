@@ -1,0 +1,125 @@
+"""The continuous-serving request layer over :class:`~repro.core.sequence.
+Sequence`.
+
+The engine's public surface speaks *requests*, not sequences: a request
+is admitted with its own :class:`SamplingParams`, carries a monotonic id
+from :class:`RequestIdAllocator` (ids never collide even after the
+scheduler releases finished sequence state), moves through the
+
+    QUEUED -> RUNNING -> FINISHED | ABORTED
+
+lifecycle, and streams :class:`RequestOutput` increments from
+``engine.step()`` / ``engine.generate()``.  The underlying ``Sequence``
+remains the unit the scheduler, KV cache and sampler operate on; exactly
+one sequence backs each request (``request_id == seq_id``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import List, Optional
+
+from repro.core.sequence import SeqStatus, Sequence
+
+
+class RequestState(enum.Enum):
+    QUEUED = 0      # admitted to the waiting queue, not yet scheduled
+    RUNNING = 1     # scheduled at least once (prefilling or decoding)
+    FINISHED = 2    # completed normally ("stop" / "length")
+    ABORTED = 3     # cancelled via engine.abort(); resources reclaimed
+
+    @staticmethod
+    def of(seq: Sequence) -> "RequestState":
+        return {
+            SeqStatus.WAITING: RequestState.QUEUED,
+            SeqStatus.RUNNING: RequestState.RUNNING,
+            SeqStatus.FINISHED: RequestState.FINISHED,
+            SeqStatus.ABORTED: RequestState.ABORTED,
+        }.get(seq.status, RequestState.RUNNING)
+
+
+class RequestIdAllocator:
+    """Monotonic request/sequence ids.  Never reuses an id, so releasing
+    finished sequences from ``Scheduler.seqs`` (long-run memory bound)
+    cannot cause a later request to collide with live worker-side state
+    (KV rows, sampler penalty columns, TSEM metadata are all keyed by
+    sequence id)."""
+
+    def __init__(self, start: int = 0):
+        self._counter = itertools.count(start)
+
+    def next(self) -> int:
+        return next(self._counter)
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    """Per-request latency accounting (all times in seconds)."""
+
+    request_id: int
+    prompt_tokens: int
+    output_tokens: int
+    queue_s: Optional[float]    # arrival -> first scheduled
+    ttft_s: Optional[float]     # arrival -> first output token
+    tpot_s: Optional[float]     # mean inter-token time after the first
+    e2e_s: Optional[float]      # arrival -> finish
+    finish_reason: Optional[str]
+    state: RequestState
+
+    @staticmethod
+    def of(seq: Sequence) -> "RequestMetrics":
+        n = len(seq.output_ids)
+        ttft = (seq.first_token_t - seq.arrival_t
+                if seq.first_token_t is not None else None)
+        queue = (seq.first_sched_t - seq.arrival_t
+                 if seq.first_sched_t is not None else None)
+        tpot = None
+        if seq.first_token_t is not None and seq.last_token_t is not None \
+                and n > 1:
+            tpot = (seq.last_token_t - seq.first_token_t) / (n - 1)
+        e2e = (seq.finish_t - seq.arrival_t
+               if seq.finish_t is not None else None)
+        return RequestMetrics(
+            request_id=seq.seq_id, prompt_tokens=seq.prompt_len,
+            output_tokens=n, queue_s=queue, ttft_s=ttft, tpot_s=tpot,
+            e2e_s=e2e, finish_reason=seq.finish_reason,
+            state=RequestState.of(seq))
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["state"] = self.state.name
+        return d
+
+
+@dataclasses.dataclass
+class Request:
+    """Engine-side bookkeeping for one in-flight request."""
+
+    request_id: int
+    seq: Sequence
+    streamed: int = 0       # output tokens already emitted via RequestOutput
+
+    @property
+    def state(self) -> RequestState:
+        return RequestState.of(self.seq)
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """One streaming increment for a request, returned by ``engine.step()``.
+
+    ``new_token_ids`` are the tokens generated since the previous output
+    for this request; ``token_ids`` is the cumulative output so far.  The
+    final increment has ``finished=True`` and carries the request's
+    latency metrics; after it, the engine holds no per-request state (the
+    ``seq`` handle stays valid for the caller)."""
+
+    request_id: int
+    new_token_ids: List[int]
+    token_ids: List[int]
+    finished: bool
+    state: RequestState
+    finish_reason: Optional[str] = None
+    metrics: Optional[RequestMetrics] = None
+    seq: Optional[Sequence] = None      # underlying sequence (offline compat)

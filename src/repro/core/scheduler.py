@@ -37,6 +37,7 @@ bucketed to a small set of power-of-two widths (``packed_layout()`` /
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
@@ -133,7 +134,9 @@ class Scheduler:
                  max_seq_len: int = 4096,
                  token_budget: Optional[int] = None,
                  policy: Optional[str] = None,
-                 hysteresis_tokens: Optional[int] = None):
+                 hysteresis_tokens: Optional[int] = None,
+                 tpot_slo_s: Optional[float] = None,
+                 keep_finished: int = 1024):
         from repro.core.policies import make_policy
 
         self.max_batch = max_batch
@@ -144,12 +147,25 @@ class Scheduler:
         self.token_budget = (max(token_budget, max_batch + 1)
                              if token_budget is not None else None)
         self.policy = make_policy(policy, token_budget=self.token_budget,
-                                  hysteresis_tokens=hysteresis_tokens)
+                                  hysteresis_tokens=hysteresis_tokens,
+                                  tpot_slo_s=tpot_slo_s)
         self.waiting: Deque[Sequence] = deque()
         self.seqs: Dict[int, Sequence] = {}
         self.slot_members: List[List[int]] = [[] for _ in range(pp_degree)]
         self.iteration = 0
-        self.finished: List[Sequence] = []
+        # long-run memory bound: FINISHED/ABORTED sequences are released
+        # from ``seqs`` once their slot membership clears; only a capped
+        # window of recently finished sequences is retained here
+        self.finished: Deque[Sequence] = deque(maxlen=keep_finished)
+        self._retired: set = set()       # finished/aborted, pending release
+        # live inter-token gaps across all sequences (seconds); feeds the
+        # adaptive token-budget policy
+        self.tpot_samples: Deque[float] = deque(maxlen=128)
+        # serializes status transitions between complete() (runs on the
+        # engine's device thread) and abort() (caller thread): without it
+        # an abort landing between complete's RUNNING check and
+        # Sequence.append could be overwritten to FINISHED
+        self._mutex = threading.Lock()
 
     @property
     def chunked(self) -> bool:
@@ -181,7 +197,51 @@ class Scheduler:
         out = self.policy.schedule(self, it)
         if out is not None:
             self.iteration = max(self.iteration, it + 1)
+        self._purge_retired()
         return out
+
+    def _purge_retired(self):
+        """Release FINISHED/ABORTED sequences whose slot membership has
+        cleared (the slot's own next ``schedule`` filters them out, which
+        only happens after every in-flight iteration referencing them has
+        completed — so nothing downstream can still need ``seqs[sid]``)."""
+        if not self._retired:
+            return
+        live = set()
+        for m in self.slot_members:
+            live.update(m)
+        for sid in [s for s in self._retired if s not in live]:
+            self.seqs.pop(sid, None)
+            self._retired.discard(sid)
+
+    # -- request cancellation ------------------------------------------------
+    def abort(self, seq_id: int) -> Optional[Sequence]:
+        """Mark a sequence ABORTED; returns it (or None if unknown/done).
+
+        A WAITING sequence is removed from the queue and released at
+        once; a RUNNING one keeps its scheduler record until its slot's
+        next ``schedule`` call drops it from membership (in-flight
+        iterations may still reference it) — worker-side resources (KV
+        row, sampler columns) are the engine's to reclaim."""
+        with self._mutex:
+            seq = self.seqs.get(seq_id)
+            if seq is None or seq.status in (SeqStatus.FINISHED,
+                                             SeqStatus.ABORTED):
+                return None
+            now = time.monotonic()
+            waiting = seq.status == SeqStatus.WAITING
+            seq.status = SeqStatus.ABORTED
+            seq.finish_t = now
+            seq.finish_reason = "abort"
+            if waiting:
+                try:
+                    self.waiting.remove(seq)
+                except ValueError:
+                    pass
+                self.seqs.pop(seq_id, None)
+            else:
+                self._retired.add(seq_id)
+            return seq
 
     # -- sampling-output ingestion ----------------------------------------
     def complete(self, iteration: int, seq_ids: List[int],
@@ -189,13 +249,18 @@ class Scheduler:
         """Append sampled tokens; returns finished seq ids."""
         now = time.monotonic()
         done = []
-        for sid, tok in zip(seq_ids, token_ids):
-            seq = self.seqs[sid]
-            if seq.status != SeqStatus.RUNNING:
-                continue
-            if seq.append(int(tok), now) or seq.length >= self.max_seq_len:
-                seq.status = SeqStatus.FINISHED
-                seq.finish_t = seq.finish_t or now
-                self.finished.append(seq)
-                done.append(sid)
+        with self._mutex:
+            for sid, tok in zip(seq_ids, token_ids):
+                seq = self.seqs.get(sid)
+                if seq is None or seq.status != SeqStatus.RUNNING:
+                    continue   # finished/aborted while this batch was in flight
+                if seq.last_token_t is not None:
+                    self.tpot_samples.append(now - seq.last_token_t)
+                if seq.append(int(tok), now) or seq.length >= self.max_seq_len:
+                    seq.status = SeqStatus.FINISHED
+                    seq.finish_t = seq.finish_t or now
+                    seq.finish_reason = seq.finish_reason or "length"
+                    self.finished.append(seq)
+                    self._retired.add(sid)
+                    done.append(sid)
         return done

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import time
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -15,6 +16,7 @@ class SeqStatus(enum.Enum):
     RUNNING = 1
     FINISHED = 2
     PREEMPTED = 3
+    ABORTED = 4
 
 
 @dataclasses.dataclass
@@ -25,8 +27,11 @@ class Sequence:
     output_ids: List[int] = dataclasses.field(default_factory=list)
     status: SeqStatus = SeqStatus.WAITING
     arrival_t: float = 0.0
+    first_sched_t: Optional[float] = None   # WAITING -> RUNNING transition
     first_token_t: Optional[float] = None
+    last_token_t: Optional[float] = None    # feeds live TPOT (adaptive policy)
     finish_t: Optional[float] = None
+    finish_reason: Optional[str] = None     # "stop" | "length" | "abort"
     # chunked-prefill progress: prompt tokens whose KV is (or is being)
     # written into the cache.  Advanced by the scheduler at chunk-issue
     # time; the monolithic path sets it to the full prompt on admission.
@@ -48,18 +53,30 @@ class Sequence:
     def last_token(self) -> int:
         return self.output_ids[-1] if self.output_ids else self.prompt_ids[-1]
 
+    def mark_running(self, now: Optional[float] = None):
+        """WAITING -> RUNNING (admission); records the queue-exit time the
+        per-request queue-delay metric is computed from."""
+        self.status = SeqStatus.RUNNING
+        if self.first_sched_t is None:
+            self.first_sched_t = time.monotonic() if now is None else now
+
     def append(self, token_id: int, now: float) -> bool:
         """Returns True when the sequence finishes."""
         self.output_ids.append(int(token_id))
         if self.first_token_t is None:
             self.first_token_t = now
-        done = (
-            len(self.output_ids) >= self.params.max_new_tokens
-            or (self.params.eos_token_id >= 0 and token_id == self.params.eos_token_id)
-        )
+        self.last_token_t = now
+        if len(self.output_ids) >= self.params.max_new_tokens:
+            done, reason = True, "length"
+        elif (self.params.eos_token_id >= 0
+                and token_id == self.params.eos_token_id):
+            done, reason = True, "stop"
+        else:
+            done = False
         if done:
             self.status = SeqStatus.FINISHED
             self.finish_t = now
+            self.finish_reason = self.finish_reason or reason
         return done
 
 

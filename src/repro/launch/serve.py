@@ -1,13 +1,23 @@
 """Serving driver: the SiPipe engine end-to-end on a real (reduced) model
-with a ShareGPT-shaped batched workload.
+with a ShareGPT-shaped workload.
+
+Offline batch (enqueue everything, blocking run):
 
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
       --engine sipipe --pp 2 --requests 8
+
+Online continuous serving (Poisson arrivals replayed through the
+step-driven request API, docs/serving.md):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
+      --online --arrival-rate 8 --policy chunked --chunk-tokens 16
 """
 from __future__ import annotations
 
 import argparse
 import json
+import time
+from collections import deque
 
 import jax
 import numpy as np
@@ -18,23 +28,45 @@ from repro.core.sampling_params import SamplingParams
 from repro.models import ModelOptions, ShardCtx, build_model
 from repro.runtime.data import ShareGPTLike
 
+POLICY_CHOICES = ["auto", "monolithic", "chunked", "disaggregated", "adaptive"]
 
-def run(arch: str, *, engine: str = "sipipe", pp: int = 2, requests: int = 8,
-        max_batch: int = 4, max_new_tokens: int = 16, max_seq_len: int = 256,
-        n_samplers: int = 2, chunk_tokens: int = 0, policy: str = "auto",
-        hysteresis_tokens: int = 0, seed: int = 0,
-        verbose: bool = True) -> dict:
-    cfg = get_config(arch + "-smoke" if not arch.endswith("-smoke") else arch)
-    model = build_model(cfg, ShardCtx.single(), ModelOptions())
-    params = model.init(jax.random.key(0))
+
+def _build_engine(arch: str, *, engine: str, pp: int, max_batch: int,
+                  max_seq_len: int, n_samplers: int, chunk_tokens: int,
+                  policy: str, hysteresis_tokens: int, tpot_slo_ms: float,
+                  keep_recent: int = 2048, seed: int = 0, prebuilt=None):
+    """``prebuilt`` = (cfg, model, params) skips the model build — callers
+    comparing several engine configs on one model (benchmarks) reuse it."""
+    if prebuilt is not None:
+        cfg, model, params = prebuilt
+    else:
+        cfg = get_config(arch + "-smoke" if not arch.endswith("-smoke")
+                         else arch)
+        model = build_model(cfg, ShardCtx.single(), ModelOptions())
+        params = model.init(jax.random.key(0))
     ecfg = EngineConfig(pp_degree=pp, max_batch=max_batch,
                         max_seq_len=max_seq_len, n_samplers=n_samplers,
                         prefill_chunk_tokens=chunk_tokens or None,
                         scheduling_policy=policy,
                         phase_hysteresis_tokens=hysteresis_tokens or None,
-                        seed=seed)
+                        tpot_slo_s=(tpot_slo_ms / 1e3) or None,
+                        keep_recent_requests=keep_recent, seed=seed)
     eng = (SiPipeEngine if engine == "sipipe" else NaivePPEngine)(
         model, params, ecfg)
+    return cfg, eng
+
+
+def run(arch: str, *, engine: str = "sipipe", pp: int = 2, requests: int = 8,
+        max_batch: int = 4, max_new_tokens: int = 16, max_seq_len: int = 256,
+        n_samplers: int = 2, chunk_tokens: int = 0, policy: str = "auto",
+        hysteresis_tokens: int = 0, tpot_slo_ms: float = 0.0, seed: int = 0,
+        verbose: bool = True) -> dict:
+    """Offline batch mode: enqueue every prompt, blocking run()."""
+    cfg, eng = _build_engine(arch, engine=engine, pp=pp, max_batch=max_batch,
+                             max_seq_len=max_seq_len, n_samplers=n_samplers,
+                             chunk_tokens=chunk_tokens, policy=policy,
+                             hysteresis_tokens=hysteresis_tokens,
+                             tpot_slo_ms=tpot_slo_ms, seed=seed)
     wl = ShareGPTLike(cfg.vocab_size, n_requests=requests, seed=seed,
                       prompt_len_median=12, max_prompt=max_seq_len // 4,
                       output_len_median=max_new_tokens,
@@ -49,12 +81,91 @@ def run(arch: str, *, engine: str = "sipipe", pp: int = 2, requests: int = 8,
     m["engine"] = engine
     m["finished"] = len(done)
     if verbose:
-        print(json.dumps({k: v for k, v in m.items() if k != "stages"},
-                         indent=1, default=float))
-        for i, st in enumerate(m["stages"]):
-            print(f"  stage{i}: busy={st['busy_s']:.2f}s "
-                  f"prep={st['prep_s']:.2f}s bubble={st['bubble_frac']:.2f}")
+        _print_metrics(m)
     return m
+
+
+def run_online(arch: str, *, engine: str = "sipipe", pp: int = 2,
+               requests: int = 8, max_batch: int = 4, max_new_tokens: int = 16,
+               max_seq_len: int = 256, n_samplers: int = 2,
+               chunk_tokens: int = 16, policy: str = "chunked",
+               hysteresis_tokens: int = 0, tpot_slo_ms: float = 0.0,
+               arrival_rate: float = 4.0, abort_every: int = 0,
+               seed: int = 0, verbose: bool = True, prebuilt=None) -> dict:
+    """Online continuous serving: replay a Poisson arrival trace through
+    the step-driven request API (``add_request``/``step``/``abort``),
+    streaming tokens as they land and recording per-request
+    TTFT/TPOT/queue-delay (docs/serving.md).
+
+    ``abort_every`` > 0 cancels every Nth request after its first
+    streamed token — the online smoke's abort-path coverage.
+    """
+    cfg, eng = _build_engine(arch, engine=engine, pp=pp, max_batch=max_batch,
+                             max_seq_len=max_seq_len, n_samplers=n_samplers,
+                             chunk_tokens=chunk_tokens, policy=policy,
+                             hysteresis_tokens=hysteresis_tokens,
+                             tpot_slo_ms=tpot_slo_ms, seed=seed,
+                             prebuilt=prebuilt)
+    wl = ShareGPTLike(cfg.vocab_size, n_requests=requests, seed=seed,
+                      prompt_len_median=12, max_prompt=max_seq_len // 4,
+                      output_len_median=max_new_tokens,
+                      max_output=max_new_tokens)
+    sp_base = SamplingParams(temperature=0.8, top_k=40, top_p=0.95,
+                             frequency_penalty=0.2, presence_penalty=0.1)
+    trace = deque(wl.arrivals(arrival_rate))
+    t0 = time.monotonic()
+    n_submitted = n_finished = n_aborted = 0
+    abort_armed: set = set()
+    streamed_tokens = 0
+    while trace or eng.has_work:
+        now = time.monotonic() - t0
+        while trace and trace[0][0] <= now:
+            t_arr, prompt, budget = trace.popleft()
+            # backdate to the NOMINAL arrival: time spent queued outside
+            # the engine (behind a blocking step) counts toward TTFT
+            rid = eng.add_request(prompt, SamplingParams(
+                **{**sp_base.__dict__,
+                   "max_new_tokens": min(budget, max_new_tokens)}),
+                arrival_t=t0 + t_arr)
+            n_submitted += 1
+            if abort_every and n_submitted % abort_every == 0:
+                abort_armed.add(rid)
+        outs = eng.step()
+        for out in outs:
+            streamed_tokens += len(out.new_token_ids)
+            if out.finished:
+                n_finished += out.state.name == "FINISHED"
+                n_aborted += out.state.name == "ABORTED"
+            elif out.request_id in abort_armed and out.token_ids:
+                # mid-decode cancellation: the request already streamed
+                # at least one token
+                abort_armed.discard(out.request_id)
+                eng.abort(out.request_id)
+        if not outs and not eng.has_work and trace:
+            # idle until the next arrival (bounded nap, wall-clock replay)
+            time.sleep(min(0.002, max(0.0, trace[0][0] - now)))
+    eng.shutdown()
+    m = eng.metrics()
+    m["engine"] = engine
+    m["online"] = True
+    m["arrival_rate_rps"] = arrival_rate
+    m["finished"] = n_finished
+    m["aborted"] = n_aborted
+    m["streamed_tokens"] = streamed_tokens
+    assert n_finished + n_aborted == n_submitted == requests, \
+        (n_finished, n_aborted, n_submitted)
+    if verbose:
+        _print_metrics(m)
+    return m
+
+
+def _print_metrics(m: dict):
+    print(json.dumps({k: v for k, v in m.items()
+                      if k not in ("stages", "requests")},
+                     indent=1, default=float))
+    for i, st in enumerate(m["stages"]):
+        print(f"  stage{i}: busy={st['busy_s']:.2f}s "
+              f"prep={st['prep_s']:.2f}s bubble={st['bubble_frac']:.2f}")
 
 
 def main():
@@ -69,8 +180,7 @@ def main():
     ap.add_argument("--chunk-tokens", type=int, default=0,
                     help="per-iteration token budget for span scheduling "
                          "policies (0 = monolithic whole-prompt prefill)")
-    ap.add_argument("--policy", default="auto",
-                    choices=["auto", "monolithic", "chunked", "disaggregated"],
+    ap.add_argument("--policy", default="auto", choices=POLICY_CHOICES,
                     help="scheduling policy; 'auto' maps a token budget to "
                          "chunked and no budget to monolithic "
                          "(docs/scheduling.md §Scheduling policies)")
@@ -78,11 +188,29 @@ def main():
                     help="disaggregated decode->prefill switch threshold in "
                          "pending prefill tokens per paused decode slot "
                          "(0 = the token budget)")
+    ap.add_argument("--tpot-slo-ms", type=float, default=0.0,
+                    help="adaptive policy: target mean inter-token latency "
+                         "in ms (0 = self-calibrate from the first window)")
+    ap.add_argument("--online", action="store_true",
+                    help="continuous serving: Poisson arrivals replayed "
+                         "through the step-driven request API "
+                         "(docs/serving.md)")
+    ap.add_argument("--arrival-rate", type=float, default=4.0,
+                    help="online mode: Poisson arrival rate (requests/s)")
+    ap.add_argument("--abort-every", type=int, default=0,
+                    help="online mode: abort every Nth request after its "
+                         "first streamed token (0 = never)")
     args = ap.parse_args()
-    run(args.arch, engine=args.engine, pp=args.pp, requests=args.requests,
-        max_batch=args.max_batch, max_new_tokens=args.max_new_tokens,
-        n_samplers=args.samplers, chunk_tokens=args.chunk_tokens,
-        policy=args.policy, hysteresis_tokens=args.hysteresis_tokens)
+    common = dict(engine=args.engine, pp=args.pp, requests=args.requests,
+                  max_batch=args.max_batch, max_new_tokens=args.max_new_tokens,
+                  n_samplers=args.samplers, chunk_tokens=args.chunk_tokens,
+                  policy=args.policy, hysteresis_tokens=args.hysteresis_tokens,
+                  tpot_slo_ms=args.tpot_slo_ms)
+    if args.online:
+        run_online(args.arch, arrival_rate=args.arrival_rate,
+                   abort_every=args.abort_every, **common)
+    else:
+        run(args.arch, **common)
 
 
 if __name__ == "__main__":

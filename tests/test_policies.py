@@ -10,6 +10,7 @@ from hypothesis import given, settings, strategies as st
 from repro.configs import get_config
 from repro.core.engine import EngineConfig, SiPipeEngine
 from repro.core.policies import (
+    AdaptivePolicy,
     ChunkedPolicy,
     DisaggregatedPolicy,
     MonolithicPolicy,
@@ -32,6 +33,8 @@ def test_policy_resolution_auto():
     assert isinstance(make_policy("auto", token_budget=8), ChunkedPolicy)
     assert isinstance(make_policy("disaggregated", token_budget=8),
                       DisaggregatedPolicy)
+    assert isinstance(make_policy("adaptive", token_budget=8),
+                      AdaptivePolicy)
 
 
 def test_policy_validation():
@@ -41,6 +44,8 @@ def test_policy_validation():
         make_policy("chunked")
     with pytest.raises(ValueError, match="token budget"):
         make_policy("disaggregated")
+    with pytest.raises(ValueError, match="token budget"):
+        make_policy("adaptive")
     with pytest.raises(ValueError, match="no token budget"):
         make_policy("monolithic", token_budget=8)
     # the hysteresis knob is a no-op outside disaggregated: reject loudly
@@ -48,6 +53,13 @@ def test_policy_validation():
         make_policy("chunked", token_budget=8, hysteresis_tokens=4)
     with pytest.raises(ValueError, match="hysteresis"):
         make_policy("monolithic", hysteresis_tokens=4)
+    # likewise the TPOT SLO knob applies only to adaptive
+    with pytest.raises(ValueError, match="tpot_slo"):
+        make_policy("chunked", token_budget=8, tpot_slo_s=0.01)
+    with pytest.raises(ValueError, match="tpot_slo"):
+        make_policy("disaggregated", token_budget=8, tpot_slo_s=0.01)
+    assert make_policy("adaptive", token_budget=8,
+                       tpot_slo_s=0.01).tpot_slo_s == 0.01
 
 
 def test_scheduler_exposes_policy():
@@ -95,18 +107,20 @@ def _mk_disagg(plens, max_new, *, max_batch=2, p=2, budget=8, hyst=None,
 def test_phase_purity_and_ordering():
     """Prefill-phase iterations carry only prompt chunks at the full
     budget (zero decode piggybacking); decode-phase iterations are pure
-    1-token spans."""
+    1-token spans.  (Reads prompt lengths off the SchedulingOutput —
+    finished sequences are released from ``Scheduler.seqs`` once their
+    slot membership clears, the long-run memory bound.)"""
     s = _mk_disagg([20, 6, 14, 9], 4)
     for it, phase, o in _drive(s):
         if phase == "prefill":
-            for sid, (off, c) in zip(o.seq_ids, o.spans):
-                assert off + c <= s.seqs[sid].prompt_len or \
-                    off + c == s.seqs[sid].prompt_len
-                assert off < s.seqs[sid].prompt_len   # never a decode span
+            for (off, c), plen in zip(o.spans, o.prompt_lens):
+                assert off + c <= plen
+                assert off < plen                     # never a decode span
         else:
             assert o.max_span == 1
             assert all(ns for ns in o.needs_sample)
     assert len(s.finished) == 4
+    assert not s.seqs        # released once membership cleared
 
 
 def test_decode_phase_entry_never_strands_partial_prefill():
@@ -273,6 +287,115 @@ def test_property_no_oscillation_on_static_workload(n, max_batch, p, budget, see
 
 
 # ---------------------------------------------------------------------------
+# Adaptive token-budget policy (latency-SLO driven)
+# ---------------------------------------------------------------------------
+
+def _mk_adaptive(budget=32, slo=0.01, max_batch=2, p=1, n=4,
+                 max_new=10 ** 6):
+    s = Scheduler(max_batch=max_batch, pp_degree=p, max_seq_len=4096,
+                  token_budget=budget, policy="adaptive", tpot_slo_s=slo)
+    for i in range(n):
+        s.add_request(Sequence(i, list(range(1, 400)), SamplingParams(
+            greedy=True, max_new_tokens=max_new)))
+    return s
+
+
+def _spin(s, start, rounds):
+    """Run `rounds` scheduler iterations, completing sampled columns."""
+    for it in range(start, start + rounds):
+        o = s.schedule(it)
+        if o is None:
+            continue
+        ids = [o.seq_ids[i] for i in o.sample_indices()]
+        s.complete(it, ids, np.full(len(ids), 7, np.int32))
+    return start + rounds
+
+
+def test_adaptive_budget_shrinks_on_slo_breach_and_grows_back():
+    """TPOT above the SLO shrinks the chunk budget (decodes win back
+    inter-token latency); TPOT far below it grows the budget back toward
+    the configured maximum.  The budget never leaves
+    [max_batch + 1, initial budget]."""
+    # single-token outputs never produce an inter-token gap, so the
+    # injected tpot_samples window fully controls the policy here
+    s = _mk_adaptive(budget=32, slo=0.01, max_new=1)
+    pol = s.policy
+    it = _spin(s, 0, 2)                      # bind the policy to the budget
+    assert pol._budget == 32
+    # live TPOT breaches the SLO -> shrink at the next evaluation window
+    s.tpot_samples.extend([0.05] * 16)
+    it = _spin(s, it, 2 * pol.WINDOW)
+    assert pol._budget < 32
+    assert pol.budget_adjustments >= 1
+    shrunk = pol._budget
+    # persistent breach walks the budget down to the floor, never below
+    it = _spin(s, it, 6 * pol.WINDOW)
+    assert s.max_batch + 1 <= pol._budget <= shrunk
+    # headroom: TPOT far under the SLO -> grow back, capped at the initial
+    for _ in range(8):
+        s.tpot_samples.clear()
+        s.tpot_samples.extend([0.0001] * 16)
+        it = _spin(s, it, pol.WINDOW)
+    assert pol._budget == 32
+
+
+def test_adaptive_budget_is_respected_by_iterations():
+    """Every scheduled iteration obeys the CURRENT (adapted) budget."""
+    s = _mk_adaptive(budget=24, slo=0.001)
+    for it in range(200):
+        s.tpot_samples.append(0.1)           # constant breach: keep shrinking
+        o = s.schedule(it)
+        if o is None:
+            continue
+        assert o.total_tokens <= s.token_budget
+        ids = [o.seq_ids[i] for i in o.sample_indices()]
+        s.complete(it, ids, np.full(len(ids), 7, np.int32))
+    assert s.token_budget == s.max_batch + 1     # floor reached
+    assert s.policy.metrics()["budget"] == s.token_budget
+
+
+def test_adaptive_self_calibrates_slo():
+    """With no explicit SLO the first full window sets one from the
+    observed median — the policy works without knowing absolute hardware
+    latency up front."""
+    s = _mk_adaptive(budget=16, slo=None, max_new=1)
+    pol = s.policy
+    assert pol.tpot_slo_s is None
+    s.tpot_samples.extend([0.004] * 16)
+    _spin(s, 0, 2 * pol.WINDOW)
+    assert pol.tpot_slo_s == pytest.approx(pol.SLO_CALIB * 0.004)
+
+
+# ---------------------------------------------------------------------------
+# pp_sim: per-stage heterogeneity (Obs. 3 jitter)
+# ---------------------------------------------------------------------------
+
+def test_mixed_workload_jitter_makes_stages_heterogeneous():
+    """fwd_jitter feeds the PipeCosts Obs. 3 convention into the mixed-
+    workload simulation: odd stages run slower than even ones, so the
+    per-stage busy times diverge instead of charging identical durations
+    — while the scheduling trace itself is timing-independent."""
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.pp_sim import simulate_mixed_workload
+
+    kw = dict(p=2, max_batch=2, token_budget=16, prompt_lens=[40, 30, 8],
+              max_new_tokens=8, t_token=1e-4, t_fixed=5e-4)
+    for policy in ("monolithic", "chunked", "disaggregated"):
+        flat = simulate_mixed_workload(policy=policy, **kw)
+        jit = simulate_mixed_workload(policy=policy, fwd_jitter=0.2, **kw)
+        assert flat.stage_busy[0] == pytest.approx(flat.stage_busy[1])
+        # stage 1 charges 1.2x nominal, stage 0 charges 0.8x
+        assert jit.stage_busy[1] / jit.stage_busy[0] == pytest.approx(1.5)
+        # same schedule, same tokens — only the timing model changed
+        assert jit.iteration_tokens == flat.iteration_tokens
+        # the slow stage paces the pipeline: jittered wall >= uniform wall
+        assert jit.wall_s > flat.wall_s * 0.99
+
+
+# ---------------------------------------------------------------------------
 # E2E three-policy greedy parity (acceptance criterion)
 # ---------------------------------------------------------------------------
 
@@ -304,6 +427,9 @@ def test_disaggregated_token_identical_to_monolithic():
     dis = _engine_outputs(model, params, prompts, 5, policy="disaggregated",
                           chunk=6)
     assert dis == mono
+    ada = _engine_outputs(model, params, prompts, 5, policy="adaptive",
+                          chunk=6)
+    assert ada == mono      # budget adaptation never changes greedy tokens
 
 
 @pytest.mark.slow

@@ -197,6 +197,121 @@ def test_replica_carries_columns_across_shrink_and_reorder():
     assert rep2.out_len.tolist()[0] >= 1
 
 
+# ---------------------------------------------------------------------------
+# Per-column (per-request) sampling params in one mixed batch
+# ---------------------------------------------------------------------------
+
+MIXED = [
+    SamplingParams(greedy=True),
+    SamplingParams(greedy=True, frequency_penalty=2.0, presence_penalty=0.5),
+    SamplingParams(greedy=True, repetition_penalty=1.7),
+]
+
+
+def test_mixed_params_columns_match_solo_columnwise():
+    """Each column of a mixed-params batch must sample exactly as a solo
+    sampler running that column alone with its own params — per-request
+    SamplingParams are honored per column, not taken from column 0."""
+    rng = np.random.default_rng(21)
+    cw = ColumnWiseSampler(V, 3, max_len=64)
+    solos = [ColumnWiseSampler(V, 1, max_len=64) for _ in MIXED]
+    for step in range(16):
+        z = _logits(rng, b=3)
+        got = cw.sample(z, MIXED, seq_ids=[10, 11, 12])
+        for i, sp in enumerate(MIXED):
+            want = solos[i].sample(z[i:i + 1], sp, seq_ids=[10 + i])
+            assert got[i] == want[0], (
+                f"step {step} col {i}: mixed-batch column diverged from its "
+                "solo run — its own params were not applied")
+
+
+def test_mixed_params_columns_match_solo_naive():
+    rng = np.random.default_rng(22)
+    nv = NaiveSampler(V)
+    solos = [NaiveSampler(V) for _ in MIXED]
+    for step in range(12):
+        z = _logits(rng, b=3)
+        got = nv.sample(z, MIXED)
+        for i, sp in enumerate(MIXED):
+            want = solos[i].sample(z[i:i + 1], sp)
+            assert got[i] == want[0], f"step {step} col {i}"
+
+
+def test_uniform_params_list_is_bit_identical_to_scalar():
+    """A per-column list where every entry agrees must take the exact
+    scalar fast path — same RNG consumption, same tokens."""
+    p = SamplingParams(temperature=0.8, top_k=7, top_p=0.9,
+                       frequency_penalty=0.4)
+    rng = np.random.default_rng(23)
+    a = ColumnWiseSampler(V, B, seed=5)
+    b = ColumnWiseSampler(V, B, seed=5)
+    for _ in range(8):
+        z = _logits(rng)
+        np.testing.assert_array_equal(a.sample(z, p),
+                                      b.sample(z, [p] * B))
+
+
+def test_mixed_params_transposed_layout():
+    """The column-wise (transposed shard) ingestion path honors
+    per-column params too."""
+    rng = np.random.default_rng(24)
+    cw = ColumnWiseSampler(V, 3, max_len=64)
+    solos = [ColumnWiseSampler(V, 1, max_len=64) for _ in MIXED]
+    for _ in range(8):
+        z = _logits(rng, b=3)
+        got = cw.sample(np.ascontiguousarray(z.T), MIXED, transposed=True,
+                        seq_ids=[0, 1, 2])
+        for i, sp in enumerate(MIXED):
+            want = solos[i].sample(z[i:i + 1], sp, seq_ids=[i])
+            assert got[i] == want[0]
+
+
+def test_mixed_params_length_mismatch_rejected():
+    cw = ColumnWiseSampler(V, B)
+    with pytest.raises(ValueError, match="params length"):
+        cw.sample(np.zeros((B, V), np.float32), MIXED)
+
+
+def test_naive_history_follows_seq_ids_across_recomposition():
+    """With seq_ids, NaiveSampler keys output history per sequence: when
+    one request finishes and a successor takes its batch column (batch
+    size unchanged), the successor must NOT inherit the predecessor's
+    penalty history — the continuous-serving recomposition case."""
+    rng = np.random.default_rng(30)
+    nv = NaiveSampler(V)
+    p = SamplingParams(greedy=True, frequency_penalty=1.0)
+    first = nv.sample(_logits(rng, b=2), p, seq_ids=[0, 1])
+    # seq 0 departs, seq 2 arrives into column 0; batch size unchanged —
+    # positional (legacy) history would hand seq 2 seq 0's past here
+    z2 = rng.normal(size=(2, V)).astype(np.float32)
+    got = nv.sample(z2.copy(), p, seq_ids=[2, 1])
+    ref = NaiveSampler(V)
+    ref.seq_history[1] = np.asarray([first[1]], np.int64)   # seq 1 history
+    want = ref.sample(z2.copy(), p, seq_ids=[2, 1])
+    np.testing.assert_array_equal(got, want)
+    assert nv.tracked_seq_ids() == {0, 1, 2}
+    nv.drop_seq(0)
+    assert nv.tracked_seq_ids() == {1, 2}
+
+
+def test_drop_seq_strips_columns():
+    """drop_seq removes exactly the released sequence's penalty state
+    (request retired/aborted) and keeps every other column intact."""
+    cw = ColumnWiseSampler(V, 3)
+    p = SamplingParams(greedy=True, frequency_penalty=1.0)
+    rng = np.random.default_rng(25)
+    ids = cw.sample(_logits(rng, b=3), p, seq_ids=[7, 8, 9])
+    assert cw.tracked_seq_ids() == {7, 8, 9}
+    cw.drop_seq(8)
+    assert cw.tracked_seq_ids() == {7, 9}
+    rep = cw._replicas[0]
+    assert rep.seq_ids == [7, 9]
+    assert rep.freq[0, ids[0]] >= 1 and rep.freq[1, ids[2]] >= 1
+    cw.drop_seq(7)
+    cw.drop_seq(9)
+    assert not cw._replicas and cw.tracked_seq_ids() == set()
+
+
 @settings(max_examples=20, deadline=None)
 @given(
     rounds=st.integers(2, 10),

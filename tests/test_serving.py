@@ -1,0 +1,349 @@
+"""Continuous-serving request API: step()/generate() vs the offline run()
+wrapper, per-request sampling params in mixed batches, abort semantics
+(KV-row + sampler-column reclamation), mid-run admission with monotonic
+ids, and the request-lifecycle property over random arrival/abort
+schedules across every scheduling policy (docs/serving.md)."""
+import itertools
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.engine import EngineConfig, NaivePPEngine, SiPipeEngine
+from repro.core.request import RequestState
+from repro.core.sampling_params import SamplingParams
+from repro.core.scheduler import Scheduler
+from repro.core.sequence import SeqStatus, Sequence, SequenceCache
+from repro.models import ShardCtx, build_model
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_config("stablelm-1.6b-smoke")
+    model = build_model(cfg, ShardCtx.single())
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _engine(model, params, *, pp=2, max_batch=2, policy="auto", chunk=None,
+            n_samplers=2, max_seq_len=64):
+    return SiPipeEngine(model, params, EngineConfig(
+        pp_degree=pp, max_batch=max_batch, max_seq_len=max_seq_len,
+        n_samplers=n_samplers, prefill_chunk_tokens=chunk,
+        scheduling_policy=policy))
+
+
+def _drain_steps(eng, max_steps=5000):
+    """Drive step() until idle; returns all RequestOutputs in order."""
+    outs = []
+    for _ in range(max_steps):
+        outs.extend(eng.step())
+        if not eng.has_work:
+            break
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# run() == generate()-drained parity (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,chunk", [
+    ("monolithic", None),
+    ("chunked", 6),
+    ("disaggregated", 6),
+    ("adaptive", 6),
+])
+def test_run_equals_generate_streamed(model_and_params, policy, chunk):
+    """The offline run() wrapper and the streaming generate() iterator
+    must produce token-identical greedy output on every policy, and the
+    stream must be a monotonic prefix chain (each increment extends the
+    previous cumulative output)."""
+    cfg, model, params = model_and_params
+    rng = np.random.default_rng(0)
+    prompts = [list(map(int, rng.integers(2, cfg.vocab_size, size=n)))
+               for n in (13, 5)]
+    sp = SamplingParams(greedy=True, max_new_tokens=4)
+
+    eng_a = _engine(model, params, policy=policy, chunk=chunk)
+    for p in prompts:
+        eng_a.add_request(p, sp)
+    offline = {s.seq_id: s.output_ids for s in eng_a.run()}
+
+    eng_b = _engine(model, params, policy=policy, chunk=chunk)
+    streamed = {}
+    finished = set()
+    for out in eng_b.generate(prompts, sp):
+        prev = streamed.setdefault(out.request_id, [])
+        assert out.token_ids == prev + out.new_token_ids   # prefix chain
+        assert out.request_id not in finished              # nothing after final
+        streamed[out.request_id] = out.token_ids
+        if out.finished:
+            finished.add(out.request_id)
+            assert out.state == RequestState.FINISHED
+            assert out.metrics is not None
+            assert out.metrics.ttft_s is not None and out.metrics.ttft_s >= 0
+    eng_b.shutdown()
+    assert finished == set(streamed)
+    assert streamed == offline
+
+
+# ---------------------------------------------------------------------------
+# Per-request sampling params in mixed batches (satellite regression)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Eng", [SiPipeEngine, NaivePPEngine],
+                         ids=["columnwise-pool", "naive-sampler"])
+def test_per_request_params_honored_in_mixed_batches(model_and_params, Eng):
+    """Two requests with different penalty params decoding in ONE batch
+    must each sample with their own params.  Pre-redesign, the engine's
+    batch-level `_params_for` applied seq_ids[0]'s params to every
+    column, so request 1's frequency penalty was silently dropped and it
+    decoded as if it were plain greedy — both sampler pools must honor
+    the per-column contract now."""
+    cfg, model, params = model_and_params
+    rng = np.random.default_rng(7)
+    prompts = [list(map(int, rng.integers(2, cfg.vocab_size, size=n)))
+               for n in (6, 9)]
+    plain = SamplingParams(greedy=True, max_new_tokens=6)
+    # a strong frequency penalty forces a distinct greedy trajectory
+    penal = SamplingParams(greedy=True, max_new_tokens=6,
+                           frequency_penalty=1000.0, presence_penalty=5.0)
+
+    def solo(prompt, sp):
+        eng = Eng(model, params, EngineConfig(
+            pp_degree=1, max_batch=1, max_seq_len=64, n_samplers=1))
+        eng.add_request(prompt, sp)
+        (done,) = eng.run()
+        return done.output_ids
+
+    want0, want1 = solo(prompts[0], plain), solo(prompts[1], penal)
+    assert want0[1:] != want1[1:] or prompts[0] != prompts[1]
+
+    # request 0 (plain) is seq_ids[0]: the pre-fix engine would have
+    # applied ITS params batch-wide, turning request 1 into plain greedy
+    eng = Eng(model, params, EngineConfig(
+        pp_degree=1, max_batch=2, max_seq_len=64, n_samplers=2))
+    eng.add_request(prompts[0], plain)
+    eng.add_request(prompts[1], penal)
+    done = sorted(eng.run(), key=lambda s: s.seq_id)
+    assert done[0].output_ids == want0, \
+        "plain-greedy request perturbed by batchmate's params"
+    assert done[1].output_ids == want1, (
+        "request 1's own penalties were not applied inside the mixed "
+        "batch — the pre-fix engine sampled every column with "
+        "seq_ids[0]'s SamplingParams")
+
+
+# ---------------------------------------------------------------------------
+# Abort semantics
+# ---------------------------------------------------------------------------
+
+def test_abort_mid_decode_frees_rows_and_preserves_survivors(model_and_params):
+    """abort() mid-decode: the aborted request stops with partial output,
+    its KV row and sampler penalty columns are reclaimed, and the
+    surviving request's tokens are bit-identical to a solo run."""
+    cfg, model, params = model_and_params
+    rng = np.random.default_rng(3)
+    pa = list(map(int, rng.integers(2, cfg.vocab_size, size=5)))
+    pb = list(map(int, rng.integers(2, cfg.vocab_size, size=7)))
+    sp = SamplingParams(greedy=True, max_new_tokens=10)
+
+    solo = _engine(model, params, pp=1, max_batch=1, n_samplers=1)
+    solo.add_request(pa, sp)
+    (want_a,) = solo.run()
+
+    eng = _engine(model, params, pp=1, max_batch=2, n_samplers=2)
+    rid_a = eng.add_request(pa, sp)
+    rid_b = eng.add_request(pb, sp)
+    outs, aborted_at = [], None
+    for _ in range(5000):
+        for out in eng.step():
+            outs.append(out)
+            if out.request_id == rid_b and out.token_ids and aborted_at is None:
+                aborted_at = len(out.token_ids)
+                assert eng.abort(rid_b)
+        if not eng.has_work:
+            break
+    eng.shutdown()
+
+    final = {o.request_id: o for o in outs if o.finished}
+    assert final[rid_a].token_ids == want_a.output_ids   # survivor untouched
+    b = final[rid_b]
+    assert b.state == RequestState.ABORTED
+    assert b.finish_reason == "abort"
+    assert aborted_at <= len(b.token_ids) < 10           # stopped early
+    # resource reclamation: KV rows, sampler columns, scheduler records
+    assert eng.seq_cache.free_rows == eng.seq_cache.max_rows
+    for smp in eng.samplers:
+        assert not smp.tracked_seq_ids()
+    assert not eng.scheduler.seqs and not eng.requests
+    m = eng.metrics()
+    assert m["requests_aborted"] == 1 and m["requests_finished"] == 1
+
+
+def test_abort_queued_and_unknown(model_and_params):
+    """Aborting a QUEUED request drops it before it ever runs; unknown /
+    already-finished ids return False."""
+    cfg, model, params = model_and_params
+    rng = np.random.default_rng(4)
+    prompts = [list(map(int, rng.integers(2, cfg.vocab_size, size=4)))
+               for _ in range(2)]
+    sp = SamplingParams(greedy=True, max_new_tokens=2)
+    eng = _engine(model, params, pp=1, max_batch=1, n_samplers=1)
+    rid0 = eng.add_request(prompts[0], sp)
+    rid1 = eng.add_request(prompts[1], sp)   # queued behind rid0 (1 seat)
+    assert not eng.abort(999)                # unknown id
+    assert eng.abort(rid1)                   # still WAITING
+    assert not eng.abort(rid1)               # idempotent: already aborted
+    outs = _drain_steps(eng)
+    final = {o.request_id: o for o in outs if o.finished}
+    assert final[rid1].state == RequestState.ABORTED
+    assert final[rid1].token_ids == []
+    assert len(final[rid0].token_ids) == 2
+    assert not eng.abort(rid0)               # finished: no-op
+    assert eng.seq_cache.free_rows == eng.seq_cache.max_rows
+    # abort straight out of the queue on an otherwise-idle engine: the
+    # final ABORTED output must still be delivered — has_work covers
+    # requests with an undrained terminal output
+    rid2 = eng.add_request(prompts[0], sp)
+    assert eng.abort(rid2)
+    assert eng.has_work
+    outs2 = _drain_steps(eng)
+    eng.shutdown()
+    final2 = {o.request_id: o for o in outs2 if o.finished}
+    assert final2[rid2].state == RequestState.ABORTED
+    assert not eng.has_work and not eng.requests
+
+
+# ---------------------------------------------------------------------------
+# Mid-run admission + monotonic request ids
+# ---------------------------------------------------------------------------
+
+def test_mid_run_admission_and_monotonic_ids(model_and_params):
+    """step() is re-entrant: requests admitted after the first wave has
+    fully drained still run, and ids stay monotonic (never reused) even
+    though the scheduler released the earlier sequences' state."""
+    cfg, model, params = model_and_params
+    rng = np.random.default_rng(5)
+    sp = SamplingParams(greedy=True, max_new_tokens=3)
+
+    eng = _engine(model, params, pp=1, max_batch=2, n_samplers=2, chunk=6,
+                  policy="chunked")
+    mk = lambda: list(map(int, rng.integers(2, cfg.vocab_size, size=5)))
+    wave1 = [eng.add_request(mk(), sp) for _ in range(2)]
+    outs1 = _drain_steps(eng)
+    assert not eng.scheduler.seqs            # wave-1 state released
+    wave2 = [eng.add_request(mk(), sp) for _ in range(2)]
+    outs2 = _drain_steps(eng)
+    eng.shutdown()
+
+    assert wave1 == [0, 1] and wave2 == [2, 3]   # monotonic, no collision
+    fin1 = {o.request_id for o in outs1 if o.finished}
+    fin2 = {o.request_id for o in outs2 if o.finished}
+    assert fin1 == set(wave1) and fin2 == set(wave2)
+    for o in outs1 + outs2:
+        if o.finished:
+            assert len(o.token_ids) == 3
+    assert eng.seq_cache.free_rows == eng.seq_cache.max_rows
+    m = eng.metrics()
+    assert m["requests_submitted"] == 4 and m["requests_finished"] == 4
+    assert set(m["requests"]) == {0, 1, 2, 3}
+    for r in m["requests"].values():
+        assert r["queue_s"] >= 0 and r["ttft_s"] >= r["queue_s"]
+
+
+# ---------------------------------------------------------------------------
+# Request-lifecycle property: random arrival/abort schedules, all policies
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    policy=st.sampled_from(["monolithic", "chunked", "disaggregated",
+                            "adaptive"]),
+    n=st.integers(1, 8),
+    max_batch=st.integers(1, 3),
+    p=st.integers(1, 3),
+    budget=st.integers(4, 16),
+    seed=st.integers(0, 999),
+)
+def test_property_lifecycle_no_leaks(policy, n, max_batch, p, budget, seed):
+    """Scheduler + SequenceCache lifecycle under random arrivals and
+    aborts, mirroring the engine's admission/reclaim protocol: at drain,
+    FINISHED ⊎ ABORTED partitions the admitted set, every KV row is
+    back in the free list, per-request token streams only ever grew, and
+    the scheduler retains no sequence state (the long-run memory bound).
+    """
+    rng = np.random.default_rng(seed)
+    s = Scheduler(max_batch=max_batch, pp_degree=p, max_seq_len=256,
+                  token_budget=(budget if policy != "monolithic" else None),
+                  policy=policy)
+    cache = SequenceCache(max_batch * p)
+    alloc = itertools.count()
+    plan = []
+    for _ in range(n):
+        sid = next(alloc)
+        plan.append((int(rng.integers(0, 20)), Sequence(
+            sid, list(range(1, int(rng.integers(1, 30)) + 1)),
+            SamplingParams(greedy=True,
+                           max_new_tokens=int(rng.integers(1, 5))))))
+    aborts = {seq.seq_id: int(rng.integers(0, 40))
+              for _, seq in plan if rng.random() < 0.4}
+    admitted, aborted = set(), set()
+    out_lens = {}
+    for it in range(3000):
+        for t_arr, seq in plan:
+            if t_arr == it:
+                s.add_request(seq)
+                admitted.add(seq.seq_id)
+        for sid, t_ab in list(aborts.items()):
+            if t_ab == it:
+                seq = s.abort(sid)
+                del aborts[sid]
+                if seq is not None:          # not already finished
+                    aborted.add(sid)
+                    cache.release(sid)       # engine reap (no in-flight here)
+        o = s.schedule(it)
+        if o is None:
+            if not s.has_work and all(t_arr <= it for t_arr, _ in plan):
+                break                        # drained and no more arrivals
+            continue
+        if o.is_prefill:                     # monolithic admission
+            new = [sid for sid in o.seq_ids if cache.lookup(sid) is None]
+            for sid in new:
+                cache.admit(sid, s.seqs[sid].prompt_len)
+            done = s.complete(it, new, rng.integers(3, 50, len(new)).astype(np.int32))
+            for sid in done:
+                cache.release(sid)
+            o = s.schedule(it)
+            if o is None:
+                continue
+        for sid in o.seq_ids:
+            if cache.lookup(sid) is None:    # lazy row admission (span path)
+                cache.admit(sid, s.seqs[sid].prompt_len)
+        ids = [o.seq_ids[i] for i in o.sample_indices()]
+        done = s.complete(it, ids, rng.integers(3, 50, len(ids)).astype(np.int32))
+        for sid in done:
+            cache.release(sid)
+        for sid in o.seq_ids:
+            seq = s.seqs.get(sid)
+            if seq is not None:
+                assert len(seq.output_ids) >= out_lens.get(sid, 0)  # monotonic
+                out_lens[sid] = len(seq.output_ids)
+    finished = {q.seq_id for q in s.finished}
+    # FINISHED ⊎ ABORTED = admitted (disjoint union)
+    assert finished | aborted == admitted
+    assert not (finished & aborted)
+    assert cache.free_rows == cache.max_rows      # no KV-row leak
+    assert not s.seqs                             # scheduler state released
+    assert not s.waiting
+
+
+def test_generate_rejects_mismatched_params(model_and_params):
+    cfg, model, params = model_and_params
+    eng = _engine(model, params, pp=1, max_batch=1, n_samplers=1)
+    with pytest.raises(ValueError, match="sampling params"):
+        next(eng.generate([[3, 4], [5, 6]],
+                          [SamplingParams(greedy=True)]))
+    eng.shutdown()
