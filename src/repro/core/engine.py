@@ -38,6 +38,7 @@ from repro.core.request import (
     RequestMetrics,
     RequestOutput,
     RequestState,
+    TokenStream,
 )
 from repro.core.sampler import ColumnWiseSampler, NaiveSampler
 from repro.core.sampling_params import SamplingParams
@@ -196,6 +197,19 @@ class EngineConfig:
     # bound on retained per-request latency records (the window online
     # metrics percentiles are computed over)
     keep_recent_requests: int = 2048
+    # ---- KV memory substrate (docs/memory.md) ----------------------------
+    # "contiguous": one dense [max_seq_len] cache row per sequence (the
+    # seed layout — concurrency capped at max_batch * pp rows).
+    # "paged": vLLM-style block tables over a [n_blocks, block_size, ...]
+    # physical cache; admission is block-budget accounting, decode growth
+    # under pressure preempts (and later recomputes) the lowest-priority
+    # sequence.
+    kv_layout: str = "contiguous"
+    kv_block_size: int = 16
+    # total physical blocks (None = the same slot budget contiguous rows
+    # would reserve: max_batch * pp * max_seq_len / block_size — or the
+    # sliding window in place of max_seq_len for rolling-cache models)
+    kv_blocks: Optional[int] = None
     seed: int = 0
 
 
@@ -216,7 +230,20 @@ class _StageWorker:
         self.metrics = StageMetrics()
         cfg = engine.cfg
         rows = cfg.max_batch * cfg.pp_degree
-        self.cache = stage.init_cache(rows, cfg.max_seq_len)
+        if engine.paged:
+            # physical cache [groups, n_blocks + 1, block_size, ...] per
+            # leaf: logical slot p of a sequence lives at
+            # (block_table[p // bs], p %% bs); the extra final block is the
+            # trash block padded table entries point at (writes discarded,
+            # reads position-masked) — docs/memory.md
+            template = stage.init_cache(1, 1)
+            nb = engine.kv_manager.n_blocks + 1
+            bs = cfg.kv_block_size
+            self.cache = jax.tree.map(
+                lambda c: jnp.zeros((c.shape[0], nb, bs) + c.shape[3:],
+                                    c.dtype), template)
+        else:
+            self.cache = stage.init_cache(rows, cfg.max_seq_len)
         self.meta_cache = BatchMetadataCache(cfg.pp_degree)
         ch = StructureAwareChannel if cfg.sat else StructureUnawareChannel
         self.out_channel = ch(cfg.channel_round_latency_s) if not stage.is_last else None
@@ -231,12 +258,35 @@ class _StageWorker:
 
     # -- CPU executor side ---------------------------------------------------
     def _prepare(self, sched: SchedulingOutput, bufs: Dict[str, np.ndarray]):
-        rows = np.array([self.engine.seq_cache.lookup(s).cache_row
-                         for s in sched.seq_ids], np.int32)
-        meta = self.meta_cache.update(sched, rows)
+        eng = self.engine
+        slot_map = None
+        if eng.paged:
+            # placement is the scheduler's block-table snapshot; rows are
+            # meaningless (the gathered view's batch dim is positional).
+            # For pure decode, derive the slot mapping HERE and only here:
+            # each row's new token dirties exactly one block —
+            # (slot_blocks) its physical id, (slot_index) its position in
+            # the row's table/view — and the write-back scatters just it.
+            tables = sched.block_tables
+            rows = np.zeros(len(sched.seq_ids), np.int32)
+            if sched.packed_width == 1:
+                w = eng.arch.window or 0
+                pos = np.asarray(sched.positions, np.int64)
+                slot = pos % w if w else pos
+                blk = np.minimum(slot // eng.cfg.kv_block_size,
+                                 tables.shape[1] - 1)
+                slot_map = (tables[np.arange(tables.shape[0]), blk], blk)
+        else:
+            rows = np.array([eng.seq_cache.lookup(s).cache_row
+                             for s in sched.seq_ids], np.int32)
+        meta = self.meta_cache.update(sched, rows, slot_map)
         np.copyto(bufs["tokens"], meta.tokens)
         np.copyto(bufs["positions"], meta.positions)
         np.copyto(bufs["rows"], meta.rows)
+        if meta.n_blocks:
+            np.copyto(bufs["block_tables"], meta.block_tables)
+            np.copyto(bufs["slot_blocks"], meta.slot_blocks)
+            np.copyto(bufs["slot_index"], meta.slot_index)
         if meta.width > 1:
             np.copyto(bufs["pack_tokens"], meta.pack_tokens)
             np.copyto(bufs["pack_positions"], meta.pack_positions)
@@ -256,11 +306,28 @@ class _StageWorker:
     def _execute(self, desc: ModelInputDescriptor, bufs: Dict[str, np.ndarray]):
         t0 = time.monotonic()
         stage, eng = self.stage, self.engine
-        rows = jnp.asarray(bufs["rows"])
         x_in = ((jnp.asarray(bufs["pack_tokens"]) if desc.width > 1
                  else jnp.asarray(bufs["tokens"])) if stage.is_first
                 else eng.recv_hidden(stage.index, desc.iteration))
-        cache_rows = jax.tree.map(lambda c: c[:, rows], self.cache)
+        if eng.paged:
+            # block-table gather: the per-batch contiguous view the model
+            # fns (and, on TPU, the paged span-attention kernels' scalar-
+            # prefetched BlockSpecs) see — [groups, B, nb * bs, ...] with
+            # slots past a row's table reading the trash/other blocks,
+            # always position-masked out (docs/memory.md)
+            bs = eng.cfg.kv_block_size
+            tables_np = bufs["block_tables"]
+            b, nb = tables_np.shape
+            tables = jnp.asarray(tables_np)
+
+            def gather(c):
+                g = c[:, tables]                     # [n, B, nb, bs, ...]
+                return g.reshape(c.shape[0], b, nb * bs, *c.shape[3:])
+
+            cache_rows = jax.tree.map(gather, self.cache)
+        else:
+            rows = jnp.asarray(bufs["rows"])
+            cache_rows = jax.tree.map(lambda c: c[:, rows], self.cache)
         if desc.width > 1:
             out, new_cache = stage.chunk_fn(
                 stage.params, cache_rows, x_in,
@@ -272,8 +339,31 @@ class _StageWorker:
         else:
             out, new_cache = stage.decode_fn(
                 stage.params, cache_rows, x_in, jnp.asarray(bufs["positions"]))
-        self.cache = jax.tree.map(lambda c, n: c.at[:, rows].set(n),
-                                  self.cache, new_cache)
+        if eng.paged:
+            if desc.width > 1:
+                # chunk iterations touch up to span-width slots per row:
+                # write back every real block (trash-padded entries dump
+                # into the trash block, blocks are uniquely owned)
+                def scatter(c, nv):
+                    blocks = nv.reshape(c.shape[0], b, nb, bs, *c.shape[3:])
+                    return c.at[:, tables].set(blocks)
+            else:
+                # pure decode dirties exactly one block per row — consume
+                # the slot mapping _prepare staged (physical id + view
+                # index, derived at one site); scatter [B] blocks, not
+                # [B, nb]
+                phys = jnp.asarray(bufs["slot_blocks"])
+                rows_j = jnp.arange(b)
+                blk_j = jnp.asarray(bufs["slot_index"])
+
+                def scatter(c, nv):
+                    blocks = nv.reshape(c.shape[0], b, nb, bs, *c.shape[3:])
+                    return c.at[:, phys].set(blocks[:, rows_j, blk_j])
+
+            self.cache = jax.tree.map(scatter, self.cache, new_cache)
+        else:
+            self.cache = jax.tree.map(lambda c, n: c.at[:, rows].set(n),
+                                      self.cache, new_cache)
         out = jax.block_until_ready(out)
         self.metrics.busy.append((t0, time.monotonic()))
         if stage.is_last:
@@ -284,18 +374,42 @@ class _StageWorker:
         return True
 
     def run_prefill(self, seq_batch: List[Sequence], x_or_tokens, pos0: int,
-                    rows: np.ndarray, last_idx: np.ndarray):
-        """Pipeline prefill pass for newly admitted sequences."""
+                    rows: np.ndarray, last_idx: np.ndarray,
+                    tables: Optional[np.ndarray] = None):
+        """Pipeline prefill pass for newly admitted sequences.  ``tables``
+        is the paged layout's [B, nb] block-table snapshot (None under
+        contiguous rows)."""
         stage = self.stage
+        eng = self.engine
         t0 = time.monotonic()
         out, cache = stage.prefill_fn(stage.params, x_or_tokens, pos0,
                                       jnp.asarray(last_idx))
-        s = cache_len = None
-        # write the prefilled cache into assigned rows, padding length
-        def write(c_all, c_new):
-            # c_all [n, rows, S_max, ...]; c_new [n, B, Sp, ...]
-            sp = c_new.shape[2]
-            return c_all.at[:, rows, :sp].set(c_new)
+        if eng.paged:
+            bs = eng.cfg.kv_block_size
+            pad = eng.kv_manager.pad_block
+
+            def write(c_all, c_new):
+                # c_new [n, B, Sp, ...] -> blocks of bs slots scattered via
+                # (table[p // bs], p %% bs); slots past a row's table (the
+                # ragged pad tail, or zeroed short-window slots) land in
+                # the trash block
+                n, b, sp = c_new.shape[:3]
+                spb = -(-sp // bs)
+                if spb * bs > sp:
+                    widths = [(0, 0), (0, 0), (0, spb * bs - sp)] + \
+                        [(0, 0)] * (c_new.ndim - 3)
+                    c_new = jnp.pad(c_new, widths)
+                blocks = c_new.reshape(n, b, spb, bs, *c_new.shape[3:])
+                st = np.full((b, spb), pad, np.int32)
+                k = min(spb, tables.shape[1])
+                st[:, :k] = tables[:, :k]
+                return c_all.at[:, jnp.asarray(st)].set(blocks)
+        else:
+            # write the prefilled cache into assigned rows, padding length
+            def write(c_all, c_new):
+                # c_all [n, rows, S_max, ...]; c_new [n, B, Sp, ...]
+                sp = c_new.shape[2]
+                return c_all.at[:, rows, :sp].set(c_new)
         self.cache = jax.tree.map(write, self.cache, cache)
         out = jax.block_until_ready(out)
         self.metrics.busy.append((t0, time.monotonic()))
@@ -315,12 +429,47 @@ class PPEngineBase:
         self.model = model
         self.cfg = cfg
         self.arch: ArchConfig = model.cfg
+        if cfg.kv_layout not in ("contiguous", "paged"):
+            raise ValueError(
+                f"unknown kv_layout {cfg.kv_layout!r}; choose from "
+                "('contiguous', 'paged')")
+        self.paged = cfg.kv_layout == "paged"
+        self.kv_manager = None
+        if self.paged:
+            if self.arch.family not in ("dense", "moe"):
+                raise NotImplementedError(
+                    "kv_layout='paged' requires a self-attention KV cache "
+                    "tree ([groups, rows, slots, ...] leaves); family "
+                    f"{self.arch.family!r} is not supported yet")
+            if cfg.kv_block_size < 1:
+                raise ValueError(f"kv_block_size must be >= 1, "
+                                 f"got {cfg.kv_block_size}")
+            from repro.runtime.paged_kv import BlockSpaceManager
+
+            window = self.arch.window or None
+            per_seq_slots = window or cfg.max_seq_len
+            n_blocks = cfg.kv_blocks
+            if n_blocks is None:
+                # equal budget to the contiguous rows: rows x the blocks
+                # ONE worst-case sequence needs (ceil per sequence — a
+                # floor over the pooled slots would under-provision when
+                # the block size does not divide the per-seq slot count)
+                n_blocks = (cfg.max_batch * cfg.pp_degree *
+                            -(-per_seq_slots // cfg.kv_block_size))
+            self.kv_manager = BlockSpaceManager(
+                n_blocks, cfg.kv_block_size, slot_cap=window)
+            if n_blocks < self.kv_manager.blocks_for(cfg.max_seq_len):
+                raise ValueError(
+                    f"kv_blocks={n_blocks} x block_size={cfg.kv_block_size}"
+                    " cannot hold even one max_seq_len sequence — "
+                    "preemption could never free enough")
         self.scheduler = Scheduler(max_batch=cfg.max_batch, pp_degree=cfg.pp_degree,
                                    max_seq_len=cfg.max_seq_len,
                                    token_budget=cfg.prefill_chunk_tokens,
                                    policy=cfg.scheduling_policy,
                                    hysteresis_tokens=cfg.phase_hysteresis_tokens,
-                                   tpot_slo_s=cfg.tpot_slo_s)
+                                   tpot_slo_s=cfg.tpot_slo_s,
+                                   kv_manager=self.kv_manager)
         if self.scheduler.chunked and self.arch.family not in ("dense", "moe"):
             raise NotImplementedError(
                 "span scheduling policies (chunked/disaggregated) require "
@@ -336,7 +485,8 @@ class PPEngineBase:
                 f"prefill_chunk_tokens budget {self.scheduler.token_budget} "
                 f"exceeds the sliding window {self.arch.window}; chunks "
                 "must fit the rolling KV cache")
-        self.seq_cache = SequenceCache(cfg.max_batch * cfg.pp_degree)
+        self.seq_cache = SequenceCache(cfg.max_batch * cfg.pp_degree,
+                                       kv=self.kv_manager)
         self.stages = [
             _StageWorker(s, self)
             for s in split_for_pp(model, params, cfg.pp_degree)
@@ -465,8 +615,10 @@ class PPEngineBase:
         # point (decode steps + prompt-completing chunks) take a token;
         # ``token_ids`` is already aligned to sample_indices()
         sampled_ids = [sched.seq_ids[i] for i in sched.sample_indices()]
+        epochs = ([sched.epochs[i] for i in sched.sample_indices()]
+                  if sched.epochs is not None else None)
         finished = self.scheduler.complete(
-            sched.iteration, sampled_ids, token_ids)
+            sched.iteration, sampled_ids, token_ids, epochs)
         for sid in finished:
             self.seq_cache.release(sid)
         # batch recomposition (finishes, chunk phases) needs no sampler
@@ -540,6 +692,17 @@ class PPEngineBase:
         self.seq_cache.release(sid)
         self._drop_sampler_state(sid)
 
+    def _reap_preempted(self):
+        """Drop the worker-side handles of sequences the scheduler just
+        preempted (paged layout).  Their blocks are already back on the
+        free list; in-flight iterations still referencing them stage
+        all-trash tables and their sampled tokens are discarded.  Sampler
+        penalty state is deliberately KEPT — the sequence resumes under
+        the same id and its recomputed tokens continue the same stream
+        (see docs/memory.md for the penalties caveat)."""
+        for sid in self.scheduler.drain_preempted():
+            self.seq_cache.drop_entry(sid)
+
     def _reap_aborted(self):
         """Release aborted sequences no longer referenced by any
         in-flight iteration."""
@@ -561,6 +724,7 @@ class PPEngineBase:
         seqs = [self.scheduler.seqs[s] for s in new]
         rows = np.array([self.seq_cache.admit(s.seq_id, len(s.prompt_ids)).cache_row
                          for s in seqs], np.int32)
+        tables = self.kv_manager.padded_tables(new) if self.paged else None
         max_len = max(s.length for s in seqs)
         toks = np.zeros((len(seqs), max_len), np.int32)
         for i, s in enumerate(seqs):
@@ -569,7 +733,7 @@ class PPEngineBase:
         last_idx = np.array([s.length - 1 for s in seqs], np.int32)
         x = jnp.asarray(toks)
         for w in self.stages:
-            x_np = w.run_prefill(seqs, x, 0, rows, last_idx)
+            x_np = w.run_prefill(seqs, x, 0, rows, last_idx, tables)
             if not w.stage.is_last:
                 x = jnp.asarray(x_np, jnp.bfloat16)  # inter-stage hidden
         # last stage output = logits at each sequence's final position;
@@ -578,7 +742,10 @@ class PPEngineBase:
         logits = np.asarray(x_np, np.float32)
         ids = self._pool_sample(sched.iteration, sched.slot, new, logits,
                                 [s.params for s in seqs])
-        finished = self.scheduler.complete(sched.iteration, new, ids)
+        # same-thread with the admitting schedule call: epochs are current
+        finished = self.scheduler.complete(
+            sched.iteration, new, ids,
+            [s.preemptions for s in seqs] if self.paged else None)
         for sid in finished:
             self.seq_cache.release(sid)
         for sid in new:
@@ -629,15 +796,19 @@ class PPEngineBase:
             self._await_iteration(d)
             inflight.remove(d)
         sched = self.scheduler.schedule(it)
+        self._reap_preempted()
         if sched is not None:
-            if sched.is_prefill:     # monolithic path (chunking off)
-                # drain in-flight iterations first: run_prefill writes
-                # stage caches on this thread and must not race the
-                # device threads' cache read-modify-writes
+            while sched is not None and sched.is_prefill:
+                # monolithic path (chunking off): drain in-flight
+                # iterations first — run_prefill writes stage caches on
+                # this thread and must not race the device threads' cache
+                # read-modify-writes.  Loop: the rebuild may admit again
+                # (capacity freed by finishes during the prefill).
                 while inflight:
                     self._await_iteration(inflight.pop(0))
                 self._admit_and_prefill(sched)
                 sched = self.scheduler.schedule(it)  # rebuilt after prefill
+                self._reap_preempted()
             if sched is not None:
                 # span policies admit KV rows lazily, on first chunk.  An
                 # admission may need the row of a just-aborted sequence
@@ -698,10 +869,12 @@ class PPEngineBase:
             n = len(seq.output_ids)
             if n == req.streamed and not finished:
                 continue
-            # output_ids holds plain ints (Sequence.append coerces); one
-            # slice-copy snapshots the cumulative stream for the caller
-            cum = seq.output_ids[:n]
-            new = cum[req.streamed:]
+            # delta-only emission: copy just the new tokens; the
+            # cumulative stream is a zero-copy TokenStream view bounded at
+            # n (output_ids only ever grows, so the view is a stable
+            # snapshot — no O(len) slice per increment)
+            new = seq.output_ids[req.streamed:n]
+            cum = TokenStream(seq.output_ids, n)
             req.streamed = n
             if not finished:
                 outs.append(RequestOutput(
@@ -831,7 +1004,13 @@ class PPEngineBase:
             "incremental_hits": sum(w.meta_cache.incremental_hits for w in self.stages),
             "meta_rebuilds": sum(w.meta_cache.rebuilds for w in self.stages),
             "policy": self.scheduler.policy.name,
+            "kv_layout": self.cfg.kv_layout,
         }
+        if self.paged:
+            out["kv_block_size"] = self.cfg.kv_block_size
+            out["kv_blocks_total"] = self.kv_manager.n_blocks
+            out["kv_blocks_free"] = self.kv_manager.free_blocks
+            out["kv_preemptions"] = self.scheduler.n_preemptions
         for k, v in self.scheduler.policy.metrics().items():
             out[f"policy_{k}"] = v
         return out

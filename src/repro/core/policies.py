@@ -54,7 +54,9 @@ def _span_output(s: "Scheduler", it: int, slot: int, batch_ids: List[int],
         positions=np.array([off for off, _ in spans], np.int32),
         tokens=np.array([t[0] for t in span_tokens], np.int32),
         is_prefill=False,          # no monolithic pipeline-blocking pass
-        prompt_lens=[s.seqs[q].prompt_len for q in batch_ids],
+        # span-relevant prefill length: the prompt, or — for a sequence
+        # resuming from preemption — its full recomputed token history
+        prompt_lens=[s.seqs[q].prefill_len for q in batch_ids],
         batch_recomposed=recomposed,
         spans=spans,
         span_tokens=span_tokens,
@@ -103,10 +105,11 @@ class MonolithicPolicy(SchedulingPolicy):
         slot = it % s.p
         members, recomposed = self._alive_members(s, slot)
         new_prefill: List[int] = []
-        while s.waiting and len(members) < s.max_batch:
+        while s.waiting and len(members) < s.max_batch and s.can_admit_next():
             seq = s.waiting.popleft()
             seq.mark_running()
-            seq.prefilled = len(seq.prompt_ids)   # monolithic: all at once
+            s.kv_admit(seq)                       # paged: reserve blocks
+            seq.prefilled = seq.prefill_len       # monolithic: all at once
             members.append(seq.seq_id)
             new_prefill.append(seq.seq_id)
             recomposed = True
@@ -159,13 +162,13 @@ class ChunkedPolicy(SchedulingPolicy):
                 needs_sample.append(True)
                 batch_ids.append(seq.seq_id)
                 return True
-            c = min(seq.prompt_len - seq.prefilled, budget_left)
+            c = min(seq.prefill_len - seq.prefilled, budget_left)
             if c <= 0:
                 return False          # deferred: stays a slot member
             off = seq.prefilled
             spans.append((off, c))
-            span_tokens.append(list(seq.prompt_ids[off:off + c]))
-            needs_sample.append(off + c >= seq.prompt_len)
+            span_tokens.append(seq.prefill_slice(off, c))
+            needs_sample.append(off + c >= seq.prefill_len)
             batch_ids.append(seq.seq_id)
             seq.prefilled = off + c   # chunk issued: next schedule continues
             budget_left -= c
@@ -176,9 +179,10 @@ class ChunkedPolicy(SchedulingPolicy):
             if not emit(s.seqs[sid]):
                 deferred = True
         while (s.waiting and len(members) < s.max_batch
-               and budget_left > 0):
+               and budget_left > 0 and s.can_admit_next()):
             seq = s.waiting.popleft()
             seq.mark_running()
+            s.kv_admit(seq)
             members.append(seq.seq_id)
             recomposed = True
             emit(seq)
@@ -231,6 +235,23 @@ class DisaggregatedPolicy(SchedulingPolicy):
                          Forced immediately when no decode work remains, so
                          waiters never starve.
 
+    TPOT-aware phase-length cap (``tpot_slo_s``): a prefill phase pauses
+    every in-flight decode for its whole duration, so its length directly
+    bounds the worst inter-token gap.  With an SLO set, the policy
+    estimates the wall cost per prefill token from the live
+    ``Scheduler.tpot_samples`` feed (median decode-iteration latency /
+    token budget) and caps the tokens one phase may issue at
+    ``PAUSE_FACTOR * tpot_slo_s`` worth of work: past the cap the phase
+    stops ADMITTING new waiters and switches to decode as soon as every
+    running prefill completes — the cap can end a phase early but never
+    strands a half-prefilled sequence (the PREFILL->DECODE entry condition
+    keeps requiring ``run_prefill == 0``).  The cap never drops below one
+    full prefill iteration, so every phase makes progress — and it only
+    binds while decode work is actually being paused (``n_decode > 0``):
+    a phase with nothing to pause resets its token count and admits
+    freely, which is also what keeps a capped phase whose members all
+    FINISH from blocking admission forever.
+
     On a static workload (everything admitted, empty queue) the phase
     switches at most once, PREFILL -> DECODE; the threshold cannot re-fire
     because pending prefill stays zero — the no-oscillation property
@@ -243,12 +264,20 @@ class DisaggregatedPolicy(SchedulingPolicy):
     PREFILL = "prefill"
     DECODE = "decode"
 
-    def __init__(self, hysteresis_tokens: Optional[int] = None):
+    PAUSE_FACTOR = 4.0     # max decode pause per prefill phase, in SLO units
+    MIN_TPOT_SAMPLES = 8   # live samples needed before the cap engages
+
+    def __init__(self, hysteresis_tokens: Optional[int] = None,
+                 tpot_slo_s: Optional[float] = None):
         self.hysteresis_tokens = hysteresis_tokens   # None -> token budget
+        self.tpot_slo_s = tpot_slo_s                 # None -> no phase cap
         self.phase = self.PREFILL
         self.phase_switches = 0
         self.prefill_iters = 0
         self.decode_iters = 0
+        self._phase_tokens = 0      # prefill tokens issued this phase
+        self._phase_cap = 0         # 0 = uncapped
+        self.capped_phases = 0
 
     def metrics(self) -> Dict[str, int]:
         return {
@@ -256,17 +285,38 @@ class DisaggregatedPolicy(SchedulingPolicy):
             "phase_switches": self.phase_switches,
             "prefill_iters": self.prefill_iters,
             "decode_iters": self.decode_iters,
+            "phase_token_cap": self._phase_cap,
+            "capped_phases": self.capped_phases,
         }
 
     # -- phase machine ------------------------------------------------------
     def _switch(self, phase: str):
         self.phase = phase
         self.phase_switches += 1
+        if phase == self.PREFILL:
+            self._phase_tokens = 0
+
+    def _refresh_cap(self, s: "Scheduler"):
+        """Recompute the per-phase token cap from the live TPOT feed."""
+        if self.tpot_slo_s is None or \
+                len(s.tpot_samples) < self.MIN_TPOT_SAMPLES:
+            self._phase_cap = 0
+            return
+        # one decode iteration ~ one sample gap; a prefill iteration does
+        # ~token_budget tokens of the same stage work, so the wall cost of
+        # a prefill token ~ median_gap / budget
+        s_per_token = float(np.median(list(s.tpot_samples))) / s.token_budget
+        cap = int((self.PAUSE_FACTOR * self.tpot_slo_s)
+                  / max(s_per_token, 1e-9))
+        self._phase_cap = max(cap, s.token_budget)   # >= one full iteration
+
+    def _capped(self) -> bool:
+        return bool(self._phase_cap) and self._phase_tokens >= self._phase_cap
 
     def _evaluate_phase(self, s: "Scheduler"):
         running = [q for q in s.seqs.values() if q.status == SeqStatus.RUNNING]
         n_decode = sum(1 for q in running if q.prefill_done)
-        run_prefill = sum(q.prompt_len - q.prefilled for q in running
+        run_prefill = sum(q.prefill_len - q.prefilled for q in running
                           if not q.prefill_done)
         slot_alive = [sum(1 for sid in m
                           if s.seqs[sid].status == SeqStatus.RUNNING)
@@ -276,14 +326,26 @@ class DisaggregatedPolicy(SchedulingPolicy):
         # prompts (FIFO admission) — a deep queue behind one free seat
         # must not fire the threshold, pause every decode slot, and then
         # flip straight back (phase thrash)
-        waiting_tokens = sum(q.prompt_len
+        waiting_tokens = sum(q.prefill_len
                              for q, _ in zip(s.waiting, range(space)))
 
         if self.phase == self.PREFILL:
+            self._refresh_cap(s)
+            # the cap bounds how long PAUSED DECODES wait; with no decode
+            # work in flight it has nothing to protect — reset it so the
+            # backlog keeps admitting (otherwise a phase whose members all
+            # FINISH while capped would block admission forever: no
+            # decodes to switch to, no admission to make progress with)
+            if self._capped() and n_decode == 0:
+                self._phase_tokens = 0
             # leave only when nothing is prefillable: running prefills done
             # AND no admission possible — so decode never strands a
-            # half-prefilled sequence
-            if run_prefill == 0 and waiting_tokens == 0 and n_decode > 0:
+            # half-prefilled sequence.  A capped phase treats its remaining
+            # backlog as non-admissible (it paused decodes long enough).
+            backlog = 0 if self._capped() else waiting_tokens
+            if run_prefill == 0 and backlog == 0 and n_decode > 0:
+                if self._capped() and waiting_tokens > 0:
+                    self.capped_phases += 1    # the cap ended this phase
                 self._switch(self.DECODE)
             return
         # DECODE phase: running sequences are all prefill_done (the entry
@@ -331,26 +393,31 @@ class DisaggregatedPolicy(SchedulingPolicy):
 
         def emit_chunk(seq: Sequence) -> bool:
             nonlocal budget_left
-            c = min(seq.prompt_len - seq.prefilled, budget_left)
+            c = min(seq.prefill_len - seq.prefilled, budget_left)
             if c <= 0:
                 return False
             off = seq.prefilled
             spans.append((off, c))
-            span_tokens.append(list(seq.prompt_ids[off:off + c]))
-            needs_sample.append(off + c >= seq.prompt_len)
+            span_tokens.append(seq.prefill_slice(off, c))
+            needs_sample.append(off + c >= seq.prefill_len)
             batch_ids.append(seq.seq_id)
             seq.prefilled = off + c
             budget_left -= c
+            self._phase_tokens += c
             return True
 
         for sid in members:
             seq = s.seqs[sid]
             if seq.prefill_done or not emit_chunk(seq):
                 deferred = True       # decode members pause during prefill
+        # a TPOT-capped phase stops admitting: in-progress prefills finish,
+        # the backlog waits for the next phase (decodes get their turn)
         while (s.waiting and len(members) < s.max_batch
-               and budget_left > 0):
+               and budget_left > 0 and not self._capped()
+               and s.can_admit_next()):
             seq = s.waiting.popleft()
             seq.mark_running()
+            s.kv_admit(seq)
             members.append(seq.seq_id)
             recomposed = True
             emit_chunk(seq)
@@ -469,10 +536,11 @@ def make_policy(name: Optional[str], *, token_budget: Optional[int] = None,
         raise ValueError(
             "phase_hysteresis_tokens / --hysteresis-tokens applies only "
             f"to the disaggregated policy (got policy {name!r})")
-    if tpot_slo_s is not None and name != "adaptive":
+    if tpot_slo_s is not None and name not in ("adaptive", "disaggregated"):
         raise ValueError(
             "tpot_slo_s / --tpot-slo-ms applies only to the adaptive "
-            f"policy (got policy {name!r})")
+            "(budget adaptation) and disaggregated (prefill-phase length "
+            f"cap) policies (got policy {name!r})")
     if name == "monolithic":
         if token_budget is not None:
             raise ValueError(
@@ -484,7 +552,8 @@ def make_policy(name: Optional[str], *, token_budget: Optional[int] = None,
             f"{name} policy requires a per-iteration token budget "
             "(set prefill_chunk_tokens / --chunk-tokens)")
     if name == "disaggregated":
-        return DisaggregatedPolicy(hysteresis_tokens=hysteresis_tokens)
+        return DisaggregatedPolicy(hysteresis_tokens=hysteresis_tokens,
+                                   tpot_slo_s=tpot_slo_s)
     if name == "adaptive":
         return AdaptivePolicy(tpot_slo_s=tpot_slo_s)
     return ChunkedPolicy()

@@ -18,9 +18,66 @@ from __future__ import annotations
 import dataclasses
 import enum
 import itertools
-from typing import List, Optional
+from collections.abc import Sequence as SequenceABC
+from typing import List, Optional, Union
 
 from repro.core.sequence import SeqStatus, Sequence
+
+
+class TokenStream(SequenceABC):
+    """Zero-copy snapshot of the first ``n`` tokens of a request's growable
+    output list.
+
+    Streaming used to hand every :class:`RequestOutput` a fresh cumulative
+    list — an O(len) slice per increment, quadratic per request end to
+    end.  A ``TokenStream`` shares the request's backing ``output_ids``
+    list instead (O(1) to construct); the bound ``n`` freezes the view at
+    emit time, so tokens appended later never leak into an older output.
+    It behaves like a read-only list (len / index / slice / iterate /
+    ``==`` against lists and tuples); call :meth:`to_list` for a real copy.
+    """
+
+    __slots__ = ("_backing", "_n")
+
+    def __init__(self, backing: List[int], n: int):
+        self._backing = backing
+        self._n = n
+
+    @property
+    def backing(self) -> List[int]:
+        return self._backing
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __getitem__(self, i: Union[int, slice]):
+        if isinstance(i, slice):
+            return self._backing[:self._n][i]
+        if i < -self._n or i >= self._n:
+            raise IndexError(i)
+        return self._backing[i if i >= 0 else self._n + i]
+
+    def __iter__(self):
+        return iter(self._backing[:self._n])
+
+    def to_list(self) -> List[int]:
+        return self._backing[:self._n]
+
+    def __add__(self, other) -> List[int]:
+        return self.to_list() + list(other)
+
+    def __radd__(self, other) -> List[int]:
+        return list(other) + self.to_list()
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, TokenStream):
+            other = other.to_list()
+        if isinstance(other, tuple):
+            other = list(other)
+        return self.to_list() == other
+
+    def __repr__(self) -> str:
+        return f"TokenStream({self.to_list()!r})"
 
 
 class RequestState(enum.Enum):
@@ -28,6 +85,8 @@ class RequestState(enum.Enum):
     RUNNING = 1     # scheduled at least once (prefilling or decoding)
     FINISHED = 2    # completed normally ("stop" / "length")
     ABORTED = 3     # cancelled via engine.abort(); resources reclaimed
+    PREEMPTED = 4   # evicted under KV memory pressure (paged layout);
+    #                 queued for resume-by-recompute, tokens so far retained
 
     @staticmethod
     def of(seq: Sequence) -> "RequestState":
@@ -36,6 +95,7 @@ class RequestState(enum.Enum):
             SeqStatus.RUNNING: RequestState.RUNNING,
             SeqStatus.FINISHED: RequestState.FINISHED,
             SeqStatus.ABORTED: RequestState.ABORTED,
+            SeqStatus.PREEMPTED: RequestState.PREEMPTED,
         }.get(seq.status, RequestState.RUNNING)
 
 
@@ -110,14 +170,17 @@ class RequestOutput:
     """One streaming increment for a request, returned by ``engine.step()``.
 
     ``new_token_ids`` are the tokens generated since the previous output
-    for this request; ``token_ids`` is the cumulative output so far.  The
-    final increment has ``finished=True`` and carries the request's
-    latency metrics; after it, the engine holds no per-request state (the
-    ``seq`` handle stays valid for the caller)."""
+    for this request (the delta — the only per-emit copy); ``token_ids``
+    is the cumulative output so far as a zero-copy :class:`TokenStream`
+    view over the request's growable output list (list-like; call
+    ``.to_list()`` for an owned copy).  The final increment has
+    ``finished=True`` and carries the request's latency metrics; after
+    it, the engine holds no per-request state (the ``seq`` handle stays
+    valid for the caller)."""
 
     request_id: int
     new_token_ids: List[int]
-    token_ids: List[int]
+    token_ids: Union[List[int], "TokenStream"]
     finished: bool
     state: RequestState
     finish_reason: Optional[str] = None

@@ -78,6 +78,18 @@ class SchedulingOutput:
     spans: Optional[List[Tuple[int, int]]] = None   # per-seq (offset, n_tokens)
     span_tokens: Optional[List[List[int]]] = None   # input ids for each span
     needs_sample: Optional[List[bool]] = None       # span reaches a sampling point
+    # ---- paged KV layout (None under contiguous rows) -----------------------
+    # [B, nb] int32 physical block table per batch row, padded with the
+    # trash block — snapshotted at schedule time by the scheduler (the
+    # placement this iteration's gather/scatter must see), staged verbatim
+    # by every stage's CPU executor (docs/memory.md)
+    block_tables: Optional[np.ndarray] = None
+    # per-seq preemption generation at schedule time: ``complete`` drops a
+    # sampled token whose sequence was preempted (and possibly already
+    # re-admitted) after this iteration was scheduled — the resumed
+    # prefill recomputes that token itself, and accepting the stale one
+    # would duplicate it
+    epochs: Optional[List[int]] = None
 
     @property
     def max_span(self) -> int:
@@ -136,7 +148,8 @@ class Scheduler:
                  policy: Optional[str] = None,
                  hysteresis_tokens: Optional[int] = None,
                  tpot_slo_s: Optional[float] = None,
-                 keep_finished: int = 1024):
+                 keep_finished: int = 1024,
+                 kv_manager=None):
         from repro.core.policies import make_policy
 
         self.max_batch = max_batch
@@ -149,6 +162,15 @@ class Scheduler:
         self.policy = make_policy(policy, token_budget=self.token_budget,
                                   hysteresis_tokens=hysteresis_tokens,
                                   tpot_slo_s=tpot_slo_s)
+        # paged KV layout (docs/memory.md): admission switches from seat
+        # counting to block-budget accounting against this
+        # BlockSpaceManager, and decode growth under memory pressure
+        # preempts the lowest-priority running sequence (None = the
+        # contiguous row layout, no block accounting)
+        self.kv = kv_manager
+        self.n_preemptions = 0
+        self._preempted_pending: List[int] = []   # for the engine to reap
+        self._preempt_hold: set = set()   # no re-admission within the call
         self.waiting: Deque[Sequence] = deque()
         self.seqs: Dict[int, Sequence] = {}
         self.slot_members: List[List[int]] = [[] for _ in range(pp_degree)]
@@ -188,15 +210,103 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.waiting) or any(self.slot_members)
 
+    # -- paged-KV admission / growth / preemption ----------------------------
+    def can_admit_next(self) -> bool:
+        """Block-budget admission gate for the waiting-queue head (FIFO:
+        a head that does not fit blocks the queue rather than being
+        skipped).  Always True under the contiguous layout."""
+        if self.kv is None or not self.waiting:
+            return True
+        head = self.waiting[0]
+        if head.seq_id in self._preempt_hold:
+            return False       # never re-admit within the evicting call
+        return self.kv.can_admit(head.length)
+
+    def kv_admit(self, seq: Sequence):
+        """Reserve KV blocks for an admitted sequence (covers its full
+        prefill target — prompt, or post-preemption token history)."""
+        if self.kv is not None:
+            self.kv.admit(seq.seq_id, seq.length)
+
+    def _lowest_priority_running(self) -> Optional[int]:
+        """Preemption victim: the latest-arrived RUNNING sequence that
+        still holds blocks (monotonic ids make arrival order = id order)."""
+        cands = [sid for sid, q in self.seqs.items()
+                 if q.status == SeqStatus.RUNNING and self.kv.has(sid)]
+        return max(cands) if cands else None
+
+    def _preempt(self, victim: int):
+        """Evict a RUNNING sequence under memory pressure: free its blocks,
+        mark it PREEMPTED and push it to the FRONT of the waiting queue so
+        it is re-admitted (as a fresh prefill of its full token history) as
+        soon as blocks free up.  In-flight iterations still referencing it
+        execute harmlessly — their sampled tokens are discarded by
+        ``complete`` (status != RUNNING) and recomputed bit-exactly after
+        the resume under greedy sampling."""
+        seq = self.seqs[victim]
+        seq.status = SeqStatus.PREEMPTED
+        seq.prefilled = 0
+        seq.prefill_target = seq.length
+        seq.preemptions += 1
+        self.kv.release(victim)
+        for m in self.slot_members:
+            if victim in m:
+                m.remove(victim)
+        self.waiting.appendleft(seq)
+        self._preempted_pending.append(victim)
+        self._preempt_hold.add(victim)
+        self.n_preemptions += 1
+
+    def _ensure_block_capacity(self, slot: int):
+        """Pre-schedule growth reservation: every RUNNING member of the
+        slot about to be scheduled gets blocks covering its current length
+        (a decode span writes KV at position ``length - 1``).  When the
+        free list cannot cover a growth, the lowest-priority RUNNING
+        sequence is preempted and the growth retried; the grower preempts
+        itself when it IS the lowest priority."""
+        members = sorted(sid for sid in self.slot_members[slot]
+                         if self.seqs[sid].status == SeqStatus.RUNNING)
+        for sid in members:
+            seq = self.seqs[sid]
+            if seq.status != SeqStatus.RUNNING:
+                continue       # evicted as a victim earlier in this loop
+            while not self.kv.ensure(sid, seq.length):
+                victim = self._lowest_priority_running()
+                if victim is None:
+                    break
+                self._preempt(victim)
+                if victim == sid:
+                    break
+
+    def drain_preempted(self) -> List[int]:
+        """Hand the engine the sequences preempted since the last drain
+        (it drops their worker-side handles; blocks are already free)."""
+        out, self._preempted_pending = self._preempted_pending, []
+        return out
+
     # -- iteration dispatch ---------------------------------------------------
     def schedule(self, iteration: Optional[int] = None) -> Optional[SchedulingOutput]:
         """Build the scheduling output for the next iteration of slot
         ``iteration %% p``, delegating admission + span construction to the
         active :class:`~repro.core.policies.SchedulingPolicy`."""
         it = self.iteration if iteration is None else iteration
+        if self.kv is not None:
+            self._preempt_hold.clear()
+            with self._mutex:      # vs complete() appending on device threads
+                self._ensure_block_capacity(it % self.p)
         out = self.policy.schedule(self, it)
         if out is not None:
             self.iteration = max(self.iteration, it + 1)
+            if self.kv is not None:
+                # snapshot the batch's physical placement NOW: the padded
+                # block tables every stage's CPU executor stages verbatim
+                # (tables only grow between iterations; growth for THIS
+                # iteration's members was ensured above) — plus each
+                # member's preemption generation, so completions of
+                # iterations scheduled before an eviction are dropped
+                out.block_tables = self.kv.padded_tables(out.seq_ids)
+                out.epochs = [self.seqs[sid].preemptions
+                              for sid in out.seq_ids]
         self._purge_retired()
         return out
 
@@ -229,31 +339,46 @@ class Scheduler:
                                              SeqStatus.ABORTED):
                 return None
             now = time.monotonic()
-            waiting = seq.status == SeqStatus.WAITING
+            # PREEMPTED sequences sit in the waiting queue awaiting resume
+            # — an abort must pull them out before a policy re-admits them
+            queued = seq.status in (SeqStatus.WAITING, SeqStatus.PREEMPTED)
             seq.status = SeqStatus.ABORTED
             seq.finish_t = now
             seq.finish_reason = "abort"
-            if waiting:
+            if queued:
                 try:
                     self.waiting.remove(seq)
                 except ValueError:
                     pass
                 self.seqs.pop(seq_id, None)
+                if self.kv is not None:
+                    self.kv.release(seq_id)
             else:
                 self._retired.add(seq_id)
             return seq
 
     # -- sampling-output ingestion ----------------------------------------
     def complete(self, iteration: int, seq_ids: List[int],
-                 token_ids: np.ndarray) -> List[int]:
-        """Append sampled tokens; returns finished seq ids."""
+                 token_ids: np.ndarray,
+                 epochs: Optional[List[int]] = None) -> List[int]:
+        """Append sampled tokens; returns finished seq ids.
+
+        ``epochs`` (paged layout) is each sequence's preemption
+        generation at the time this iteration was SCHEDULED: a token from
+        an iteration that predates the sequence's eviction is dropped
+        even if the sequence has already been re-admitted — the resumed
+        prefill recomputes that very token (bit-exact under greedy), so
+        accepting the stale one would duplicate it."""
         now = time.monotonic()
         done = []
+        epochs = epochs if epochs is not None else [None] * len(seq_ids)
         with self._mutex:
-            for sid, tok in zip(seq_ids, token_ids):
+            for sid, tok, epoch in zip(seq_ids, token_ids, epochs):
                 seq = self.seqs.get(sid)
                 if seq is None or seq.status != SeqStatus.RUNNING:
                     continue   # finished/aborted while this batch was in flight
+                if epoch is not None and seq.preemptions != epoch:
+                    continue   # scheduled before an eviction: stale token
                 if seq.last_token_t is not None:
                     self.tpot_samples.append(now - seq.last_token_t)
                 if seq.append(int(tok), now) or seq.length >= self.max_seq_len:
@@ -262,5 +387,10 @@ class Scheduler:
                     seq.finish_reason = seq.finish_reason or "length"
                     self.finished.append(seq)
                     self._retired.add(sid)
+                    if self.kv is not None:
+                        # block-budget accounting: a finished sequence's
+                        # blocks return to the pool at once (the engine's
+                        # own release is idempotent with this)
+                        self.kv.release(sid)
                     done.append(sid)
         return done

@@ -36,6 +36,13 @@ class Sequence:
     # written into the cache.  Advanced by the scheduler at chunk-issue
     # time; the monolithic path sets it to the full prompt on admission.
     prefilled: int = 0
+    # preemption-by-recompute (paged KV, docs/memory.md): a preempted
+    # sequence loses its KV blocks and is re-admitted as a fresh prefill
+    # of its FULL token history (prompt + outputs so far).  The target
+    # records how many leading tokens that resume-prefill must cover;
+    # None = an ordinary sequence, prefill covers the prompt only.
+    prefill_target: Optional[int] = None
+    preemptions: int = 0
 
     @property
     def length(self) -> int:
@@ -46,8 +53,25 @@ class Sequence:
         return len(self.prompt_ids)
 
     @property
+    def prefill_len(self) -> int:
+        """Tokens the prefill phase must cover before sampling resumes:
+        the prompt, or — after a preemption — the full token history at
+        eviction time (the last history token's logits produce the next
+        output, exactly the decode step the eviction interrupted)."""
+        if self.prefill_target is not None:
+            return self.prefill_target
+        return len(self.prompt_ids)
+
+    @property
     def prefill_done(self) -> bool:
-        return self.prefilled >= len(self.prompt_ids)
+        return self.prefilled >= self.prefill_len
+
+    def prefill_slice(self, off: int, n: int) -> List[int]:
+        """Input ids for the prefill span [off, off+n) over the prefill
+        token stream (prompt, extended by outputs after a preemption)."""
+        if off + n <= len(self.prompt_ids):
+            return list(self.prompt_ids[off:off + n])
+        return list((self.prompt_ids + self.output_ids)[off:off + n])
 
     @property
     def last_token(self) -> int:
@@ -88,16 +112,34 @@ class CachedSeqState:
     seq_id: int
     prompt_len: int
     out_len: int
-    cache_row: int            # row in the device KV cache this seq occupies
+    cache_row: int            # contiguous layout: KV-cache row; paged: -1
+    # paged layout: physical placement lives in the shared
+    # BlockSpaceManager (read live at staging time — tables grow between
+    # iterations); this handle only marks the sequence as admitted
 
 
 class SequenceCache:
-    """Maps seq_id -> cached state; assigns/releases KV-cache rows."""
+    """Maps seq_id -> cached state; assigns/releases KV placement.
 
-    def __init__(self, max_rows: int):
+    Two memory modes (``EngineConfig.kv_layout``, docs/memory.md):
+
+      contiguous  each sequence owns one dense ``[max_seq_len]`` cache row
+                  from a fixed pool — admission fails when rows run out.
+      paged       placement is a block table in the shared
+                  :class:`~repro.runtime.paged_kv.BlockSpaceManager`
+                  (``kv``); rows are not assigned, capacity is governed by
+                  block-budget admission + preemption in the scheduler.
+    """
+
+    def __init__(self, max_rows: int, kv=None):
         self.max_rows = max_rows
+        self.kv = kv                       # BlockSpaceManager in paged mode
         self._by_id: Dict[int, CachedSeqState] = {}
         self._free_rows = list(range(max_rows - 1, -1, -1))
+
+    @property
+    def paged(self) -> bool:
+        return self.kv is not None
 
     def lookup(self, seq_id: int) -> Optional[CachedSeqState]:
         return self._by_id.get(seq_id)
@@ -105,19 +147,37 @@ class SequenceCache:
     def admit(self, seq_id: int, prompt_len: int) -> CachedSeqState:
         st = self._by_id.get(seq_id)
         if st is None:
-            if not self._free_rows:
-                raise RuntimeError("KV cache rows exhausted")
-            st = CachedSeqState(seq_id, prompt_len, 0, self._free_rows.pop())
+            if self.paged:
+                # blocks were reserved by the scheduler's block-budget
+                # admission; this only registers the worker-side handle
+                st = CachedSeqState(seq_id, prompt_len, 0, -1)
+            else:
+                if not self._free_rows:
+                    raise RuntimeError("KV cache rows exhausted")
+                st = CachedSeqState(seq_id, prompt_len, 0,
+                                    self._free_rows.pop())
             self._by_id[seq_id] = st
         return st
 
     def release(self, seq_id: int):
         st = self._by_id.pop(seq_id, None)
-        if st is not None:
+        if st is None:
+            return
+        if self.paged:
+            self.kv.release(seq_id)        # idempotent (preempt frees first)
+        else:
             self._free_rows.append(st.cache_row)
 
+    def drop_entry(self, seq_id: int):
+        """Forget the worker-side handle WITHOUT touching placement —
+        preemption already freed the blocks scheduler-side, and the
+        sequence keeps its id (and sampler state) for the resume."""
+        self._by_id.pop(seq_id, None)
+
     def advance(self, seq_id: int):
-        self._by_id[seq_id].out_len += 1
+        st = self._by_id.get(seq_id)
+        if st is not None:     # may be gone: aborted/preempted mid-flight
+            st.out_len += 1
 
     @property
     def free_rows(self) -> int:

@@ -48,7 +48,7 @@ class BatchMetadata:
     """
 
     seq_ids: List[int]
-    rows: np.ndarray           # [B] cache-row assignment
+    rows: np.ndarray           # [B] cache-row assignment (contiguous layout)
     tokens: np.ndarray         # [B] first input token of each span
     positions: np.ndarray      # [B] span start positions
     iteration: int = -1
@@ -58,12 +58,29 @@ class BatchMetadata:
     pack_positions: Optional[np.ndarray] = None  # [W] int32
     pack_seq: Optional[np.ndarray] = None        # [W] batch column per token
     last_index: Optional[np.ndarray] = None      # [B] packed idx of last valid
+    # paged KV layout: [B, nb] physical block table (trash-padded) and —
+    # pure decode only — the slot mapping the dirty-block write-back
+    # uses, computed at ONE site (the engine's _prepare): the [B]
+    # physical block each row's single new slot lands in, plus the [B]
+    # index of that block within the row's table (= within the gathered
+    # view)
+    n_blocks: int = 0          # nb (0 = contiguous layout)
+    block_tables: Optional[np.ndarray] = None    # [B, nb] int32
+    slot_blocks: Optional[np.ndarray] = None     # [B] int32, physical
+    slot_index: Optional[np.ndarray] = None      # [B] int32, view-local
 
-    def advance_inplace(self, sched: SchedulingOutput, rows: np.ndarray):
-        """Incremental update: same sequence set, next iteration."""
+    def advance_inplace(self, sched: SchedulingOutput, rows: np.ndarray,
+                        slot_map=None):
+        """Incremental update: same sequence set, next iteration.  Under
+        the paged layout a table may have gained a block between n and
+        n+p, so the (same-shaped) table snapshot is refreshed in place."""
         np.copyto(self.tokens, sched.tokens)
         np.copyto(self.positions, sched.positions)
         np.copyto(self.rows, rows)
+        if self.block_tables is not None:
+            np.copyto(self.block_tables, sched.block_tables)
+            np.copyto(self.slot_blocks, slot_map[0])
+            np.copyto(self.slot_index, slot_map[1])
         self.iteration = sched.iteration
 
 
@@ -97,13 +114,19 @@ class BatchMetadataCache:
         self.incremental_hits = 0
         self.rebuilds = 0
 
-    def update(self, sched: SchedulingOutput, rows: np.ndarray) -> BatchMetadata:
+    def update(self, sched: SchedulingOutput, rows: np.ndarray,
+               slot_map=None) -> BatchMetadata:
+        """``slot_map`` (paged pure-decode): (slot_blocks, slot_index)
+        [B] vectors from the engine's _prepare — the single site that
+        derives the dirty-block mapping from positions."""
         slot = sched.iteration % self.p
         meta = self._meta[slot]
         width = sched.packed_width
+        nb = 0 if sched.block_tables is None else sched.block_tables.shape[1]
         if (meta is not None and meta.seq_ids == sched.seq_ids
-                and meta.width == 1 and width == 1):
-            meta.advance_inplace(sched, rows)
+                and meta.width == 1 and width == 1
+                and meta.n_blocks == nb):
+            meta.advance_inplace(sched, rows, slot_map)
             self.incremental_hits += 1
             return meta
         meta = BatchMetadata(
@@ -113,10 +136,20 @@ class BatchMetadataCache:
             positions=np.array(sched.positions, np.int32),
             iteration=sched.iteration,
             width=width,
+            n_blocks=nb,
         )
         if width > 1:
             (meta.pack_tokens, meta.pack_positions, meta.pack_seq,
              meta.last_index, meta.n_valid) = _build_packed(sched)
+        if nb:
+            b = len(sched.seq_ids)
+            meta.block_tables = np.array(sched.block_tables, np.int32)
+            if slot_map is not None:
+                meta.slot_blocks = np.array(slot_map[0], np.int32)
+                meta.slot_index = np.array(slot_map[1], np.int32)
+            else:
+                meta.slot_blocks = np.zeros(b, np.int32)
+                meta.slot_index = np.zeros(b, np.int32)
         self._meta[slot] = meta
         self.rebuilds += 1
         return meta
@@ -128,14 +161,18 @@ class VersionedStaging:
     Pure-decode iterations stage flat [B] arrays; chunked iterations are
     keyed additionally by the packed bucket width W and stage flat [W]
     token/position/seq-index vectors plus the [B] last-valid indices.
+    Under the paged KV layout the key gains the padded block-table width
+    nb, and the set stages the [B, nb] physical block table plus the [B]
+    dirty-block slot mapping the decode write-back scatters through.
     """
 
     def __init__(self):
-        self._bufs: Dict[Tuple[int, int, int], Dict[str, np.ndarray]] = {}
+        self._bufs: Dict[Tuple[int, int, int, int],
+                         Dict[str, np.ndarray]] = {}
 
-    def buffers(self, version: int, batch: int,
-                width: int = 1) -> Dict[str, np.ndarray]:
-        key = (version & 1, batch, width)
+    def buffers(self, version: int, batch: int, width: int = 1,
+                n_blocks: int = 0) -> Dict[str, np.ndarray]:
+        key = (version & 1, batch, width, n_blocks)
         if key not in self._bufs:
             bufs = {
                 "tokens": np.zeros(batch, np.int32),
@@ -148,6 +185,10 @@ class VersionedStaging:
                 bufs["pack_seq"] = np.zeros(width, np.int32)
                 bufs["last_index"] = np.zeros(batch, np.int32)
                 bufs["n_valid"] = np.zeros(1, np.int32)
+            if n_blocks:
+                bufs["block_tables"] = np.zeros((batch, n_blocks), np.int32)
+                bufs["slot_blocks"] = np.zeros(batch, np.int32)
+                bufs["slot_index"] = np.zeros(batch, np.int32)
             self._bufs[key] = bufs
         return self._bufs[key]
 
@@ -163,6 +204,7 @@ class ModelInputDescriptor:
     is_prefill: bool
     sched: SchedulingOutput
     width: int = 1             # packed bucket width (1 = flat decode)
+    n_blocks: int = 0          # padded block-table width (0 = contiguous)
 
 
 class TokenSafeExecutor:
@@ -222,14 +264,17 @@ class TokenSafeExecutor:
                 version = (self.ci + 1) & 1
             t0 = time.monotonic()
             width = sched.packed_width
-            bufs = self.staging.buffers(version, len(sched.seq_ids), width)
+            nb = (0 if sched.block_tables is None
+                  else sched.block_tables.shape[1])
+            bufs = self.staging.buffers(version, len(sched.seq_ids), width,
+                                        nb)
             self.prepare_fn(sched, bufs)
             self.prep_time += time.monotonic() - t0
             with self._cv:
                 self.ci += 1
                 self._input_q.append(ModelInputDescriptor(
                     sched.iteration, version, len(sched.seq_ids),
-                    sched.is_prefill, sched, width))
+                    sched.is_prefill, sched, width, nb))
                 self._cv.notify_all()
 
     def _device_loop(self):
@@ -245,7 +290,8 @@ class TokenSafeExecutor:
                 self._cv.notify_all()
             self.stall_time += time.monotonic() - t_wait
             t0 = time.monotonic()
-            bufs = self.staging.buffers(desc.version, desc.batch, desc.width)
+            bufs = self.staging.buffers(desc.version, desc.batch, desc.width,
+                                        desc.n_blocks)
             out = self.execute_fn(desc, bufs)
             self.exec_time += time.monotonic() - t0
             with self._cv:
@@ -281,13 +327,14 @@ class SynchronousExecutor:
 
     def run(self, sched: SchedulingOutput) -> Any:
         width = sched.packed_width
-        bufs = self.staging.buffers(0, len(sched.seq_ids), width)
+        nb = 0 if sched.block_tables is None else sched.block_tables.shape[1]
+        bufs = self.staging.buffers(0, len(sched.seq_ids), width, nb)
         t0 = time.monotonic()
         self.prepare_fn(sched, bufs)
         t1 = time.monotonic()
         out = self.execute_fn(
             ModelInputDescriptor(sched.iteration, 0, len(sched.seq_ids),
-                                 sched.is_prefill, sched, width), bufs)
+                                 sched.is_prefill, sched, width, nb), bufs)
         t2 = time.monotonic()
         self.prep_time += t1 - t0
         self.exec_time += t2 - t1

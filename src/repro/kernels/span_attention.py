@@ -35,7 +35,20 @@ Three variants, matching the pure-jnp oracles in
                           full-precision dots — both into one running
                           softmax.
 
-Layouts: q [T, H, hd]; caches [B, S, Kv, hd]; positions/seq_idx [T].
+Every variant also has a *paged* twin (``paged_span_attention`` etc.) for
+the engine's block-paged KV substrate (docs/memory.md): the physical
+cache is [n_blocks, bs, Kv, hd] and each sequence's slots live at
+``(block_table[p // bs], p %% bs)``.  The twins reuse the same kernel
+bodies — the only change is the BlockSpec index maps, which look the
+*physical* block id up in a scalar-prefetched flattened block table
+(``tbl[seq[t] * nb + i]``) instead of indexing a per-sequence row, with
+the kv tile pinned to the page size.  Padded table entries point at the
+trash block; its garbage is never read live thanks to the same position
+masks (and early-termination guards) the contiguous kernels use.
+
+Layouts: q [T, H, hd]; caches [B, S, Kv, hd] (contiguous) or
+[n_blocks, bs, Kv, hd] + block_tables [B, nb] (paged);
+positions/seq_idx [T].
 """
 from __future__ import annotations
 
@@ -554,5 +567,240 @@ def span_attention_rolling(q: jax.Array, k_cache: jax.Array,
         out_shape=jax.ShapeDtypeStruct((t, h, hd), q.dtype),
         interpret=interpret,
     )(seq_idx, positions, offsets, n_valid, q, k_cache, v_cache,
+      k_span, v_span, positions, seq_idx)
+    return out.reshape(t, h * hd)
+
+
+# ---------------------------------------------------------------------------
+# Paged twins: block-table scalar prefetch over [n_blocks, bs, Kv, hd]
+# ---------------------------------------------------------------------------
+# The kernel bodies are the contiguous ones verbatim — a thin wrapper
+# drops the extra block-table scalar ref (only the index maps consume it)
+# and the kv tile is the page block size, so logical block i of token t's
+# sequence is fetched from physical block ``tbl[seq[t] * nb + i]``.
+
+def _paged_kernel(seq_ref, pos_ref, tbl_ref, *rest, **kw):
+    _kernel(seq_ref, pos_ref, *rest, **kw)
+
+
+def _paged_quant_kernel(seq_ref, pos_ref, tbl_ref, *rest, **kw):
+    _quant_kernel(seq_ref, pos_ref, *rest, **kw)
+
+
+def _paged_rolling_kernel(seq_ref, pos_ref, off_ref, nv_ref, tbl_ref,
+                          *rest, **kw):
+    _rolling_kernel(seq_ref, pos_ref, off_ref, nv_ref, *rest, **kw)
+
+
+def _paged_rolling_quant_kernel(seq_ref, pos_ref, off_ref, nv_ref, tbl_ref,
+                                *rest, **kw):
+    _rolling_quant_kernel(seq_ref, pos_ref, off_ref, nv_ref, *rest, **kw)
+
+
+def paged_span_attention(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, positions: jax.Array,
+                         seq_idx: jax.Array, block_tables: jax.Array, *,
+                         window: int = 0, scale: float = 0.0,
+                         interpret: bool = True) -> jax.Array:
+    """q [T,H,hd]; caches [n_blocks,bs,Kv,hd]; block_tables [B,nb];
+    positions/seq_idx [T] -> [T, H*hd].  Matches
+    :func:`repro.models.attention.paged_span_attention`."""
+    t, h, hd = q.shape
+    bs, kv = k_cache.shape[1], k_cache.shape[2]
+    nb = block_tables.shape[1]
+    g = h // kv
+    scale = scale or hd ** -0.5
+
+    kernel = functools.partial(_paged_kernel, kv_block=bs, g=g, scale=scale,
+                               ns=nb, window=window)
+    tbl = block_tables.reshape(-1).astype(jnp.int32)
+    cache_spec = pl.BlockSpec(
+        (1, bs, kv, hd),
+        lambda t_, i, seq, pos, tb: (tb[seq[t_] * nb + i], 0, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,        # seq_idx, positions, block table
+        grid=(t, nb),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda t_, i, *_: (t_, 0, 0)),
+            cache_spec,
+            cache_spec,
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda t_, i, *_: (t_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kv, g), jnp.float32),
+            pltpu.VMEM((kv, g), jnp.float32),
+            pltpu.VMEM((kv, g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, h, hd), q.dtype),
+        interpret=interpret,
+    )(seq_idx, positions, tbl, q, k_cache, v_cache)
+    return out.reshape(t, h * hd)
+
+
+def paged_span_attention_quant(q: jax.Array, k8: jax.Array, ks: jax.Array,
+                               v8: jax.Array, vs: jax.Array,
+                               positions: jax.Array, seq_idx: jax.Array,
+                               block_tables: jax.Array, *,
+                               scale: float = 0.0,
+                               interpret: bool = True) -> jax.Array:
+    """q [T,H,hd] bf16; k8/v8 [n_blocks,bs,Kv,hd] int8; ks/vs
+    [n_blocks,bs,Kv]; block_tables [B,nb] -> [T, H*hd]."""
+    t, h, hd = q.shape
+    bs, kv = k8.shape[1], k8.shape[2]
+    nb = block_tables.shape[1]
+    g = h // kv
+    scale = scale or hd ** -0.5
+
+    kernel = functools.partial(_paged_quant_kernel, kv_block=bs, g=g,
+                               scale=scale, ns=nb)
+    tbl = block_tables.reshape(-1).astype(jnp.int32)
+    cache_spec = pl.BlockSpec(
+        (1, bs, kv, hd),
+        lambda t_, i, seq, pos, tb: (tb[seq[t_] * nb + i], 0, 0, 0))
+    scale_spec = pl.BlockSpec(
+        (1, bs, kv),
+        lambda t_, i, seq, pos, tb: (tb[seq[t_] * nb + i], 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(t, nb),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda t_, i, *_: (t_, 0, 0)),
+            cache_spec, scale_spec, cache_spec, scale_spec,
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda t_, i, *_: (t_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kv, g), jnp.float32),
+            pltpu.VMEM((kv, g), jnp.float32),
+            pltpu.VMEM((kv, g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, h, hd), q.dtype),
+        interpret=interpret,
+    )(seq_idx, positions, tbl, q, k8, ks, v8, vs)
+    return out.reshape(t, h * hd)
+
+
+def paged_span_attention_rolling(q: jax.Array, k_cache: jax.Array,
+                                 v_cache: jax.Array, k_span: jax.Array,
+                                 v_span: jax.Array, positions: jax.Array,
+                                 seq_idx: jax.Array, offsets: jax.Array,
+                                 n_valid: jax.Array,
+                                 block_tables: jax.Array, *, window: int,
+                                 scale: float = 0.0,
+                                 interpret: bool = True) -> jax.Array:
+    """Two-source windowed span attention over a block-paged rolling cache.
+
+    caches [n_blocks,bs,Kv,hd] (pre-scatter); block_tables [B,nb] with the
+    gathered view width ``nb * bs`` playing the stored-position modulus
+    (== W once a row's table covers the full window).  Matches
+    :func:`repro.models.attention.paged_span_attention_rolling`."""
+    t, h, hd = q.shape
+    bs, kv = k_cache.shape[1], k_cache.shape[2]
+    nb = block_tables.shape[1]
+    g = h // kv
+    scale = scale or hd ** -0.5
+
+    kernel = functools.partial(_paged_rolling_kernel, kv_block=bs, g=g,
+                               scale=scale, ns=nb, window=window,
+                               w_slots=nb * bs)
+    tbl = block_tables.reshape(-1).astype(jnp.int32)
+
+    def cache_idx(t_, i, seq, pos, off, nv, tb):
+        return (tb[seq[t_] * nb + jnp.minimum(i, nb - 1)], 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,    # seq_idx, positions, offsets, n_valid, tbl
+        grid=(t, nb + 1),         # nb cache blocks + 1 span block
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda t_, i, *_: (t_, 0, 0)),
+            pl.BlockSpec((1, bs, kv, hd), cache_idx),
+            pl.BlockSpec((1, bs, kv, hd), cache_idx),
+            pl.BlockSpec((t, kv, hd), lambda t_, i, *_: (0, 0, 0)),
+            pl.BlockSpec((t, kv, hd), lambda t_, i, *_: (0, 0, 0)),
+            pl.BlockSpec((t,), lambda t_, i, *_: (0,)),
+            pl.BlockSpec((t,), lambda t_, i, *_: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda t_, i, *_: (t_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kv, g), jnp.float32),
+            pltpu.VMEM((kv, g), jnp.float32),
+            pltpu.VMEM((kv, g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, h, hd), q.dtype),
+        interpret=interpret,
+    )(seq_idx, positions, offsets, n_valid, tbl, q, k_cache, v_cache,
+      k_span, v_span, positions, seq_idx)
+    return out.reshape(t, h * hd)
+
+
+def paged_span_attention_rolling_quant(q: jax.Array, k8: jax.Array,
+                                       ks: jax.Array, v8: jax.Array,
+                                       vs: jax.Array, k_span: jax.Array,
+                                       v_span: jax.Array,
+                                       positions: jax.Array,
+                                       seq_idx: jax.Array,
+                                       offsets: jax.Array,
+                                       n_valid: jax.Array,
+                                       block_tables: jax.Array, *,
+                                       window: int, scale: float = 0.0,
+                                       interpret: bool = True) -> jax.Array:
+    """The int8 + sliding-window + paged combination: s8 x s8 -> s32
+    old-cache dots with folded scales, bf16 intra-span source, block-table
+    scalar prefetch — one running softmax."""
+    t, h, hd = q.shape
+    bs, kv = k8.shape[1], k8.shape[2]
+    nb = block_tables.shape[1]
+    g = h // kv
+    scale = scale or hd ** -0.5
+
+    kernel = functools.partial(_paged_rolling_quant_kernel, kv_block=bs,
+                               g=g, scale=scale, ns=nb, window=window,
+                               w_slots=nb * bs)
+    tbl = block_tables.reshape(-1).astype(jnp.int32)
+
+    def cache_idx(t_, i, seq, pos, off, nv, tb):
+        return (tb[seq[t_] * nb + jnp.minimum(i, nb - 1)], 0, 0, 0)
+
+    def scale_idx(t_, i, seq, pos, off, nv, tb):
+        return (tb[seq[t_] * nb + jnp.minimum(i, nb - 1)], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(t, nb + 1),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda t_, i, *_: (t_, 0, 0)),
+            pl.BlockSpec((1, bs, kv, hd), cache_idx),
+            pl.BlockSpec((1, bs, kv), scale_idx),
+            pl.BlockSpec((1, bs, kv, hd), cache_idx),
+            pl.BlockSpec((1, bs, kv), scale_idx),
+            pl.BlockSpec((t, kv, hd), lambda t_, i, *_: (0, 0, 0)),
+            pl.BlockSpec((t, kv, hd), lambda t_, i, *_: (0, 0, 0)),
+            pl.BlockSpec((t,), lambda t_, i, *_: (0,)),
+            pl.BlockSpec((t,), lambda t_, i, *_: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda t_, i, *_: (t_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kv, g), jnp.float32),
+            pltpu.VMEM((kv, g), jnp.float32),
+            pltpu.VMEM((kv, g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, h, hd), q.dtype),
+        interpret=interpret,
+    )(seq_idx, positions, offsets, n_valid, tbl, q, k8, ks, v8, vs,
       k_span, v_span, positions, seq_idx)
     return out.reshape(t, h * hd)

@@ -34,6 +34,8 @@ POLICY_CHOICES = ["auto", "monolithic", "chunked", "disaggregated", "adaptive"]
 def _build_engine(arch: str, *, engine: str, pp: int, max_batch: int,
                   max_seq_len: int, n_samplers: int, chunk_tokens: int,
                   policy: str, hysteresis_tokens: int, tpot_slo_ms: float,
+                  kv_layout: str = "contiguous", block_size: int = 16,
+                  kv_blocks: int = 0,
                   keep_recent: int = 2048, seed: int = 0, prebuilt=None):
     """``prebuilt`` = (cfg, model, params) skips the model build — callers
     comparing several engine configs on one model (benchmarks) reuse it."""
@@ -50,6 +52,8 @@ def _build_engine(arch: str, *, engine: str, pp: int, max_batch: int,
                         scheduling_policy=policy,
                         phase_hysteresis_tokens=hysteresis_tokens or None,
                         tpot_slo_s=(tpot_slo_ms / 1e3) or None,
+                        kv_layout=kv_layout, kv_block_size=block_size,
+                        kv_blocks=kv_blocks or None,
                         keep_recent_requests=keep_recent, seed=seed)
     eng = (SiPipeEngine if engine == "sipipe" else NaivePPEngine)(
         model, params, ecfg)
@@ -59,14 +63,18 @@ def _build_engine(arch: str, *, engine: str, pp: int, max_batch: int,
 def run(arch: str, *, engine: str = "sipipe", pp: int = 2, requests: int = 8,
         max_batch: int = 4, max_new_tokens: int = 16, max_seq_len: int = 256,
         n_samplers: int = 2, chunk_tokens: int = 0, policy: str = "auto",
-        hysteresis_tokens: int = 0, tpot_slo_ms: float = 0.0, seed: int = 0,
+        hysteresis_tokens: int = 0, tpot_slo_ms: float = 0.0,
+        kv_layout: str = "contiguous", block_size: int = 16,
+        kv_blocks: int = 0, seed: int = 0,
         verbose: bool = True) -> dict:
     """Offline batch mode: enqueue every prompt, blocking run()."""
     cfg, eng = _build_engine(arch, engine=engine, pp=pp, max_batch=max_batch,
                              max_seq_len=max_seq_len, n_samplers=n_samplers,
                              chunk_tokens=chunk_tokens, policy=policy,
                              hysteresis_tokens=hysteresis_tokens,
-                             tpot_slo_ms=tpot_slo_ms, seed=seed)
+                             tpot_slo_ms=tpot_slo_ms, kv_layout=kv_layout,
+                             block_size=block_size, kv_blocks=kv_blocks,
+                             seed=seed)
     wl = ShareGPTLike(cfg.vocab_size, n_requests=requests, seed=seed,
                       prompt_len_median=12, max_prompt=max_seq_len // 4,
                       output_len_median=max_new_tokens,
@@ -90,6 +98,8 @@ def run_online(arch: str, *, engine: str = "sipipe", pp: int = 2,
                max_seq_len: int = 256, n_samplers: int = 2,
                chunk_tokens: int = 16, policy: str = "chunked",
                hysteresis_tokens: int = 0, tpot_slo_ms: float = 0.0,
+               kv_layout: str = "contiguous", block_size: int = 16,
+               kv_blocks: int = 0,
                arrival_rate: float = 4.0, abort_every: int = 0,
                seed: int = 0, verbose: bool = True, prebuilt=None) -> dict:
     """Online continuous serving: replay a Poisson arrival trace through
@@ -104,8 +114,9 @@ def run_online(arch: str, *, engine: str = "sipipe", pp: int = 2,
                              max_seq_len=max_seq_len, n_samplers=n_samplers,
                              chunk_tokens=chunk_tokens, policy=policy,
                              hysteresis_tokens=hysteresis_tokens,
-                             tpot_slo_ms=tpot_slo_ms, seed=seed,
-                             prebuilt=prebuilt)
+                             tpot_slo_ms=tpot_slo_ms, kv_layout=kv_layout,
+                             block_size=block_size, kv_blocks=kv_blocks,
+                             seed=seed, prebuilt=prebuilt)
     wl = ShareGPTLike(cfg.vocab_size, n_requests=requests, seed=seed,
                       prompt_len_median=12, max_prompt=max_seq_len // 4,
                       output_len_median=max_new_tokens,
@@ -190,7 +201,18 @@ def main():
                          "(0 = the token budget)")
     ap.add_argument("--tpot-slo-ms", type=float, default=0.0,
                     help="adaptive policy: target mean inter-token latency "
-                         "in ms (0 = self-calibrate from the first window)")
+                         "in ms (0 = self-calibrate from the first window); "
+                         "disaggregated policy: prefill-phase length cap")
+    ap.add_argument("--kv-layout", default="contiguous",
+                    choices=["contiguous", "paged"],
+                    help="KV memory substrate: dense per-sequence rows, or "
+                         "block-paged with budget admission + preemption "
+                         "(docs/memory.md)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged layout: KV slots per physical block")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="paged layout: total physical blocks (0 = the "
+                         "slot budget contiguous rows would reserve)")
     ap.add_argument("--online", action="store_true",
                     help="continuous serving: Poisson arrivals replayed "
                          "through the step-driven request API "
@@ -205,7 +227,8 @@ def main():
                   max_batch=args.max_batch, max_new_tokens=args.max_new_tokens,
                   n_samplers=args.samplers, chunk_tokens=args.chunk_tokens,
                   policy=args.policy, hysteresis_tokens=args.hysteresis_tokens,
-                  tpot_slo_ms=args.tpot_slo_ms)
+                  tpot_slo_ms=args.tpot_slo_ms, kv_layout=args.kv_layout,
+                  block_size=args.block_size, kv_blocks=args.kv_blocks)
     if args.online:
         run_online(args.arch, arrival_rate=args.arrival_rate,
                    abort_every=args.abort_every, **common)

@@ -423,6 +423,120 @@ def cross_attention(
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache (block tables) — oracles for the paged Pallas kernels
+# ---------------------------------------------------------------------------
+
+def gather_paged_cache(cache: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """[n_blocks, bs, ...] physical cache + [B, nb] block table ->
+    [B, nb * bs, ...] per-sequence contiguous view: logical slot p of row
+    i is ``cache[block_tables[i, p // bs], p %% bs]``.  Padded table
+    entries gather arbitrary blocks — always position-masked downstream."""
+    b, nb = block_tables.shape
+    g = cache[block_tables]                       # [B, nb, bs, ...]
+    return g.reshape(b, nb * cache.shape[1], *cache.shape[2:])
+
+
+def paged_span_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    block_tables: jax.Array,
+    positions: jax.Array,
+    seq_idx: jax.Array,
+    *,
+    window: int = 0,
+    kv_block: int = 512,
+) -> jax.Array:
+    """:func:`packed_span_attention` over a block-paged physical cache.
+
+    q [T, Hq, hd]; k_cache/v_cache [n_blocks, bs, Kv, hd];
+    block_tables [B, nb]; positions/seq_idx [T].  Reference semantics for
+    the paged Pallas kernel (``repro.kernels.span_attention.
+    paged_span_attention``): gather each row's table into the contiguous
+    view, then attend — on TPU the kernel performs the same gather
+    per-block in VMEM via scalar-prefetched BlockSpecs."""
+    k = gather_paged_cache(k_cache, block_tables)
+    v = gather_paged_cache(v_cache, block_tables)
+    return packed_span_attention(q, k, v, positions, seq_idx,
+                                 window=window, kv_block=kv_block)
+
+
+def paged_span_attention_quant(
+    q: jax.Array,
+    k8: jax.Array, ks: jax.Array,
+    v8: jax.Array, vs: jax.Array,
+    block_tables: jax.Array,
+    positions: jax.Array,
+    seq_idx: jax.Array,
+    *,
+    kv_block: int = 512,
+) -> jax.Array:
+    """:func:`packed_span_attention_quant` over a block-paged int8 cache.
+    k8/v8 [n_blocks, bs, Kv, hd] int8; ks/vs [n_blocks, bs, Kv]."""
+    return packed_span_attention_quant(
+        q,
+        gather_paged_cache(k8, block_tables),
+        gather_paged_cache(ks, block_tables),
+        gather_paged_cache(v8, block_tables),
+        gather_paged_cache(vs, block_tables),
+        positions, seq_idx, kv_block=kv_block)
+
+
+def paged_span_attention_rolling(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    k_span: jax.Array,
+    v_span: jax.Array,
+    block_tables: jax.Array,
+    positions: jax.Array,
+    seq_idx: jax.Array,
+    offsets: jax.Array,
+    n_valid: jax.Array,
+    *,
+    window: int,
+    kv_block: int = 512,
+) -> jax.Array:
+    """:func:`packed_span_attention_rolling` over a block-paged rolling
+    cache.  The gathered view has ``nb * bs`` slots; the rolling stored-
+    position reconstruction runs against that view width, which matches
+    the physical layout whenever either no row has wrapped (every offset
+    fits the view) or the tables cover the full window (view == W)."""
+    k = gather_paged_cache(k_cache, block_tables)
+    v = gather_paged_cache(v_cache, block_tables)
+    return packed_span_attention_rolling(
+        q, k, v, k_span, v_span, positions, seq_idx, offsets, n_valid,
+        window=window, kv_block=kv_block)
+
+
+def paged_span_attention_rolling_quant(
+    q: jax.Array,
+    k8: jax.Array, ks: jax.Array,
+    v8: jax.Array, vs: jax.Array,
+    k_span: jax.Array,
+    v_span: jax.Array,
+    block_tables: jax.Array,
+    positions: jax.Array,
+    seq_idx: jax.Array,
+    offsets: jax.Array,
+    n_valid: jax.Array,
+    *,
+    window: int,
+    kv_block: int = 512,
+) -> jax.Array:
+    """:func:`packed_span_attention_rolling_quant` over a block-paged int8
+    rolling cache."""
+    return packed_span_attention_rolling_quant(
+        q,
+        gather_paged_cache(k8, block_tables),
+        gather_paged_cache(ks, block_tables),
+        gather_paged_cache(v8, block_tables),
+        gather_paged_cache(vs, block_tables),
+        k_span, v_span, positions, seq_idx, offsets, n_valid,
+        window=window, kv_block=kv_block)
+
+
+# ---------------------------------------------------------------------------
 # int8 KV cache (§Perf C1 — beyond-paper)
 # ---------------------------------------------------------------------------
 

@@ -15,7 +15,8 @@ memory-pressure path and is covered by its own unit/property tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -66,6 +67,28 @@ class PagedAllocator:
         table.append(b)
         return b
 
+    def grow_to(self, seq_id: int, n_slots: int) -> bool:
+        """All-or-nothing growth: extend ``seq_id``'s table to cover
+        ``n_slots`` logical slots.  Returns False — allocating nothing —
+        when the sequence is unknown or the free list cannot cover the
+        whole growth (the scheduler's preempt-and-retry path)."""
+        table = self._tables.get(seq_id)
+        if table is None:
+            return False
+        grow = self.blocks_needed(n_slots) - len(table)
+        if grow <= 0:
+            return True
+        if grow > len(self._free):
+            return False
+        for _ in range(grow):
+            b = self._free.pop()
+            self._refs[b] = 1
+            table.append(b)
+        return True
+
+    def has(self, seq_id: int) -> bool:
+        return seq_id in self._tables
+
     def free(self, seq_id: int):
         for b in self._tables.pop(seq_id, []):
             self._refs[b] -= 1
@@ -106,6 +129,119 @@ class PagedAllocator:
         for b, r in self._refs.items():
             assert r == sum(1 for t in self._tables.values() for x in t if x == b)
         assert len(self._free) + len(set(owned)) == self.n_blocks
+
+
+class BlockSpaceManager:
+    """Block-budget accounting + placement shared by the scheduler and the
+    engine's worker side (the engine memory mode ``kv_layout="paged"``).
+
+    The scheduler consults it for admission (``can_admit``) and growth
+    (``ensure``: a decode step writing position ``length-1`` may need a new
+    block) and frees a preempted/finished sequence's blocks (``release``);
+    the engine's CPU executors snapshot per-batch padded block tables
+    (``padded_tables``) at schedule time for the device-side gather/scatter.
+    Mutations come from the driver thread (schedule/admission/preemption)
+    while stage CPU threads read tables concurrently — all entry points
+    take the manager lock.
+
+    ``slot_cap`` bounds the logical slots per sequence for sliding-window
+    models with rolling caches (slot = pos %% W): a sequence never needs
+    more than ``ceil(W / block_size)`` blocks regardless of length.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int,
+                 slot_cap: Optional[int] = None):
+        if slot_cap is not None and slot_cap % block_size:
+            raise ValueError(
+                f"block_size {block_size} must divide the sliding window "
+                f"{slot_cap}: rolling slot arithmetic needs whole blocks")
+        self.block_size = block_size
+        self.slot_cap = slot_cap
+        self.alloc = PagedAllocator(n_blocks, block_size)
+        self._lock = threading.Lock()
+
+    # -- budget arithmetic ---------------------------------------------------
+    @property
+    def n_blocks(self) -> int:
+        return self.alloc.n_blocks
+
+    @property
+    def pad_block(self) -> int:
+        """Physical id of the trash block: the engine allocates one block
+        past ``n_blocks`` that padded table entries point at — writes to it
+        are discarded, reads from it are position-masked."""
+        return self.alloc.n_blocks
+
+    @property
+    def free_blocks(self) -> int:
+        with self._lock:
+            return self.alloc.free_blocks
+
+    def slots_for(self, length: int) -> int:
+        """Logical KV slots a sequence of ``length`` tokens occupies."""
+        if self.slot_cap is not None:
+            return min(length, self.slot_cap)
+        return length
+
+    def blocks_for(self, length: int) -> int:
+        return max(1, self.alloc.blocks_needed(self.slots_for(length)))
+
+    # -- scheduler-side operations ------------------------------------------
+    def can_admit(self, length: int) -> bool:
+        with self._lock:
+            return self.blocks_for(length) <= self.alloc.free_blocks
+
+    def admit(self, seq_id: int, length: int):
+        with self._lock:
+            if self.alloc.has(seq_id):
+                return
+            self.alloc.allocate(seq_id, max(1, self.slots_for(length)))
+
+    def ensure(self, seq_id: int, length: int) -> bool:
+        """Grow ``seq_id``'s table to cover ``length`` tokens.  Returns
+        False (allocating nothing) when the free list cannot cover the
+        growth — the caller preempts and retries."""
+        with self._lock:
+            return self.alloc.grow_to(seq_id, self.slots_for(length))
+
+    def release(self, seq_id: int):
+        with self._lock:
+            self.alloc.free(seq_id)          # idempotent: no-op when absent
+
+    def has(self, seq_id: int) -> bool:
+        with self._lock:
+            return self.alloc.has(seq_id)
+
+    def table(self, seq_id: int) -> Optional[List[int]]:
+        with self._lock:
+            return (self.alloc.table(seq_id) if self.alloc.has(seq_id)
+                    else None)
+
+    # -- engine-side snapshot ------------------------------------------------
+    def padded_tables(self, seq_ids: Sequence[int]) -> np.ndarray:
+        """[B, nb] int32 block tables padded with the trash block.
+
+        ``nb`` is the batch's max table length rounded up to a power of two
+        (capped at the full-window block count) so the engine's gathered
+        cache view compiles one executable per (batch, nb) pair instead of
+        one per token-growth step.  A sequence with no table (released
+        between schedule and prepare — e.g. preempted with an iteration in
+        flight) pads to an all-trash row: its writes land in the trash
+        block and its sampled token is discarded by the scheduler."""
+        with self._lock:
+            tables = [self.alloc.table(sid) if self.alloc.has(sid) else []
+                      for sid in seq_ids]
+            nb = max(1, max((len(t) for t in tables), default=1))
+            nbp = 1
+            while nbp < nb:
+                nbp <<= 1
+            if self.slot_cap is not None:
+                nbp = min(nbp, self.slot_cap // self.block_size)
+            nbp = max(nbp, nb)
+            out = np.full((len(tables), nbp), self.pad_block, np.int32)
+            for i, t in enumerate(tables):
+                out[i, :len(t)] = t
+            return out
 
 
 def init_paged_cache(n_layers: int, n_blocks: int, block_size: int,

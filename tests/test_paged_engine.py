@@ -1,0 +1,347 @@
+"""Paged KV cache as the engine memory substrate (docs/memory.md):
+block-budget admission, block-table execution parity vs contiguous rows,
+and preemption-by-recompute under memory pressure."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import EngineConfig, SiPipeEngine
+from repro.core.request import RequestState, TokenStream
+from repro.core.sampling_params import SamplingParams
+from repro.core.scheduler import Scheduler
+from repro.core.sequence import SeqStatus, Sequence
+from repro.models import ModelOptions, ShardCtx, build_model
+from repro.runtime.paged_kv import BlockSpaceManager
+
+
+def _model(arch="stablelm-1.6b-smoke", kv_quant=False, key=0):
+    cfg = get_config(arch)
+    model = build_model(cfg, ShardCtx.single(), ModelOptions(kv_quant=kv_quant))
+    return cfg, model, model.init(jax.random.key(key))
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [list(map(int, rng.integers(2, cfg.vocab_size, size=n)))
+            for n in lens]
+
+
+def _run(model, params, prompts, n_new, *, policy="chunked", chunk=6,
+         layout="paged", pp=2, max_batch=2, max_seq_len=64, block_size=8,
+         kv_blocks=None, tpot_slo_s=None):
+    eng = SiPipeEngine(model, params, EngineConfig(
+        pp_degree=pp, max_batch=max_batch, max_seq_len=max_seq_len,
+        n_samplers=2, prefill_chunk_tokens=chunk, scheduling_policy=policy,
+        tpot_slo_s=tpot_slo_s, kv_layout=layout, kv_block_size=block_size,
+        kv_blocks=kv_blocks))
+    for p in prompts:
+        eng.add_request(p, SamplingParams(greedy=True, max_new_tokens=n_new))
+    done = sorted(eng.run(), key=lambda s: s.seq_id)
+    assert len(done) == len(prompts)
+    return [s.output_ids for s in done], eng.metrics()
+
+
+# ---------------------------------------------------------------------------
+# Config validation
+# ---------------------------------------------------------------------------
+
+def test_kv_layout_validation():
+    cfg, model, params = _model()
+    with pytest.raises(ValueError, match="kv_layout"):
+        SiPipeEngine(model, params, EngineConfig(kv_layout="virtual"))
+    # the pool must hold at least one max-length sequence, else
+    # preemption could never free enough to make progress
+    with pytest.raises(ValueError, match="max_seq_len"):
+        SiPipeEngine(model, params, EngineConfig(
+            kv_layout="paged", kv_block_size=8, kv_blocks=2,
+            max_seq_len=64))
+
+
+def test_default_pool_rounds_per_sequence_up():
+    """The equal-budget default sizes the pool by CEIL per sequence: a
+    max_seq_len that is not a block multiple must still construct and
+    hold one worst-case sequence per contiguous-row equivalent."""
+    cfg, model, params = _model()
+    eng = SiPipeEngine(model, params, EngineConfig(
+        pp_degree=1, max_batch=1, max_seq_len=60, kv_layout="paged",
+        kv_block_size=16))
+    assert eng.kv_manager.n_blocks == eng.kv_manager.blocks_for(60) == 4
+    eng.shutdown()
+
+
+def test_window_must_be_block_multiple():
+    cfg, model, params = _model("mixtral-8x7b-smoke")   # window 32
+    with pytest.raises(ValueError, match="divide the sliding window"):
+        SiPipeEngine(model, params, EngineConfig(
+            kv_layout="paged", kv_block_size=7, max_seq_len=64))
+
+
+def test_paged_rejects_families_without_slot_cache():
+    cfg = get_config("xlstm-1.3b-smoke")
+    model = build_model(cfg, ShardCtx.single())
+    params = model.init(jax.random.key(0))
+    with pytest.raises(NotImplementedError, match="paged"):
+        SiPipeEngine(model, params, EngineConfig(kv_layout="paged"))
+
+
+# ---------------------------------------------------------------------------
+# Fast parity pin: paged == contiguous, greedy-token-identical
+# ---------------------------------------------------------------------------
+
+def test_paged_token_identical_fast_pin():
+    cfg, model, params = _model()
+    prompts = _prompts(cfg, (13, 5))
+    ref, _ = _run(model, params, prompts, 5, policy="monolithic",
+                  chunk=None, layout="contiguous")
+    mono, m1 = _run(model, params, prompts, 5, policy="monolithic",
+                    chunk=None, layout="paged")
+    chk, m2 = _run(model, params, prompts, 5, policy="chunked", chunk=6,
+                   layout="paged")
+    assert mono == ref and chk == ref
+    assert m1["kv_layout"] == "paged" and m1["kv_preemptions"] == 0
+    # everything released at the end of the run
+    assert m1["kv_blocks_free"] == m1["kv_blocks_total"]
+    assert m2["kv_blocks_free"] == m2["kv_blocks_total"]
+
+
+# ---------------------------------------------------------------------------
+# Policy x config parity matrix (acceptance criterion; slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,kv_quant,key,lens", [
+    ("stablelm-1.6b-smoke", False, 0, (13, 5, 9)),   # dense, full cache
+    ("mixtral-8x7b-smoke", False, 3, (13, 13)),      # moe, sliding window
+    ("stablelm-1.6b-smoke", True, 4, (11, 5)),       # int8 KV cache
+])
+def test_paged_parity_matrix(arch, kv_quant, key, lens):
+    """Across every scheduling policy and cache config, the paged layout
+    must be greedy-token-identical to contiguous rows."""
+    cfg, model, params = _model(arch, kv_quant, key)
+    prompts = _prompts(cfg, lens, seed=key)
+    ref, _ = _run(model, params, prompts, 4, policy="monolithic",
+                  chunk=None, layout="contiguous")
+    for policy, chunk in (("monolithic", None), ("chunked", 6),
+                          ("disaggregated", 6), ("adaptive", 6)):
+        got, m = _run(model, params, prompts, 4, policy=policy, chunk=chunk,
+                      layout="paged")
+        assert got == ref, (arch, policy)
+        assert m["kv_blocks_free"] == m["kv_blocks_total"]
+
+
+# ---------------------------------------------------------------------------
+# Preemption-by-recompute under memory pressure (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,chunk", [("chunked", 8), ("monolithic", None)])
+def test_preempt_resume_bit_exact(policy, chunk):
+    """A block pool too small for every sequence's decode growth forces
+    preemption; survivors AND preempted sequences must finish with outputs
+    bit-exact vs an unpressured contiguous run."""
+    cfg, model, params = _model()
+    prompts = _prompts(cfg, (20, 16, 12, 9), seed=7)
+    ref, _ = _run(model, params, prompts, 12, policy=policy, chunk=chunk,
+                  layout="contiguous", max_seq_len=48)
+    got, m = _run(model, params, prompts, 12, policy=policy, chunk=chunk,
+                  layout="paged", block_size=4, kv_blocks=14, max_seq_len=48)
+    assert m["kv_preemptions"] > 0
+    assert got == ref
+    assert m["kv_blocks_free"] == m["kv_blocks_total"]
+
+
+def test_preempted_request_state_and_stream_continuity():
+    """The step-level view: a preempted request passes through the
+    PREEMPTED state, keeps its already-streamed tokens, and its resumed
+    stream extends them (prefix chain) to the same final output."""
+    cfg, model, params = _model()
+    prompts = _prompts(cfg, (20, 16, 12, 9), seed=7)
+    ref, _ = _run(model, params, prompts, 12, layout="contiguous",
+                  max_seq_len=48, chunk=8)
+    eng = SiPipeEngine(model, params, EngineConfig(
+        pp_degree=2, max_batch=2, max_seq_len=48, n_samplers=2,
+        prefill_chunk_tokens=8, scheduling_policy="chunked",
+        kv_layout="paged", kv_block_size=4, kv_blocks=14))
+    rids = [eng.add_request(p, SamplingParams(greedy=True,
+                                              max_new_tokens=12))
+            for p in prompts]
+    streamed = {r: [] for r in rids}
+    saw_preempted = False
+    for _ in range(10_000):
+        for out in eng.step():
+            assert isinstance(out.token_ids, TokenStream)
+            prev = streamed[out.request_id]
+            assert out.token_ids == prev + out.new_token_ids  # prefix chain
+            streamed[out.request_id] = out.token_ids.to_list()
+        saw_preempted = saw_preempted or any(
+            q.status == SeqStatus.PREEMPTED
+            for q in eng.scheduler.seqs.values())
+        if not eng.has_work:
+            break
+    eng.shutdown()
+    assert eng.scheduler.n_preemptions > 0
+    assert [streamed[r] for r in rids] == ref
+
+
+def test_preempted_in_queue_abort_releases_everything():
+    """Aborting a request while it sits preempted in the waiting queue
+    must free its blocks and never resurrect it."""
+    # pool of 6 blocks x 4 slots; a finished sequence peaks at 18 tokens
+    # (5 blocks), so any single sequence always fits — the engine-level
+    # invariant the EngineConfig validation enforces
+    s = Scheduler(max_batch=2, pp_degree=1, max_seq_len=24, token_budget=8,
+                  kv_manager=BlockSpaceManager(6, 4))
+    for i, pl in enumerate((8, 8, 8)):
+        s.add_request(Sequence(i, list(range(1, pl + 1)), SamplingParams(
+            greedy=True, max_new_tokens=10)))
+    for it in range(200):
+        o = s.schedule(it)
+        if s.n_preemptions:
+            break
+        if o is None:
+            continue
+        ids = [o.seq_ids[i] for i in o.sample_indices()]
+        s.complete(it, ids, np.full(len(ids), 7, np.int32))
+    assert s.n_preemptions > 0
+    victim = s.waiting[0]
+    assert victim.status == SeqStatus.PREEMPTED
+    assert s.abort(victim.seq_id) is victim
+    assert victim not in s.waiting
+    assert not s.kv.has(victim.seq_id)
+    # drive the rest to completion: the abort must not wedge the queue
+    for it in range(200, 600):
+        o = s.schedule(it)
+        if o is None:
+            if not s.has_work:
+                break
+            continue
+        ids = [o.seq_ids[i] for i in o.sample_indices()]
+        s.complete(it, ids, np.full(len(ids), 7, np.int32))
+    assert not s.has_work
+    assert s.kv.free_blocks == 6
+
+
+# ---------------------------------------------------------------------------
+# Scheduler-level block accounting
+# ---------------------------------------------------------------------------
+
+def test_admission_is_block_budget_not_seats():
+    """With seats to spare, admission still waits for blocks: the third
+    prompt only enters once a finished sequence frees its blocks."""
+    kv = BlockSpaceManager(5, 4)
+    s = Scheduler(max_batch=4, pp_degree=1, max_seq_len=16, token_budget=8,
+                  kv_manager=kv)
+    for i, pl in enumerate((8, 7, 6)):
+        s.add_request(Sequence(i, list(range(1, pl + 1)), SamplingParams(
+            greedy=True, max_new_tokens=2)))
+    blocked_admission = False
+    for it in range(400):
+        o = s.schedule(it)
+        n_running = sum(1 for q in s.seqs.values()
+                        if q.status == SeqStatus.RUNNING)
+        if (s.waiting and n_running and n_running < s.max_batch
+                and not kv.can_admit(s.waiting[0].length)):
+            # a SEAT is free but the BLOCKS are not: under the paged
+            # layout this (and only this) is what holds admission back
+            blocked_admission = True
+        if o is None:
+            if not s.has_work:
+                break
+            continue
+        ids = [o.seq_ids[i] for i in o.sample_indices()]
+        s.complete(it, ids, np.full(len(ids), 7, np.int32))
+    assert blocked_admission
+    assert not s.has_work and len(s.finished) == 3
+    assert kv.free_blocks == 5
+
+
+def test_preemption_evicts_lowest_priority_and_resumes_history():
+    """The victim is the latest-arrived RUNNING sequence; it re-enters at
+    the queue head with prefill_target covering its full token history."""
+    kv = BlockSpaceManager(5, 4)
+    s = Scheduler(max_batch=2, pp_degree=1, max_seq_len=20, token_budget=12,
+                  kv_manager=kv)
+    for i, pl in enumerate((8, 8)):
+        s.add_request(Sequence(i, list(range(1, pl + 1)), SamplingParams(
+            greedy=True, max_new_tokens=10)))
+    preempted_at = None
+    for it in range(400):
+        o = s.schedule(it)
+        if preempted_at is None and s.n_preemptions:
+            head = s.waiting[0]
+            assert head.seq_id == 1            # lowest priority = latest
+            assert head.prefill_target == head.length
+            assert head.prefilled == 0
+            preempted_at = it
+        if o is None:
+            if not s.has_work:
+                break
+            continue
+        ids = [o.seq_ids[i] for i in o.sample_indices()]
+        s.complete(it, ids, np.full(len(ids), 7, np.int32))
+    assert preempted_at is not None
+    assert not s.has_work and len(s.finished) == 2
+    assert kv.free_blocks == 5
+
+
+# ---------------------------------------------------------------------------
+# TSEM staging: block tables ride the incremental n/n+p fast path
+# ---------------------------------------------------------------------------
+
+def test_paged_decode_keeps_incremental_fast_path():
+    """Steady-state paged decode must still hit the TSEM incremental
+    metadata update (same seq set, width 1, same table width)."""
+    cfg, model, params = _model()
+    prompts = _prompts(cfg, (6, 5), seed=1)
+    eng = SiPipeEngine(model, params, EngineConfig(
+        pp_degree=2, max_batch=2, max_seq_len=64, n_samplers=2,
+        kv_layout="paged", kv_block_size=32))   # 1 block covers the run
+    for p in prompts:
+        eng.add_request(p, SamplingParams(greedy=True, max_new_tokens=10))
+    eng.run()
+    m = eng.metrics()
+    assert m["incremental_hits"] > 0
+    assert m["kv_layout"] == "paged"
+
+
+# ---------------------------------------------------------------------------
+# Streaming RequestOutput: delta-only emission (satellite regression)
+# ---------------------------------------------------------------------------
+
+def test_request_output_emits_deltas_not_copies():
+    """Emit cost shape: across a request's lifetime the copied elements
+    are exactly its tokens (sum of deltas == total, not quadratic), and
+    every cumulative view shares one backing list."""
+    cfg, model, params = _model()
+    eng = SiPipeEngine(model, params, EngineConfig(
+        pp_degree=2, max_batch=2, max_seq_len=64, n_samplers=2))
+    [rid] = [eng.add_request(_prompts(cfg, (6,), seed=2)[0],
+                             SamplingParams(greedy=True, max_new_tokens=12))]
+    outs = []
+    while eng.has_work:
+        outs.extend(o for o in eng.step() if o.request_id == rid)
+    eng.shutdown()
+    assert outs and outs[-1].finished
+    total = outs[-1].token_ids.to_list()
+    assert len(total) == 12
+    # delta-only: copied-token count across all emits == total tokens
+    assert sum(len(o.new_token_ids) for o in outs) == len(total)
+    backing = outs[0].token_ids.backing
+    for o in outs:
+        assert isinstance(o.token_ids, TokenStream)
+        assert o.token_ids.backing is backing      # zero-copy shared view
+    # views are stable snapshots: an early view must not see later tokens
+    assert outs[0].token_ids.to_list() == total[:len(outs[0].token_ids)]
+
+
+def test_token_stream_semantics():
+    backing = [1, 2, 3]
+    v = TokenStream(backing, 2)
+    assert list(v) == [1, 2] and len(v) == 2 and v[-1] == 2
+    assert v == [1, 2] and v != [1, 2, 3] and v == (1, 2)
+    assert v + [9] == [1, 2, 9] and [0] + v == [0, 1, 2]
+    assert v[0:1] == [1]
+    backing.append(4)           # growth never leaks into the bounded view
+    assert v.to_list() == [1, 2]
+    with pytest.raises(IndexError):
+        v[2]

@@ -106,3 +106,119 @@ def test_property_allocator_invariants(ops, n_blocks):
         except MemoryError:
             pass
         a.check_invariants()
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops=st.lists(st.tuples(st.sampled_from(["alloc", "free", "append"]),
+                              st.integers(0, 7)), min_size=1, max_size=60),
+       n_blocks=st.integers(4, 20),
+       bs=st.sampled_from([2, 4, 8]))
+def test_property_churn_never_double_assigns(ops, n_blocks, bs):
+    """Fragmentation churn: under interleaved allocate/free/append, no
+    physical block is ever owned by two live sequences (nor simultaneously
+    free and owned), and freeing returns exactly the owned blocks."""
+    a = PagedAllocator(n_blocks, bs)
+    lens = {}
+    next_id = 0
+    for op, arg in ops:
+        try:
+            if op == "alloc":
+                sid, next_id = next_id, next_id + 1
+                n = arg * bs // 2 + 1
+                a.allocate(sid, n)
+                lens[sid] = n
+            elif op == "free" and lens:
+                sid = sorted(lens)[arg % len(lens)]
+                a.free(sid)
+                del lens[sid]
+            elif op == "append" and lens:
+                sid = sorted(lens)[arg % len(lens)]
+                lens[sid] += 1
+                a.append_token(sid, lens[sid])
+        except MemoryError:
+            pass
+        # explicit double-assignment check (stronger than refcounts: no
+        # CoW here, so every block has exactly one owner)
+        owned = [b for t in a._tables.values() for b in t]
+        assert len(owned) == len(set(owned)), "block owned twice"
+        assert not set(owned) & set(a._free), "block free AND owned"
+        a.check_invariants()
+    for sid in list(lens):
+        a.free(sid)
+    assert a.free_blocks == n_blocks
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_forks=st.integers(1, 5), writes=st.integers(0, 8),
+       seed=st.integers(0, 99))
+def test_property_cow_forks_free_correctly(n_forks, writes, seed):
+    """Refcounted CoW: fork shares blocks, cow() diverges exactly the
+    written block, and freeing every fork (in any order) restores the
+    full free list."""
+    rng = np.random.default_rng(seed)
+    a = PagedAllocator(32, 4)
+    a.allocate(0, 12)            # 3 blocks
+    forks = list(range(1, n_forks + 1))
+    for f in forks:
+        a.fork(0, f)
+        assert a.table(f) == a.table(0)
+    for _ in range(writes):
+        f = int(rng.choice(forks))
+        blk = int(rng.integers(0, 3))
+        before = a.table(f)[blk]
+        phys, copied = a.cow(f, blk)
+        owners = sum(1 for t in a._tables.values() for x in t if x == before)
+        if copied is not None:          # was shared -> diverged
+            assert phys != before
+        else:                           # already exclusive -> kept
+            assert phys == before and owners == 1
+        a.check_invariants()
+    order = list(rng.permutation([0] + forks))
+    for sid in order:
+        a.free(sid)
+        a.check_invariants()
+    assert a.free_blocks == 32
+
+
+def test_block_space_manager_slots_cap_and_growth():
+    from repro.runtime.paged_kv import BlockSpaceManager
+
+    m = BlockSpaceManager(8, 4, slot_cap=16)      # window 16 -> max 4 blocks
+    assert m.blocks_for(3) == 1 and m.blocks_for(17) == 4
+    assert m.blocks_for(1000) == 4                # capped by the window
+    m.admit(0, 6)
+    assert len(m.table(0)) == 2
+    assert m.ensure(0, 9)                         # grow to 3 blocks
+    assert len(m.table(0)) == 3
+    assert m.ensure(0, 100) and len(m.table(0)) == 4   # capped
+    m.admit(1, 16)                                # takes the rest
+    assert m.free_blocks == 0
+    assert not m.ensure(2, 4)                     # unknown seq: no blocks
+    m.release(0)
+    m.release(0)                                  # idempotent
+    assert m.free_blocks == 4
+    # padded tables: trash-padded, power-of-two width capped at W/bs
+    t = m.padded_tables([1, 0])
+    assert t.shape == (2, 4)
+    assert list(t[0]) == m.table(1)
+    assert (t[1] == m.pad_block).all()            # released -> all trash
+
+
+def test_block_space_manager_ensure_all_or_nothing():
+    from repro.runtime.paged_kv import BlockSpaceManager
+
+    m = BlockSpaceManager(4, 2)
+    m.admit(0, 2)
+    m.admit(1, 6)                # 3 blocks -> pool full
+    assert m.free_blocks == 0
+    assert not m.ensure(0, 8)    # needs 3 more than it has; nothing taken
+    assert len(m.table(0)) == 1
+    m.release(1)
+    assert m.ensure(0, 8) and len(m.table(0)) == 4
+
+
+def test_block_size_must_divide_window():
+    from repro.runtime.paged_kv import BlockSpaceManager
+
+    with pytest.raises(ValueError, match="divide"):
+        BlockSpaceManager(8, 3, slot_cap=16)

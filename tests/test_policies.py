@@ -18,7 +18,7 @@ from repro.core.policies import (
 )
 from repro.core.sampling_params import SamplingParams
 from repro.core.scheduler import Scheduler
-from repro.core.sequence import Sequence
+from repro.core.sequence import SeqStatus, Sequence
 from repro.models import ModelOptions, ShardCtx, build_model
 
 
@@ -53,12 +53,15 @@ def test_policy_validation():
         make_policy("chunked", token_budget=8, hysteresis_tokens=4)
     with pytest.raises(ValueError, match="hysteresis"):
         make_policy("monolithic", hysteresis_tokens=4)
-    # likewise the TPOT SLO knob applies only to adaptive
+    # the TPOT SLO knob applies to adaptive (budget adaptation) and
+    # disaggregated (prefill-phase length cap) only
     with pytest.raises(ValueError, match="tpot_slo"):
         make_policy("chunked", token_budget=8, tpot_slo_s=0.01)
     with pytest.raises(ValueError, match="tpot_slo"):
-        make_policy("disaggregated", token_budget=8, tpot_slo_s=0.01)
+        make_policy("monolithic", tpot_slo_s=0.01)
     assert make_policy("adaptive", token_budget=8,
+                       tpot_slo_s=0.01).tpot_slo_s == 0.01
+    assert make_policy("disaggregated", token_budget=8,
                        tpot_slo_s=0.01).tpot_slo_s == 0.01
 
 
@@ -284,6 +287,109 @@ def test_property_no_oscillation_on_static_workload(n, max_batch, p, budget, see
         ids = [o.seq_ids[i] for i in o.sample_indices()]
         s.complete(it, ids, rng.integers(3, 50, len(ids)).astype(np.int32))
     assert s.policy.phase_switches <= (switches_when_static or 0) + 1
+
+
+# ---------------------------------------------------------------------------
+# TPOT-aware prefill-phase length cap (disaggregated; ROADMAP item)
+# ---------------------------------------------------------------------------
+
+def _mk_disagg_capped(plens, max_new, *, slo, budget=8, max_batch=2, p=2,
+                      tpot=0.01):
+    s = Scheduler(max_batch=max_batch, pp_degree=p, max_seq_len=512,
+                  token_budget=budget, policy="disaggregated",
+                  tpot_slo_s=slo)
+    s.tpot_samples.extend([tpot] * 16)      # live feed: one gap per iter
+    for i, pl in enumerate(plens):
+        s.add_request(Sequence(i, list(range(1, pl + 1)), SamplingParams(
+            greedy=True, max_new_tokens=max_new)))
+    return s
+
+
+def test_phase_cap_limits_admission_but_not_progress():
+    """A tight SLO caps the prefill phase at ~one iteration's worth of
+    tokens: once decodes are in flight (the cap only protects PAUSED
+    decodes — a cold phase with nothing to pause admits freely), the
+    backlog stops being admitted mid-phase even though seats are free,
+    and is spread over later phases with decode bursts between them —
+    everything still finishes."""
+    # est cost/token = median_tpot / budget = 0.01/8; cap = 4*slo/est
+    slo = 0.01 * 8 / 8            # cap ~ 4 * budget = 32 tokens/phase
+    # 8 seats over 2 slots: seats stay FREE while early admissions turn
+    # into decodes — only the cap can hold the rest of the queue back
+    s = _mk_disagg_capped([24, 24, 24, 24, 24, 24], 2, slo=slo, budget=8,
+                          max_batch=4)
+    capped_pol = s.policy
+    _drive(s)
+    assert len(s.finished) == 6                    # liveness under the cap
+    assert capped_pol.metrics()["phase_token_cap"] >= s.token_budget
+    assert capped_pol.metrics()["capped_phases"] >= 1
+    assert capped_pol.metrics()["phase_switches"] >= 3  # phases alternated
+
+
+def test_phase_cap_cannot_livelock_when_phase_members_all_finish():
+    """Regression: a capped phase whose admitted sequences ALL finish
+    (e.g. max_new_tokens=1: the prefill-completing sample is the last
+    token) leaves no decode work to switch to; the cap must reset rather
+    than block admission forever with the backlog stranded."""
+    s = _mk_disagg_capped([40] * 8, 1, slo=0.01, budget=8)
+    _drive(s)
+    assert not s.has_work
+    assert len(s.finished) == 8
+
+
+def test_phase_cap_never_below_one_iteration():
+    """Even an absurdly tight SLO leaves room for one full prefill
+    iteration per phase — the cap bounds pause length, not progress."""
+    s = _mk_disagg_capped([40, 40], 2, slo=1e-9, budget=8, tpot=0.5)
+    _drive(s)
+    assert s.policy._phase_cap == s.token_budget
+    assert len(s.finished) == 2
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 8),
+    max_batch=st.integers(1, 3),
+    p=st.integers(1, 3),
+    budget=st.integers(2, 16),
+    slo_scale=st.floats(0.1, 20.0),
+    seed=st.integers(0, 99),
+)
+def test_property_capped_phase_never_strands_half_prefill(
+        n, max_batch, p, budget, slo_scale, seed):
+    """The cap may end a prefill phase early, but entering decode still
+    requires every running prefill to be complete — no decode-phase
+    member is ever half-prefilled, and nothing starves."""
+    rng = np.random.default_rng(seed)
+    s = Scheduler(max_batch=max_batch, pp_degree=p, max_seq_len=512,
+                  token_budget=budget, policy="disaggregated",
+                  tpot_slo_s=0.01 * slo_scale)
+    s.tpot_samples.extend([0.01] * 16)
+    plens = {}
+    for i in range(n):
+        plens[i] = int(rng.integers(1, 50))
+        s.add_request(Sequence(i, list(range(1, plens[i] + 1)),
+                               SamplingParams(greedy=True,
+                                              max_new_tokens=int(
+                                                  rng.integers(1, 5)))))
+    for it in range(5000):
+        o = s.schedule(it)
+        if s.policy.phase == "decode":
+            for m in s.slot_members:
+                for sid in m:
+                    q = s.seqs.get(sid)
+                    if q is not None and q.status == SeqStatus.RUNNING:
+                        assert q.prefill_done   # never stranded
+        if o is None:
+            if not s.has_work:
+                break
+            continue
+        assert o.total_tokens <= s.token_budget
+        ids = [o.seq_ids[i] for i in o.sample_indices()]
+        s.complete(it, ids, rng.integers(3, 50, len(ids)).astype(np.int32))
+        s.tpot_samples.append(0.01)       # keep the live feed warm
+    assert not s.has_work                 # liveness: the cap cannot starve
+    assert len(s.finished) == n
 
 
 # ---------------------------------------------------------------------------

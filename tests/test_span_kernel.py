@@ -289,3 +289,178 @@ def test_span_attention_rolling_masks_bucket_padding():
         return np.asarray(o[:t_valid], np.float32)
 
     np.testing.assert_allclose(run(t_valid), run(t_pad), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Paged twins: block-table scalar prefetch (docs/memory.md)
+# ---------------------------------------------------------------------------
+
+def _paged_layout(rng, b, s, bs, n_extra=3):
+    """Random paged placement for b sequences of s logical slots each:
+    shuffled physical blocks + n_extra unused (garbage) blocks, tables
+    [B, nb] mapping logical block i -> physical block."""
+    nb = -(-s // bs)
+    n_phys = b * nb + n_extra
+    perm = rng.permutation(n_phys)[:b * nb].reshape(b, nb).astype(np.int32)
+    return perm, n_phys, nb
+
+
+def _scatter_blocks(contig, tables, bs, n_phys, rng):
+    """Build the physical [n_phys, bs, ...] cache whose gather under
+    ``tables`` reproduces ``contig`` [B, S, ...]; unused blocks hold
+    garbage that masking must never let through."""
+    b, s = contig.shape[:2]
+    nb = tables.shape[1]
+    pad = nb * bs - s
+    if pad:
+        widths = [(0, 0), (0, pad)] + [(0, 0)] * (contig.ndim - 2)
+        contig = np.pad(np.asarray(contig, np.float32), widths)
+    phys = rng.normal(size=(n_phys, bs) + contig.shape[2:]).astype(np.float32)
+    blocks = np.asarray(contig, np.float32).reshape(b, nb, bs, *contig.shape[2:])
+    for i in range(b):
+        for j in range(nb):
+            phys[tables[i, j]] = blocks[i, j]
+    return phys
+
+
+@pytest.mark.parametrize("window", [0, 24])
+def test_paged_span_attention_matches_oracle_and_contiguous(window):
+    """The paged kernel (block-table scalar prefetch) must match both the
+    paged jnp oracle and the contiguous kernel run on the gathered view —
+    with physical blocks shuffled and garbage in unused blocks."""
+    from repro.kernels.span_attention import paged_span_attention
+    b, s, h, kv, hd, t, bs = 3, 64, 4, 2, 32, 10, 16
+    rng = np.random.default_rng(11)
+    kc = np.asarray(_rand(rng, (b, s, kv, hd), jnp.float32))
+    vc = np.asarray(_rand(rng, (b, s, kv, hd), jnp.float32))
+    q = _rand(rng, (t, h, hd))
+    pos, seq = _packed_batch(rng, b, s, t)
+    tables, n_phys, nb = _paged_layout(rng, b, s, bs)
+    kp = jnp.asarray(_scatter_blocks(kc, tables, bs, n_phys, rng),
+                     jnp.bfloat16)
+    vp = jnp.asarray(_scatter_blocks(vc, tables, bs, n_phys, rng),
+                     jnp.bfloat16)
+    tb = jnp.asarray(tables)
+    o = paged_span_attention(q, kp, vp, pos, seq, tb, window=window,
+                             interpret=True)
+    o_oracle = A.paged_span_attention(q, kp, vp, tb, pos, seq,
+                                      window=window, kv_block=bs)
+    o_contig = span_attention(q, jnp.asarray(kc, jnp.bfloat16),
+                              jnp.asarray(vc, jnp.bfloat16), pos, seq,
+                              window=window, kv_block=bs, interpret=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_oracle, np.float32), **TOL)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_contig, np.float32), **TOL)
+
+
+def test_paged_span_attention_quant_matches_oracle():
+    from repro.kernels.span_attention import paged_span_attention_quant
+    b, s, h, kv, hd, t, bs = 2, 64, 4, 2, 32, 8, 16
+    rng = np.random.default_rng(12)
+    kc = _rand(rng, (b, s, kv, hd), jnp.float32)
+    vc = _rand(rng, (b, s, kv, hd), jnp.float32)
+    k8c, ksc = A.quantize_kv(kc)
+    v8c, vsc = A.quantize_kv(vc)
+    q = _rand(rng, (t, h, hd))
+    pos, seq = _packed_batch(rng, b, s, t)
+    tables, n_phys, nb = _paged_layout(rng, b, s, bs)
+    tb = jnp.asarray(tables)
+    k8 = jnp.asarray(_scatter_blocks(np.asarray(k8c, np.float32), tables,
+                                     bs, n_phys, rng), jnp.int8)
+    v8 = jnp.asarray(_scatter_blocks(np.asarray(v8c, np.float32), tables,
+                                     bs, n_phys, rng), jnp.int8)
+    ks = jnp.asarray(_scatter_blocks(np.asarray(ksc, np.float32), tables,
+                                     bs, n_phys, rng), jnp.bfloat16)
+    vs = jnp.asarray(_scatter_blocks(np.asarray(vsc, np.float32), tables,
+                                     bs, n_phys, rng), jnp.bfloat16)
+    o = paged_span_attention_quant(q, k8, ks, v8, vs, pos, seq, tb,
+                                   interpret=True)
+    o_oracle = A.paged_span_attention_quant(q, k8, ks, v8, vs, tb, pos,
+                                            seq, kv_block=bs)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_oracle, np.float32), **TOL)
+    # and against the contiguous quant kernel on the gathered view
+    o_contig = span_attention_quant(q, jnp.asarray(k8c), jnp.asarray(ksc),
+                                    jnp.asarray(v8c), jnp.asarray(vsc),
+                                    pos, seq, kv_block=bs, interpret=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_contig, np.float32), **TOL)
+
+
+def test_paged_span_attention_rolling_matches_oracle():
+    """Rolling (sliding-window) paged twin: full-window tables, wrapped
+    offsets — view width nb*bs == W so the stored-position modulus
+    matches the contiguous rolling kernel exactly."""
+    from repro.kernels.span_attention import paged_span_attention_rolling
+    b, w, kv, g, hd, t, bs = 2, 32, 2, 2, 32, 6, 8
+    h = kv * g
+    rng = np.random.default_rng(13)
+    kroll = np.asarray(_rand(rng, (b, w, kv, hd), jnp.float32))
+    vroll = np.asarray(_rand(rng, (b, w, kv, hd), jnp.float32))
+    q = _rand(rng, (t, h, hd))
+    ksp = _rand(rng, (t, kv, hd))
+    vsp = _rand(rng, (t, kv, hd))
+    offs = np.array([40, 40, 40, 7, 7, 7], np.int32)   # row0 wrapped, row1 not
+    pos = np.array([40, 41, 42, 7, 8, 9], np.int32)
+    seq = np.array([0, 0, 0, 1, 1, 1], np.int32)
+    tables, n_phys, nb = _paged_layout(rng, b, w, bs)
+    tb = jnp.asarray(tables)
+    kp = jnp.asarray(_scatter_blocks(kroll, tables, bs, n_phys, rng),
+                     jnp.bfloat16)
+    vp = jnp.asarray(_scatter_blocks(vroll, tables, bs, n_phys, rng),
+                     jnp.bfloat16)
+    args = (q, jnp.asarray(pos), jnp.asarray(seq), jnp.asarray(offs),
+            jnp.asarray([t], jnp.int32))
+    o = paged_span_attention_rolling(q, kp, vp, ksp, vsp, *args[1:], tb,
+                                     window=w, interpret=True)
+    o_oracle = A.paged_span_attention_rolling(
+        q, kp, vp, ksp, vsp, tb, args[1], args[2], args[3], args[4][0],
+        window=w, kv_block=bs)
+    o_contig = span_attention_rolling(
+        q, jnp.asarray(kroll, jnp.bfloat16), jnp.asarray(vroll, jnp.bfloat16),
+        ksp, vsp, args[1], args[2], args[3], args[4], window=w, kv_block=bs,
+        interpret=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_oracle, np.float32), **TOL)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_contig, np.float32), **TOL)
+
+
+def test_paged_span_attention_rolling_quant_matches_oracle():
+    from repro.kernels.span_attention import (
+        paged_span_attention_rolling_quant,
+    )
+    b, w, kv, g, hd, t, bs = 2, 16, 1, 2, 16, 4, 8
+    h = kv * g
+    rng = np.random.default_rng(14)
+    kroll = _rand(rng, (b, w, kv, hd), jnp.float32)
+    vroll = _rand(rng, (b, w, kv, hd), jnp.float32)
+    k8c, ksc = A.quantize_kv(kroll)
+    v8c, vsc = A.quantize_kv(vroll)
+    q = _rand(rng, (t, h, hd))
+    ksp = _rand(rng, (t, kv, hd))
+    vsp = _rand(rng, (t, kv, hd))
+    offs = np.array([20, 20, 5, 5], np.int32)
+    pos = np.array([20, 21, 5, 6], np.int32)
+    seq = np.array([0, 0, 1, 1], np.int32)
+    tables, n_phys, nb = _paged_layout(rng, b, w, bs)
+    tb = jnp.asarray(tables)
+    k8 = jnp.asarray(_scatter_blocks(np.asarray(k8c, np.float32), tables,
+                                     bs, n_phys, rng), jnp.int8)
+    v8 = jnp.asarray(_scatter_blocks(np.asarray(v8c, np.float32), tables,
+                                     bs, n_phys, rng), jnp.int8)
+    ks = jnp.asarray(_scatter_blocks(np.asarray(ksc, np.float32), tables,
+                                     bs, n_phys, rng), jnp.bfloat16)
+    vs = jnp.asarray(_scatter_blocks(np.asarray(vsc, np.float32), tables,
+                                     bs, n_phys, rng), jnp.bfloat16)
+    nv = jnp.asarray([t], jnp.int32)
+    o = paged_span_attention_rolling_quant(
+        q, k8, ks, v8, vs, ksp, vsp, jnp.asarray(pos), jnp.asarray(seq),
+        jnp.asarray(offs), nv, tb, window=w, interpret=True)
+    o_oracle = A.paged_span_attention_rolling_quant(
+        q, k8, ks, v8, vs, ksp, vsp, tb, jnp.asarray(pos),
+        jnp.asarray(seq), jnp.asarray(offs), nv[0], window=w, kv_block=bs)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_oracle, np.float32),
+                               rtol=5e-2, atol=5e-2)
