@@ -197,6 +197,8 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
                             max_new_tokens: int = 16,
                             t_token: float = 1e-4,
                             t_fixed: float = 5e-4,
+                            t_sample: float = 0.0,
+                            overlap_sampling: bool = True,
                             fwd_jitter: float = 0.0,
                             chunked: bool = True,
                             policy: Optional[str] = None,
@@ -223,6 +225,15 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
     shorthand for the first two.  All three run through the same span
     interface, so the timing model needs no per-policy branches beyond
     the monolithic ``is_prefill`` pipeline-blocking pass.
+
+    ``t_sample`` is the per-iteration host-side sampling cost, charged
+    only to iterations that SAMPLE (chunk-only spans carry none).  With
+    ``overlap_sampling=False`` it sits inside the last stage's critical
+    path (the engine's synchronous ``emit_logits`` dispatch); with the
+    overlap on (the engine's ``SamplingWorker``), the stage is freed at
+    forward-end and sampling latency gates only the same slot's next
+    iteration — the engine's per-slot autoregressive gate — so other
+    slots stream through the freed stage and the bubble closes.
     """
     from repro.core.sampling_params import SamplingParams
     from repro.core.scheduler import Scheduler
@@ -302,7 +313,12 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
             # iterations (a disaggregated prefill phase's body) stream
             # back-to-back — the next chunk only needs the previous one's
             # same-stage cache write, enforced by stage_free ordering.
-            slot_prev_end[out.slot] = dep
+            if t_sample and not overlap_sampling:
+                # synchronous dispatch: sampling occupies the last stage
+                stage_free[p - 1] = dep + t_sample
+                stage_busy[p - 1] += t_sample
+            slot_prev_end[out.slot] = dep + t_sample
+            dep += t_sample
         wall = max(wall, dep)
         ids = [out.seq_ids[i] for i in cols]
         sched.complete(it, ids, np.full(len(ids), 7, np.int32))
@@ -324,6 +340,8 @@ def simulate_disaggregated(*, p: int = 2, max_batch: int = 4,
                            max_new_tokens: int = 16,
                            t_token: float = 1e-4,
                            t_fixed: float = 5e-4,
+                           t_sample: float = 0.0,
+                           overlap_sampling: bool = True,
                            fwd_jitter: float = 0.0,
                            hysteresis_tokens: Optional[int] = None,
                            max_iters: int = 100_000) -> MixedWorkloadResult:
@@ -341,7 +359,8 @@ def simulate_disaggregated(*, p: int = 2, max_batch: int = 4,
     return simulate_mixed_workload(
         p=p, max_batch=max_batch, token_budget=token_budget,
         prompt_lens=prompt_lens, max_new_tokens=max_new_tokens,
-        t_token=t_token, t_fixed=t_fixed, fwd_jitter=fwd_jitter,
+        t_token=t_token, t_fixed=t_fixed, t_sample=t_sample,
+        overlap_sampling=overlap_sampling, fwd_jitter=fwd_jitter,
         policy="disaggregated",
         hysteresis_tokens=hysteresis_tokens, max_iters=max_iters)
 

@@ -424,6 +424,30 @@ def bench_chunked_prefill() -> None:
     emit("chunked_prefill/prefill_heavy_disagg_gain", 0.0,
          f"wall_gain_vs_chunked={d_vs_c:.2f}x vs_monolithic={d_vs_m:.2f}x")
 
+    # -- overlapped CPU sampling on the calibrated trace: t_sample is
+    # the MEASURED smoke-scale ColumnWiseSampler latency; the overlap
+    # frees the last stage at forward-end (engine SamplingWorker), so
+    # the sampling bubble closes for every slot but the sampled one
+    from repro.core.sampler import ColumnWiseSampler
+    from repro.core.sampling_params import SamplingParams
+
+    smp = ColumnWiseSampler(cfg.vocab_size, 4, max_len=512)
+    z = np.random.default_rng(0).normal(
+        size=(4, cfg.vocab_size)).astype(np.float32)
+    t_sample = _time(lambda: smp.sample(
+        z, SamplingParams(temperature=0.8, top_k=40)), reps=3)
+    ores = {}
+    for ov in (True, False):
+        ores[ov] = simulate_mixed_workload(
+            p=2, max_batch=4, token_budget=budget, prompt_lens=prompts,
+            max_new_tokens=24, policy="chunked", t_token=t_token,
+            t_fixed=t_fixed, t_sample=t_sample, overlap_sampling=ov,
+            fwd_jitter=JITTER)
+    ov_gain = ores[False].wall_s / ores[True].wall_s
+    emit("chunked_prefill/sampling_overlap", ores[True].wall_s * 1e6,
+         f"t_sample_us={t_sample * 1e6:.1f} sync_wall_us="
+         f"{ores[False].wall_s * 1e6:.0f} closed_bubble_gain={ov_gain:.3f}x")
+
     with open("BENCH_chunked.json", "w") as f:
         json.dump({
             "calibration": {"t_token_s": t_token, "t_fixed_s": t_fixed,
@@ -438,6 +462,14 @@ def bench_chunked_prefill() -> None:
                 "model_time_reduction": reduction,
             },
             "simulation": sim,
+            "sampling_overlap": {
+                "t_sample_s": t_sample,
+                "wall_s_overlap": ores[True].wall_s,
+                "wall_s_sync": ores[False].wall_s,
+                "closed_bubble_gain": ov_gain,
+                "bubble_fracs_overlap": ores[True].bubble_fracs,
+                "bubble_fracs_sync": ores[False].bubble_fracs,
+            },
             "prefill_heavy": {
                 "trace": heavy,
                 "token_budget": heavy_budget,
@@ -497,12 +529,38 @@ def bench_serving() -> None:
              f"tok_per_s={m['throughput_tok_s']:.2f} "
              f"ttft_p99_ms={m['ttft_p99_s'] * 1e3:.0f} "
              f"tpot_p99_ms={m['tpot_p99_s'] * 1e3:.0f}")
+
+    # -- overlapped CPU sampling on/off (docs/serving.md §Overlapped
+    # sampling): same trace, sampling either on the host worker (the
+    # logits hand-off frees the last stage at forward-end) or dispatched
+    # synchronously inside emit_logits.  Token streams are identical;
+    # the delta is the per-iteration sampling bubble the worker closes.
+    ov = {}
+    for overlap in (True, False):
+        m = run_online("stablelm-1.6b", policy="chunked", pp=2, requests=10,
+                       max_batch=2, max_new_tokens=8, chunk_tokens=16,
+                       arrival_rate=8.0, seed=0, verbose=False,
+                       overlap_sampling=overlap, prebuilt=prebuilt)
+        ov["overlap_on" if overlap else "overlap_off"] = {
+            "wall_s": m["wall_s"],
+            "throughput_tok_s": m["throughput_tok_s"],
+            "tpot_p50_s": m["tpot_p50_s"],
+            "tpot_p99_s": m["tpot_p99_s"],
+        }
+    gain = (ov["overlap_off"]["wall_s"] / ov["overlap_on"]["wall_s"]
+            if ov["overlap_on"]["wall_s"] else 0.0)
+    ov["wall_gain"] = gain
+    emit("serving/overlap_sampling", ov["overlap_on"]["wall_s"] * 1e6,
+         f"wall_gain_vs_sync={gain:.3f}x "
+         f"tok_per_s={ov['overlap_on']['throughput_tok_s']:.2f}")
+
     with open("BENCH_serving.json", "w") as f:
         json.dump({
             "workload": {"arch": "stablelm-1.6b-smoke", "requests": 10,
                          "arrival_rate_rps": 8.0, "max_new_tokens": 8,
                          "token_budget": 16, "pp": 2, "max_batch": 2},
             "policies": results,
+            "overlap_sampling": ov,
         }, f, indent=2)
     emit("serving/bench_json", 0.0, "wrote BENCH_serving.json")
 
@@ -512,16 +570,24 @@ def bench_serving() -> None:
 # ---------------------------------------------------------------------------
 
 def bench_paged() -> None:
-    """Paged-vs-contiguous capacity on the REAL engine at EQUAL cache
-    budget (docs/memory.md), recorded in BENCH_paged.json.
+    """Paged-vs-contiguous on the REAL engine, recorded in
+    BENCH_paged.json.  Two stories:
 
-    Both engines get the same number of physical KV slots.  Contiguous
-    rows reserve a worst-case ``max_seq_len`` row per sequence, so
-    concurrency is hard-capped at the row count; the paged layout holds
-    sequences at their ACTUAL lengths in blocks, admits by block budget,
-    and preempts (recompute) under decode growth — on a mixed-length
-    trace it runs strictly more sequences concurrently and finishes the
-    batch faster, with greedy outputs bit-identical."""
+    CAPACITY (equal cache budget): contiguous rows reserve a worst-case
+    ``max_seq_len`` row per sequence, hard-capping concurrency at the
+    row count; the paged layout holds sequences at their ACTUAL lengths
+    in blocks, admits by block budget, and preempts (recompute) under
+    decode growth — strictly more concurrency on a mixed-length trace,
+    greedy outputs bit-identical.
+
+    SPEED (equal composition): same max_batch, ample blocks — isolates
+    what the paged-native hot path (in-kernel block gather + dirty-block
+    write-back + bucket-capped table widths) costs per token against
+    contiguous rows.  Reported as STEADY-STATE tok/s over the steps that
+    paid no XLA compile (per-step ``engine.compile_stats()`` window), so
+    the paged run's extra (batch, nb)-shape warmup compiles don't
+    pollute the per-token comparison.  The kv_layout='auto' default rides on this ratio
+    staying near 1x."""
     import json
 
     import jax
@@ -560,76 +626,133 @@ def bench_paged() -> None:
             rid = eng.add_request(p, SamplingParams(greedy=True,
                                                     max_new_tokens=N_NEW))
             handles[rid] = eng.requests[rid].seq
-        outs, max_conc = {}, 0
+        outs, max_conc, steps = {}, 0, []
         t0 = time.perf_counter()
         while eng.has_work:
+            s0 = time.perf_counter()
+            toks = 0
             for out in eng.step():
+                toks += len(out.new_token_ids)
                 if out.finished:
                     outs[out.request_id] = out.token_ids.to_list()
+            steps.append((time.perf_counter() - s0, toks,
+                          eng.compile_stats()["jit_executables"]))
             max_conc = max(max_conc, sum(
                 1 for q in eng.scheduler.seqs.values()
                 if q.status == SeqStatus.RUNNING))
         wall = time.perf_counter() - t0
         eng.shutdown()
         m = eng.metrics()
-        victims = [rid for rid, q in handles.items() if q.preemptions]
-        return outs, max_conc, wall, m, victims
+        # steady-state window: every step that paid NO compile (the
+        # per-step jit-executable count is flat across it) — drain-end
+        # batch-shrink compiles are excluded too, not just warmup
+        final_c = steps[-1][2] if steps else 0
+        tail = [s for i, s in enumerate(steps)
+                if i and s[2] == steps[i - 1][2]]
+        st_wall = sum(d for d, _, _ in tail)
+        st_toks = sum(t for _, t, _ in tail)
+        return {
+            "outs": outs, "max_conc": max_conc, "wall": wall, "m": m,
+            "victims": [rid for rid, q in handles.items() if q.preemptions],
+            "compiles": final_c, "steady_steps": len(tail),
+            "steady_tok_s": st_toks / st_wall if st_wall else 0.0,
+        }
 
-    # equal budget: contiguous spends it as ROWS worst-case rows; paged
-    # as SLOT_BUDGET // BS blocks.  The unpressured reference (same
-    # max_batch, abundant blocks)
-    # isolates what the pressure dynamics — block-deferred admission +
-    # preemption — do to tokens: nothing.  (Greedy outputs across
-    # DIFFERENT concurrency are not comparable even between two
-    # contiguous runs: chunk composition shifts bf16 rounding enough to
-    # flip near-tie argmaxes, so the cross-layout parity contract is
+    # -- capacity story: equal budget — contiguous spends it as ROWS
+    # worst-case rows; paged as SLOT_BUDGET // BS blocks.  The
+    # unpressured reference (same max_batch, abundant blocks) isolates
+    # what the pressure dynamics — block-deferred admission + preemption
+    # — do to tokens: nothing.  (Greedy outputs across DIFFERENT
+    # concurrency are not comparable even between two contiguous runs:
+    # chunk composition shifts bf16 rounding enough to flip near-tie
+    # argmaxes, so the cross-layout parity contract is
     # matched-composition — the policy x config matrix in
     # tests/test_paged_engine.py.)
-    out_c, conc_c, wall_c, m_c, _ = drive("contiguous", max_batch=1)
-    out_p, conc_p, wall_p, m_p, victims = drive(
-        "paged", max_batch=2, kv_blocks=SLOT_BUDGET // BS)
-    out_r, _, _, m_r, _ = drive("paged", max_batch=2,
-                                kv_blocks=4 * SLOT_BUDGET // BS)
-    assert m_r["kv_preemptions"] == 0          # reference is unpressured
-    match = out_p == out_r
-    victims_match = all(out_p[r] == out_r[r] for r in victims)
-    ratio = conc_p / max(conc_c, 1)
-    emit("paged/contiguous_max_concurrent", wall_c * 1e6,
-         f"max_concurrent={conc_c} rows={ROWS}")
-    emit("paged/paged_max_concurrent", wall_p * 1e6,
-         f"max_concurrent={conc_p} ratio={ratio:.2f}x "
-         f"preemptions={m_p['kv_preemptions']} outputs_match={match}")
+    cap_c = drive("contiguous", max_batch=1)
+    cap_p = drive("paged", max_batch=2, kv_blocks=SLOT_BUDGET // BS)
+    ref_p = drive("paged", max_batch=2, kv_blocks=4 * SLOT_BUDGET // BS)
+    assert ref_p["m"]["kv_preemptions"] == 0   # reference is unpressured
+    match = cap_p["outs"] == ref_p["outs"]
+    victims = cap_p["victims"]
+    victims_match = all(cap_p["outs"][r] == ref_p["outs"][r]
+                        for r in victims)
+    ratio = cap_p["max_conc"] / max(cap_c["max_conc"], 1)
+    emit("paged/contiguous_max_concurrent", cap_c["wall"] * 1e6,
+         f"max_concurrent={cap_c['max_conc']} rows={ROWS}")
+    emit("paged/paged_max_concurrent", cap_p["wall"] * 1e6,
+         f"max_concurrent={cap_p['max_conc']} ratio={ratio:.2f}x "
+         f"preemptions={cap_p['m']['kv_preemptions']} "
+         f"outputs_match={match}")
+
+    # -- speed story: equal composition (contiguous max_batch=2 vs the
+    # ample-block paged run) — matched composition also means the token
+    # streams must be bit-identical across layouts
+    spd_c = drive("contiguous", max_batch=2)
+    layouts_match = spd_c["outs"] == ref_p["outs"]
+    steady_ratio = (spd_c["steady_tok_s"] / ref_p["steady_tok_s"]
+                    if ref_p["steady_tok_s"] else float("inf"))
+    emit("paged/steady_state_contiguous", 1e6 / max(
+        spd_c["steady_tok_s"], 1e-9),
+         f"tok_per_s={spd_c['steady_tok_s']:.2f} "
+         f"compiles={spd_c['compiles']}")
+    emit("paged/steady_state_paged", 1e6 / max(ref_p["steady_tok_s"], 1e-9),
+         f"tok_per_s={ref_p['steady_tok_s']:.2f} "
+         f"compiles={ref_p['compiles']} "
+         f"wall_ratio_vs_contiguous={steady_ratio:.2f}x "
+         f"table_widths={ref_p['m'].get('kv_table_widths')}")
+
     with open("BENCH_paged.json", "w") as f:
         json.dump({
             "workload": {"arch": ARCH, "pp": PP, "max_seq_len": MSL,
                          "block_size": BS, "kv_slot_budget": SLOT_BUDGET,
                          "prompt_lens": lens, "max_new_tokens": N_NEW,
                          "policy": "chunked"},
-            "contiguous": {"max_concurrent": conc_c, "wall_s": wall_c,
-                           "throughput_tok_s": m_c["throughput_tok_s"],
+            "contiguous": {"max_concurrent": cap_c["max_conc"],
+                           "wall_s": cap_c["wall"],
+                           "throughput_tok_s": cap_c["m"]["throughput_tok_s"],
+                           "jit_executables": cap_c["compiles"],
                            "rows": ROWS},
-            "paged": {"max_concurrent": conc_p, "wall_s": wall_p,
-                      "throughput_tok_s": m_p["throughput_tok_s"],
+            "paged": {"max_concurrent": cap_p["max_conc"],
+                      "wall_s": cap_p["wall"],
+                      "throughput_tok_s": cap_p["m"]["throughput_tok_s"],
+                      "jit_executables": cap_p["compiles"],
                       "blocks": SLOT_BUDGET // BS,
-                      "preemptions": m_p["kv_preemptions"]},
+                      "preemptions": cap_p["m"]["kv_preemptions"],
+                      "table_widths": cap_p["m"].get("kv_table_widths")},
             "concurrency_ratio": ratio,
-            "wall_gain": wall_c / wall_p,
+            "wall_gain": cap_c["wall"] / cap_p["wall"],
             "outputs_match_unpressured": match,
             "preempted_requests": victims,
             "preempted_outputs_match": victims_match,
-            "note": "capacity benchmark: the reproduction target is the "
-                    "concurrency ratio at equal cache budget; CPU-scale "
-                    "wall clock is dominated by XLA compiles for the "
-                    "paged run's extra (batch, nb) shapes and by "
-                    "preemption recompute",
+            "steady_state": {
+                "definition": "tok/s over the steps that paid no XLA "
+                              "compile (per-step compile_stats window)",
+                "contiguous_b2": {
+                    "tok_s": spd_c["steady_tok_s"],
+                    "steps": spd_c["steady_steps"],
+                    "jit_executables": spd_c["compiles"]},
+                "paged_b2_ample": {
+                    "tok_s": ref_p["steady_tok_s"],
+                    "steps": ref_p["steady_steps"],
+                    "jit_executables": ref_p["compiles"],
+                    "table_widths": ref_p["m"].get("kv_table_widths")},
+                "paged_over_contiguous_wall_ratio": steady_ratio,
+                "outputs_bit_identical": layouts_match,
+            },
+            "note": "capacity target: concurrency ratio at equal cache "
+                    "budget.  speed target: steady-state wall ratio near "
+                    "1x at equal composition — the basis for the "
+                    "kv_layout='auto' paged default; warmup compiles are "
+                    "excluded via the per-step compile count window",
         }, f, indent=2)
     assert match, "memory pressure perturbed greedy outputs"
     # the per-victim check is the corruption canary: a preempted sequence
     # resumes by recomputing its full history, so its stream must be
     # bit-exact regardless of composition effects elsewhere
     assert victims_match, "a preempted sequence's resumed output diverged"
-    assert m_p["kv_preemptions"] > 0, "pressure scenario never preempted"
+    assert cap_p["m"]["kv_preemptions"] > 0, "pressure never preempted"
     assert ratio >= 1.5, f"concurrency ratio {ratio:.2f} < 1.5"
+    assert layouts_match, "equal-composition layouts diverged"
     emit("paged/bench_json", 0.0, "wrote BENCH_paged.json")
 
 

@@ -80,8 +80,14 @@ class PPStage:
         return self.index == self.n_stages - 1
 
 
-def split_for_pp(model: Model, params: Any, p: int) -> List[PPStage]:
-    """Partition a decoder LM into p contiguous stages (layer groups)."""
+def split_for_pp(model: Model, params: Any, p: int, *,
+                 paged: bool = False) -> List[PPStage]:
+    """Partition a decoder LM into p contiguous stages (layer groups).
+
+    ``paged`` builds decode/chunk stage functions that take the [B, nb]
+    block table as a trailing argument and run attention *through* it
+    (block-major physical cache in, dirty-slot write-back out) — the
+    paged-native execution path (docs/memory.md)."""
     assert set(model.stacks) == {"blocks"}, (
         "engine PP supports single-stack decoder families (dense/moe)")
     st = model.stacks["blocks"]
@@ -96,11 +102,12 @@ def split_for_pp(model: Model, params: Any, p: int) -> List[PPStage]:
             sp["embed"] = params["embed"]
         if i == p - 1:
             sp["lnf"], sp["head"] = params["lnf"], params["head"]
-        stages.append(_make_stage(model, i, p, (lo, hi), sp))
+        stages.append(_make_stage(model, i, p, (lo, hi), sp, paged=paged))
     return stages
 
 
-def _make_stage(model: Model, idx: int, p: int, bounds, sp) -> PPStage:
+def _make_stage(model: Model, idx: int, p: int, bounds, sp, *,
+                paged: bool = False) -> PPStage:
     st = model.stacks["blocks"]
     lo, hi = bounds
     n_groups = hi - lo
@@ -124,8 +131,12 @@ def _make_stage(model: Model, idx: int, p: int, bounds, sp) -> PPStage:
             return model.lm_head(params, x_last), cache
         return x, cache
 
-    def decode_fn(params, cache, x_or_tokens, positions):
-        ctx = model.make_ctx("decode", positions)
+    def decode_fn(params, cache, x_or_tokens, positions, tables=None):
+        """``tables`` (paged layout only): [B, nb] physical block table.
+        When set, ``cache`` leaves are block-major [n_blocks, bs, ...] and
+        the attention blocks read/write through the table — the returned
+        cache differs from the input in exactly the dirty slots."""
+        ctx = model.make_ctx("decode", positions, block_tables=tables)
         x = model.embed_tokens({"embed": params["embed"]}, x_or_tokens) if first \
             else x_or_tokens
         x, cache = run_stack(sub, params["blocks"], x, ctx, cache_stacked=cache,
@@ -135,7 +146,7 @@ def _make_stage(model: Model, idx: int, p: int, bounds, sp) -> PPStage:
         return x, cache
 
     def chunk_fn(params, cache, x_or_tokens, positions, seq_idx, span_starts,
-                 last_idx, n_valid):
+                 last_idx, n_valid, tables=None):
         """Mixed chunked-prefill/decode step over the packed ragged layout:
         the batch's valid span tokens concatenated into flat [T] vectors
         (T = the power-of-two bucket; padding duplicates the last valid
@@ -144,9 +155,12 @@ def _make_stage(model: Model, idx: int, p: int, bounds, sp) -> PPStage:
         attention), ``last_idx`` [B] the packed index of each row's final
         token whose logits feed the sampler, and ``n_valid`` the unpadded
         token count.  Embedding, RoPE, attention, cache scatter and the
-        FFN all run at [T] — no padded [B, C] compute anywhere."""
+        FFN all run at [T] — no padded [B, C] compute anywhere.
+        ``tables`` (paged layout): as in ``decode_fn`` — the span's
+        tokens scatter into exactly the physical blocks they touch."""
         ctx = model.make_ctx("chunk", positions, seq_idx=seq_idx,
-                             span_starts=span_starts, n_valid=n_valid)
+                             span_starts=span_starts, n_valid=n_valid,
+                             block_tables=tables)
         x = model.embed_tokens({"embed": params["embed"]}, x_or_tokens) if first \
             else x_or_tokens
         x, cache = run_stack(sub, params["blocks"], x, ctx, cache_stacked=cache,
@@ -162,8 +176,17 @@ def _make_stage(model: Model, idx: int, p: int, bounds, sp) -> PPStage:
             dataclasses.replace(sub, n=n_groups), rows, s_max)
         return stacked.zeros_cache(abstract)
 
-    return PPStage(idx, p, bounds, sp, jax.jit(prefill_fn), jax.jit(decode_fn),
-                   jax.jit(chunk_fn), init_cache)
+    if paged:
+        # the paged engine owns exactly one reference to the physical
+        # cache and replaces it with the step's output, so the input
+        # buffer is donated — the dirty-slot write-back updates in place
+        # instead of copying the whole pool every iteration
+        decode_jit = jax.jit(decode_fn, donate_argnums=(1,))
+        chunk_jit = jax.jit(chunk_fn, donate_argnums=(1,))
+    else:
+        decode_jit, chunk_jit = jax.jit(decode_fn), jax.jit(chunk_fn)
+    return PPStage(idx, p, bounds, sp, jax.jit(prefill_fn), decode_jit,
+                   chunk_jit, init_cache)
 
 
 # ---------------------------------------------------------------------------
@@ -198,18 +221,31 @@ class EngineConfig:
     # metrics percentiles are computed over)
     keep_recent_requests: int = 2048
     # ---- KV memory substrate (docs/memory.md) ----------------------------
-    # "contiguous": one dense [max_seq_len] cache row per sequence (the
-    # seed layout — concurrency capped at max_batch * pp rows).
     # "paged": vLLM-style block tables over a [n_blocks, block_size, ...]
     # physical cache; admission is block-budget accounting, decode growth
     # under pressure preempts (and later recomputes) the lowest-priority
-    # sequence.
-    kv_layout: str = "contiguous"
+    # sequence.  Attention runs through the block table (paged-native
+    # path) and is bit-exact with contiguous rows.
+    # "contiguous": one dense [max_seq_len] cache row per sequence (the
+    # seed layout — concurrency capped at max_batch * pp rows); the
+    # escape hatch for families/configs the paged path doesn't cover.
+    # "auto" (default): paged where supported (dense/moe families whose
+    # sliding window, if any, is a block-size multiple), else contiguous.
+    kv_layout: str = "auto"
     kv_block_size: int = 16
     # total physical blocks (None = the same slot budget contiguous rows
     # would reserve: max_batch * pp * max_seq_len / block_size — or the
     # sliding window in place of max_seq_len for rolling-cache models)
     kv_blocks: Optional[int] = None
+    # cap on distinct padded block-table widths padded_tables may emit
+    # (each width is one XLA compile of the stage step — see
+    # BlockSpaceManager's ladder); None = unbounded pow2 widths
+    max_table_buckets: Optional[int] = 2
+    # sample iteration n on a host-side worker thread while the device
+    # runs n+1 (SiPipe: sampling off the critical path); token streams
+    # are identical to synchronous sampling (single FIFO worker + the
+    # per-slot autoregressive gate)
+    overlap_sampling: bool = True
     seed: int = 0
 
 
@@ -259,34 +295,21 @@ class _StageWorker:
     # -- CPU executor side ---------------------------------------------------
     def _prepare(self, sched: SchedulingOutput, bufs: Dict[str, np.ndarray]):
         eng = self.engine
-        slot_map = None
         if eng.paged:
             # placement is the scheduler's block-table snapshot; rows are
-            # meaningless (the gathered view's batch dim is positional).
-            # For pure decode, derive the slot mapping HERE and only here:
-            # each row's new token dirties exactly one block —
-            # (slot_blocks) its physical id, (slot_index) its position in
-            # the row's table/view — and the write-back scatters just it.
-            tables = sched.block_tables
+            # meaningless (the batch dim is positional) and the dirty-slot
+            # write-back mapping is derived inside the jitted stage from
+            # the table + positions — nothing else to stage
             rows = np.zeros(len(sched.seq_ids), np.int32)
-            if sched.packed_width == 1:
-                w = eng.arch.window or 0
-                pos = np.asarray(sched.positions, np.int64)
-                slot = pos % w if w else pos
-                blk = np.minimum(slot // eng.cfg.kv_block_size,
-                                 tables.shape[1] - 1)
-                slot_map = (tables[np.arange(tables.shape[0]), blk], blk)
         else:
             rows = np.array([eng.seq_cache.lookup(s).cache_row
                              for s in sched.seq_ids], np.int32)
-        meta = self.meta_cache.update(sched, rows, slot_map)
+        meta = self.meta_cache.update(sched, rows)
         np.copyto(bufs["tokens"], meta.tokens)
         np.copyto(bufs["positions"], meta.positions)
         np.copyto(bufs["rows"], meta.rows)
         if meta.n_blocks:
             np.copyto(bufs["block_tables"], meta.block_tables)
-            np.copyto(bufs["slot_blocks"], meta.slot_blocks)
-            np.copyto(bufs["slot_index"], meta.slot_index)
         if meta.width > 1:
             np.copyto(bufs["pack_tokens"], meta.pack_tokens)
             np.copyto(bufs["pack_positions"], meta.pack_positions)
@@ -310,58 +333,43 @@ class _StageWorker:
                  else jnp.asarray(bufs["tokens"])) if stage.is_first
                 else eng.recv_hidden(stage.index, desc.iteration))
         if eng.paged:
-            # block-table gather: the per-batch contiguous view the model
-            # fns (and, on TPU, the paged span-attention kernels' scalar-
-            # prefetched BlockSpecs) see — [groups, B, nb * bs, ...] with
-            # slots past a row's table reading the trash/other blocks,
-            # always position-masked out (docs/memory.md)
-            bs = eng.cfg.kv_block_size
-            tables_np = bufs["block_tables"]
-            b, nb = tables_np.shape
-            tables = jnp.asarray(tables_np)
-
-            def gather(c):
-                g = c[:, tables]                     # [n, B, nb, bs, ...]
-                return g.reshape(c.shape[0], b, nb * bs, *c.shape[3:])
-
-            cache_rows = jax.tree.map(gather, self.cache)
+            # paged-native path: the physical block-major cache and the
+            # [B, nb] table go straight into the jitted stage — attention
+            # reads K/V *through* the table (on TPU, inside the paged
+            # span-attention kernels' scalar-prefetched BlockSpecs; no
+            # materialized [B, nb * bs] view anywhere) and the returned
+            # cache differs in exactly the slots this iteration's tokens
+            # dirtied.  The input cache buffer is donated (one owner).
+            tables = jnp.asarray(bufs["block_tables"])
+            if desc.width > 1:
+                out, new_cache = stage.chunk_fn(
+                    stage.params, self.cache, x_in,
+                    jnp.asarray(bufs["pack_positions"]),
+                    jnp.asarray(bufs["pack_seq"]),
+                    jnp.asarray(bufs["positions"]),
+                    jnp.asarray(bufs["last_index"]),
+                    jnp.asarray(bufs["n_valid"])[0],
+                    tables)
+            else:
+                out, new_cache = stage.decode_fn(
+                    stage.params, self.cache, x_in,
+                    jnp.asarray(bufs["positions"]), tables)
+            self.cache = new_cache
         else:
             rows = jnp.asarray(bufs["rows"])
             cache_rows = jax.tree.map(lambda c: c[:, rows], self.cache)
-        if desc.width > 1:
-            out, new_cache = stage.chunk_fn(
-                stage.params, cache_rows, x_in,
-                jnp.asarray(bufs["pack_positions"]),
-                jnp.asarray(bufs["pack_seq"]),
-                jnp.asarray(bufs["positions"]),
-                jnp.asarray(bufs["last_index"]),
-                jnp.asarray(bufs["n_valid"])[0])
-        else:
-            out, new_cache = stage.decode_fn(
-                stage.params, cache_rows, x_in, jnp.asarray(bufs["positions"]))
-        if eng.paged:
             if desc.width > 1:
-                # chunk iterations touch up to span-width slots per row:
-                # write back every real block (trash-padded entries dump
-                # into the trash block, blocks are uniquely owned)
-                def scatter(c, nv):
-                    blocks = nv.reshape(c.shape[0], b, nb, bs, *c.shape[3:])
-                    return c.at[:, tables].set(blocks)
+                out, new_cache = stage.chunk_fn(
+                    stage.params, cache_rows, x_in,
+                    jnp.asarray(bufs["pack_positions"]),
+                    jnp.asarray(bufs["pack_seq"]),
+                    jnp.asarray(bufs["positions"]),
+                    jnp.asarray(bufs["last_index"]),
+                    jnp.asarray(bufs["n_valid"])[0])
             else:
-                # pure decode dirties exactly one block per row — consume
-                # the slot mapping _prepare staged (physical id + view
-                # index, derived at one site); scatter [B] blocks, not
-                # [B, nb]
-                phys = jnp.asarray(bufs["slot_blocks"])
-                rows_j = jnp.arange(b)
-                blk_j = jnp.asarray(bufs["slot_index"])
-
-                def scatter(c, nv):
-                    blocks = nv.reshape(c.shape[0], b, nb, bs, *c.shape[3:])
-                    return c.at[:, phys].set(blocks[:, rows_j, blk_j])
-
-            self.cache = jax.tree.map(scatter, self.cache, new_cache)
-        else:
+                out, new_cache = stage.decode_fn(
+                    stage.params, cache_rows, x_in,
+                    jnp.asarray(bufs["positions"]))
             self.cache = jax.tree.map(lambda c, n: c.at[:, rows].set(n),
                                       self.cache, new_cache)
         out = jax.block_until_ready(out)
@@ -427,12 +435,21 @@ class PPEngineBase:
 
     def __init__(self, model: Model, params, cfg: EngineConfig):
         self.model = model
-        self.cfg = cfg
         self.arch: ArchConfig = model.cfg
-        if cfg.kv_layout not in ("contiguous", "paged"):
+        if cfg.kv_layout not in ("auto", "contiguous", "paged"):
             raise ValueError(
                 f"unknown kv_layout {cfg.kv_layout!r}; choose from "
-                "('contiguous', 'paged')")
+                "('auto', 'contiguous', 'paged')")
+        if cfg.kv_layout == "auto":
+            # paged wherever the paged-native path covers the family;
+            # rolling caches additionally need whole-block windows
+            # (explicit kv_layout='paged' raises on both instead)
+            w = self.arch.window or 0
+            supported = (self.arch.family in ("dense", "moe")
+                         and not (w and w % cfg.kv_block_size))
+            cfg = dataclasses.replace(
+                cfg, kv_layout="paged" if supported else "contiguous")
+        self.cfg = cfg
         self.paged = cfg.kv_layout == "paged"
         self.kv_manager = None
         if self.paged:
@@ -457,7 +474,9 @@ class PPEngineBase:
                 n_blocks = (cfg.max_batch * cfg.pp_degree *
                             -(-per_seq_slots // cfg.kv_block_size))
             self.kv_manager = BlockSpaceManager(
-                n_blocks, cfg.kv_block_size, slot_cap=window)
+                n_blocks, cfg.kv_block_size, slot_cap=window,
+                max_slots=cfg.max_seq_len,
+                max_table_buckets=cfg.max_table_buckets)
             if n_blocks < self.kv_manager.blocks_for(cfg.max_seq_len):
                 raise ValueError(
                     f"kv_blocks={n_blocks} x block_size={cfg.kv_block_size}"
@@ -489,7 +508,8 @@ class PPEngineBase:
                                        kv=self.kv_manager)
         self.stages = [
             _StageWorker(s, self)
-            for s in split_for_pp(model, params, cfg.pp_degree)
+            for s in split_for_pp(model, params, cfg.pp_degree,
+                                  paged=self.paged)
         ]
         self.bic_i = LocalRing(max(8, 2 * cfg.pp_degree), "BIC-I")
         self.bic_o = SubSlotRing(cfg.n_samplers, max(8, 2 * cfg.pp_degree))
@@ -505,6 +525,13 @@ class PPEngineBase:
             for i in range(cfg.n_samplers)
         ]
         self.sample_time = 0.0
+        # SiPipe overlapped CPU sampling: the last stage hands logits to
+        # this FIFO worker and launches the next iteration immediately;
+        # the worker mutates sampler state in submission (= iteration)
+        # order, so streams are token-identical to synchronous sampling
+        from repro.core.sampler import SamplingWorker
+        self.sampling_worker = (SamplingWorker(self._dispatch_sampling)
+                                if cfg.overlap_sampling else None)
         # completion times of iterations still (possibly) being awaited;
         # pruned each step once older than every in-flight iteration —
         # the running max survives in _t_last_done (long-run memory bound)
@@ -548,8 +575,15 @@ class PPEngineBase:
 
     # -- sampling ----------------------------------------------------------------
     def emit_logits(self, desc: ModelInputDescriptor, logits: np.ndarray):
-        """Final stage output; SiPipe ships via BIC-L to the sampler pool."""
-        self._dispatch_sampling(desc.sched, logits)
+        """Final stage output; SiPipe ships via BIC-L to the sampler pool.
+        With overlapped sampling the hand-off is a queue put — the last
+        stage's device thread goes straight to its next microbatch while
+        the sampling worker processes this one (intra-stage bubble
+        closed); otherwise sampling runs inline on this thread."""
+        if self.sampling_worker is not None:
+            self.sampling_worker.submit(desc.sched, logits)
+        else:
+            self._dispatch_sampling(desc.sched, logits)
 
     def _dispatch_sampling(self, sched: SchedulingOutput, logits: np.ndarray):
         t0 = time.monotonic()
@@ -948,13 +982,38 @@ class PPEngineBase:
         self._stopped = True
         for w in self.stages:
             w.stop()
+        if self.sampling_worker is not None:
+            # the FIFO drains before the sentinel, so every emitted
+            # iteration's sampling lands before the worker exits
+            self.sampling_worker.stop()
 
     # engine-specific:
     def _submit(self, sched: SchedulingOutput):
         raise NotImplementedError
 
     def _await_iteration(self, sched: SchedulingOutput):
-        raise NotImplementedError
+        deadline = time.monotonic() + 120
+        while sched.iteration not in self.iter_done_t:
+            if self.sampling_worker is not None:
+                self.sampling_worker.check()   # surface sampler crashes
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"iteration {sched.iteration} never completed")
+            time.sleep(0.0005)
+
+    def compile_stats(self) -> Dict[str, int]:
+        """Total jit executables across the stage step functions — the
+        compile count benchmarks report (each distinct (batch, width,
+        table-bucket) shape is one entry; bucket capping bounds it)."""
+        total = 0
+        for w in self.stages:
+            for fn in (w.stage.prefill_fn, w.stage.decode_fn,
+                       w.stage.chunk_fn):
+                try:
+                    total += fn._cache_size()
+                except Exception:          # API moved; report what we can
+                    pass
+        return {"jit_executables": total}
 
     # -- metrics ----------------------------------------------------------------
     def metrics(self) -> Dict[str, Any]:
@@ -1011,6 +1070,8 @@ class PPEngineBase:
             out["kv_blocks_total"] = self.kv_manager.n_blocks
             out["kv_blocks_free"] = self.kv_manager.free_blocks
             out["kv_preemptions"] = self.scheduler.n_preemptions
+            out["kv_table_widths"] = self.kv_manager.table_widths
+        out.update(self.compile_stats())
         for k, v in self.scheduler.policy.metrics().items():
             out[f"policy_{k}"] = v
         return out
@@ -1027,29 +1088,18 @@ class SiPipeEngine(PPEngineBase):
                 threading.Thread(target=w.executor.run, args=(sched,),
                                  daemon=True).start()
 
-    def _await_iteration(self, sched: SchedulingOutput):
-        deadline = time.monotonic() + 120
-        while sched.iteration not in self.iter_done_t:
-            if time.monotonic() > deadline:
-                raise TimeoutError(f"iteration {sched.iteration} never completed")
-            time.sleep(0.0005)
-
 
 class NaivePPEngine(PPEngineBase):
     """Synchronous baseline: stages run in order on the caller thread; the
-    final stage performs sampling *inside* its critical path."""
+    final stage performs sampling *inside* its critical path (overlapped
+    sampling is forced off — it's the SiPipe technique being ablated)."""
 
     def __init__(self, model: Model, params, cfg: EngineConfig):
-        cfg = dataclasses.replace(cfg, tsem=False, sat=False, cpu_sampling=False)
+        cfg = dataclasses.replace(cfg, tsem=False, sat=False,
+                                  cpu_sampling=False,
+                                  overlap_sampling=False)
         super().__init__(model, params, cfg)
 
     def _submit(self, sched: SchedulingOutput):
         for w in self.stages:
             w.executor.run(sched)
-
-    def _await_iteration(self, sched: SchedulingOutput):
-        deadline = time.monotonic() + 120
-        while sched.iteration not in self.iter_done_t:
-            if time.monotonic() > deadline:
-                raise TimeoutError(f"iteration {sched.iteration} never completed")
-            time.sleep(0.0005)

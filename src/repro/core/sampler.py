@@ -41,8 +41,9 @@ the ablation benchmark (paper Fig. 16).
 from __future__ import annotations
 
 import dataclasses
+import queue
 import threading
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -436,3 +437,58 @@ class NaiveSampler:
         u = self.rng.random((b, 1), dtype=np.float32)
         cdf = np.cumsum(probs, axis=1)
         return (cdf < u).sum(axis=1).clip(0, self.v - 1).astype(np.int32)
+
+
+class SamplingWorker:
+    """Host-side sampling thread that overlaps iteration *n*'s sampling
+    with the device's execution of iteration *n+1* (the SiPipe design
+    point: sampling leaves the critical path of the stage loop).
+
+    A single daemon thread drains a FIFO queue, so dispatch order equals
+    submission order equals iteration order — token streams are
+    *identical* to synchronous sampling (the sampler replicas' penalty
+    state is mutated in exactly the same sequence, and the engine's
+    per-slot autoregressive gate still makes a slot's next iteration
+    await its sampled token).  The worker only moves *where* the wall
+    time of ``dispatch_fn`` is spent: off the thread that launches
+    device work.
+
+    ``dispatch_fn(sched, logits)`` is the engine's synchronous sampling
+    entry (sample + publish + iter-done bookkeeping).  Exceptions are
+    captured and re-raised on the driver thread via ``check()`` — the
+    engine polls it from its await loop, so a sampler crash surfaces
+    instead of deadlocking the per-slot gate.
+    """
+
+    def __init__(self, dispatch_fn: Callable, name: str = "sampling-worker"):
+        self.dispatch_fn = dispatch_fn
+        self._q: "queue.Queue" = queue.Queue()
+        self._exc: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._loop, name=name,
+                                        daemon=True)
+        self._thread.start()
+
+    def submit(self, sched, logits):
+        self._q.put((sched, logits))
+
+    def _loop(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            if self._exc is not None:
+                continue                       # drain; check() will raise
+            sched, logits = item
+            try:
+                self.dispatch_fn(sched, logits)
+            except BaseException as e:         # noqa: BLE001
+                self._exc = e
+
+    def check(self):
+        """Re-raise (once per poll) any exception from the worker thread."""
+        if self._exc is not None:
+            raise RuntimeError("sampling worker failed") from self._exc
+
+    def stop(self, timeout: float = 5.0):
+        self._q.put(None)
+        self._thread.join(timeout=timeout)

@@ -81,8 +81,10 @@ class SchedulingOutput:
     # ---- paged KV layout (None under contiguous rows) -----------------------
     # [B, nb] int32 physical block table per batch row, padded with the
     # trash block — snapshotted at schedule time by the scheduler (the
-    # placement this iteration's gather/scatter must see), staged verbatim
-    # by every stage's CPU executor (docs/memory.md)
+    # placement this iteration's in-kernel gather / dirty-slot write-back
+    # must see), staged verbatim by every stage's CPU executor.  ``nb`` is
+    # a rung of the BlockSpaceManager's capped width ladder, so only a
+    # handful of (batch, nb) stage-fn shapes ever compile (docs/memory.md)
     block_tables: Optional[np.ndarray] = None
     # per-seq preemption generation at schedule time: ``complete`` drops a
     # sampled token whose sequence was preempted (and possibly already

@@ -58,19 +58,14 @@ class BatchMetadata:
     pack_positions: Optional[np.ndarray] = None  # [W] int32
     pack_seq: Optional[np.ndarray] = None        # [W] batch column per token
     last_index: Optional[np.ndarray] = None      # [B] packed idx of last valid
-    # paged KV layout: [B, nb] physical block table (trash-padded) and —
-    # pure decode only — the slot mapping the dirty-block write-back
-    # uses, computed at ONE site (the engine's _prepare): the [B]
-    # physical block each row's single new slot lands in, plus the [B]
-    # index of that block within the row's table (= within the gathered
-    # view)
+    # paged KV layout: [B, nb] physical block table (trash-padded).  The
+    # dirty-slot write-back mapping (which physical block a row's new
+    # token lands in) is derived *inside* the jitted stage function from
+    # the table + positions — no host-side slot staging.
     n_blocks: int = 0          # nb (0 = contiguous layout)
     block_tables: Optional[np.ndarray] = None    # [B, nb] int32
-    slot_blocks: Optional[np.ndarray] = None     # [B] int32, physical
-    slot_index: Optional[np.ndarray] = None      # [B] int32, view-local
 
-    def advance_inplace(self, sched: SchedulingOutput, rows: np.ndarray,
-                        slot_map=None):
+    def advance_inplace(self, sched: SchedulingOutput, rows: np.ndarray):
         """Incremental update: same sequence set, next iteration.  Under
         the paged layout a table may have gained a block between n and
         n+p, so the (same-shaped) table snapshot is refreshed in place."""
@@ -79,8 +74,6 @@ class BatchMetadata:
         np.copyto(self.rows, rows)
         if self.block_tables is not None:
             np.copyto(self.block_tables, sched.block_tables)
-            np.copyto(self.slot_blocks, slot_map[0])
-            np.copyto(self.slot_index, slot_map[1])
         self.iteration = sched.iteration
 
 
@@ -114,11 +107,8 @@ class BatchMetadataCache:
         self.incremental_hits = 0
         self.rebuilds = 0
 
-    def update(self, sched: SchedulingOutput, rows: np.ndarray,
-               slot_map=None) -> BatchMetadata:
-        """``slot_map`` (paged pure-decode): (slot_blocks, slot_index)
-        [B] vectors from the engine's _prepare — the single site that
-        derives the dirty-block mapping from positions."""
+    def update(self, sched: SchedulingOutput,
+               rows: np.ndarray) -> BatchMetadata:
         slot = sched.iteration % self.p
         meta = self._meta[slot]
         width = sched.packed_width
@@ -126,7 +116,7 @@ class BatchMetadataCache:
         if (meta is not None and meta.seq_ids == sched.seq_ids
                 and meta.width == 1 and width == 1
                 and meta.n_blocks == nb):
-            meta.advance_inplace(sched, rows, slot_map)
+            meta.advance_inplace(sched, rows)
             self.incremental_hits += 1
             return meta
         meta = BatchMetadata(
@@ -142,14 +132,7 @@ class BatchMetadataCache:
             (meta.pack_tokens, meta.pack_positions, meta.pack_seq,
              meta.last_index, meta.n_valid) = _build_packed(sched)
         if nb:
-            b = len(sched.seq_ids)
             meta.block_tables = np.array(sched.block_tables, np.int32)
-            if slot_map is not None:
-                meta.slot_blocks = np.array(slot_map[0], np.int32)
-                meta.slot_index = np.array(slot_map[1], np.int32)
-            else:
-                meta.slot_blocks = np.zeros(b, np.int32)
-                meta.slot_index = np.zeros(b, np.int32)
         self._meta[slot] = meta
         self.rebuilds += 1
         return meta
@@ -162,8 +145,8 @@ class VersionedStaging:
     keyed additionally by the packed bucket width W and stage flat [W]
     token/position/seq-index vectors plus the [B] last-valid indices.
     Under the paged KV layout the key gains the padded block-table width
-    nb, and the set stages the [B, nb] physical block table plus the [B]
-    dirty-block slot mapping the decode write-back scatters through.
+    nb, and the set stages the [B, nb] physical block table (the jitted
+    stage derives the dirty-slot write-back mapping from it on device).
     """
 
     def __init__(self):
@@ -187,8 +170,6 @@ class VersionedStaging:
                 bufs["n_valid"] = np.zeros(1, np.int32)
             if n_blocks:
                 bufs["block_tables"] = np.zeros((batch, n_blocks), np.int32)
-                bufs["slot_blocks"] = np.zeros(batch, np.int32)
-                bufs["slot_index"] = np.zeros(batch, np.int32)
             self._bufs[key] = bufs
         return self._bufs[key]
 

@@ -579,6 +579,17 @@ def span_attention_rolling(q: jax.Array, k_cache: jax.Array,
 # and the kv tile is the page block size, so logical block i of token t's
 # sequence is fetched from physical block ``tbl[seq[t] * nb + i]``.
 
+def _resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` = auto: compiled on TPU, interpret-mode elsewhere.
+
+    The paged twins are the engine's execution path (attention.py routes
+    through them on TPU backends), so their default must not silently pin
+    interpret mode the way the contiguous validation wrappers do."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
 def _paged_kernel(seq_ref, pos_ref, tbl_ref, *rest, **kw):
     _kernel(seq_ref, pos_ref, *rest, **kw)
 
@@ -601,10 +612,11 @@ def paged_span_attention(q: jax.Array, k_cache: jax.Array,
                          v_cache: jax.Array, positions: jax.Array,
                          seq_idx: jax.Array, block_tables: jax.Array, *,
                          window: int = 0, scale: float = 0.0,
-                         interpret: bool = True) -> jax.Array:
+                         interpret: bool | None = None) -> jax.Array:
     """q [T,H,hd]; caches [n_blocks,bs,Kv,hd]; block_tables [B,nb];
     positions/seq_idx [T] -> [T, H*hd].  Matches
     :func:`repro.models.attention.paged_span_attention`."""
+    interpret = _resolve_interpret(interpret)
     t, h, hd = q.shape
     bs, kv = k_cache.shape[1], k_cache.shape[2]
     nb = block_tables.shape[1]
@@ -646,9 +658,10 @@ def paged_span_attention_quant(q: jax.Array, k8: jax.Array, ks: jax.Array,
                                positions: jax.Array, seq_idx: jax.Array,
                                block_tables: jax.Array, *,
                                scale: float = 0.0,
-                               interpret: bool = True) -> jax.Array:
+                               interpret: bool | None = None) -> jax.Array:
     """q [T,H,hd] bf16; k8/v8 [n_blocks,bs,Kv,hd] int8; ks/vs
     [n_blocks,bs,Kv]; block_tables [B,nb] -> [T, H*hd]."""
+    interpret = _resolve_interpret(interpret)
     t, h, hd = q.shape
     bs, kv = k8.shape[1], k8.shape[2]
     nb = block_tables.shape[1]
@@ -694,13 +707,14 @@ def paged_span_attention_rolling(q: jax.Array, k_cache: jax.Array,
                                  n_valid: jax.Array,
                                  block_tables: jax.Array, *, window: int,
                                  scale: float = 0.0,
-                                 interpret: bool = True) -> jax.Array:
+                                 interpret: bool | None = None) -> jax.Array:
     """Two-source windowed span attention over a block-paged rolling cache.
 
     caches [n_blocks,bs,Kv,hd] (pre-scatter); block_tables [B,nb] with the
     gathered view width ``nb * bs`` playing the stored-position modulus
     (== W once a row's table covers the full window).  Matches
     :func:`repro.models.attention.paged_span_attention_rolling`."""
+    interpret = _resolve_interpret(interpret)
     t, h, hd = q.shape
     bs, kv = k_cache.shape[1], k_cache.shape[2]
     nb = block_tables.shape[1]
@@ -754,10 +768,12 @@ def paged_span_attention_rolling_quant(q: jax.Array, k8: jax.Array,
                                        n_valid: jax.Array,
                                        block_tables: jax.Array, *,
                                        window: int, scale: float = 0.0,
-                                       interpret: bool = True) -> jax.Array:
+                                       interpret: bool | None = None,
+                                       ) -> jax.Array:
     """The int8 + sliding-window + paged combination: s8 x s8 -> s32
     old-cache dots with folded scales, bf16 intra-span source, block-table
     scalar prefetch — one running softmax."""
+    interpret = _resolve_interpret(interpret)
     t, h, hd = q.shape
     bs, kv = k8.shape[1], k8.shape[2]
     nb = block_tables.shape[1]

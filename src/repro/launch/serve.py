@@ -34,8 +34,8 @@ POLICY_CHOICES = ["auto", "monolithic", "chunked", "disaggregated", "adaptive"]
 def _build_engine(arch: str, *, engine: str, pp: int, max_batch: int,
                   max_seq_len: int, n_samplers: int, chunk_tokens: int,
                   policy: str, hysteresis_tokens: int, tpot_slo_ms: float,
-                  kv_layout: str = "contiguous", block_size: int = 16,
-                  kv_blocks: int = 0,
+                  kv_layout: str = "auto", block_size: int = 16,
+                  kv_blocks: int = 0, overlap_sampling: bool = True,
                   keep_recent: int = 2048, seed: int = 0, prebuilt=None):
     """``prebuilt`` = (cfg, model, params) skips the model build — callers
     comparing several engine configs on one model (benchmarks) reuse it."""
@@ -54,6 +54,7 @@ def _build_engine(arch: str, *, engine: str, pp: int, max_batch: int,
                         tpot_slo_s=(tpot_slo_ms / 1e3) or None,
                         kv_layout=kv_layout, kv_block_size=block_size,
                         kv_blocks=kv_blocks or None,
+                        overlap_sampling=overlap_sampling,
                         keep_recent_requests=keep_recent, seed=seed)
     eng = (SiPipeEngine if engine == "sipipe" else NaivePPEngine)(
         model, params, ecfg)
@@ -64,7 +65,7 @@ def run(arch: str, *, engine: str = "sipipe", pp: int = 2, requests: int = 8,
         max_batch: int = 4, max_new_tokens: int = 16, max_seq_len: int = 256,
         n_samplers: int = 2, chunk_tokens: int = 0, policy: str = "auto",
         hysteresis_tokens: int = 0, tpot_slo_ms: float = 0.0,
-        kv_layout: str = "contiguous", block_size: int = 16,
+        kv_layout: str = "auto", block_size: int = 16,
         kv_blocks: int = 0, seed: int = 0,
         verbose: bool = True) -> dict:
     """Offline batch mode: enqueue every prompt, blocking run()."""
@@ -98,8 +99,8 @@ def run_online(arch: str, *, engine: str = "sipipe", pp: int = 2,
                max_seq_len: int = 256, n_samplers: int = 2,
                chunk_tokens: int = 16, policy: str = "chunked",
                hysteresis_tokens: int = 0, tpot_slo_ms: float = 0.0,
-               kv_layout: str = "contiguous", block_size: int = 16,
-               kv_blocks: int = 0,
+               kv_layout: str = "auto", block_size: int = 16,
+               kv_blocks: int = 0, overlap_sampling: bool = True,
                arrival_rate: float = 4.0, abort_every: int = 0,
                seed: int = 0, verbose: bool = True, prebuilt=None) -> dict:
     """Online continuous serving: replay a Poisson arrival trace through
@@ -116,6 +117,7 @@ def run_online(arch: str, *, engine: str = "sipipe", pp: int = 2,
                              hysteresis_tokens=hysteresis_tokens,
                              tpot_slo_ms=tpot_slo_ms, kv_layout=kv_layout,
                              block_size=block_size, kv_blocks=kv_blocks,
+                             overlap_sampling=overlap_sampling,
                              seed=seed, prebuilt=prebuilt)
     wl = ShareGPTLike(cfg.vocab_size, n_requests=requests, seed=seed,
                       prompt_len_median=12, max_prompt=max_seq_len // 4,
@@ -203,11 +205,13 @@ def main():
                     help="adaptive policy: target mean inter-token latency "
                          "in ms (0 = self-calibrate from the first window); "
                          "disaggregated policy: prefill-phase length cap")
-    ap.add_argument("--kv-layout", default="contiguous",
-                    choices=["contiguous", "paged"],
-                    help="KV memory substrate: dense per-sequence rows, or "
-                         "block-paged with budget admission + preemption "
-                         "(docs/memory.md)")
+    ap.add_argument("--kv-layout", default="auto",
+                    choices=["auto", "contiguous", "paged"],
+                    help="KV memory substrate: 'paged' = block tables with "
+                         "budget admission + preemption, attention through "
+                         "the table (docs/memory.md); 'contiguous' = dense "
+                         "per-sequence rows (the escape hatch); 'auto' "
+                         "(default) = paged where the family supports it")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged layout: KV slots per physical block")
     ap.add_argument("--kv-blocks", type=int, default=0,

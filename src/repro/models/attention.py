@@ -16,6 +16,7 @@ Outputs are [B, Sq, Hq*hd] / [B, Hq*hd].
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -742,6 +743,379 @@ def packed_span_attention_rolling_quant(
         "tngu,und->tngd", p.astype(q.dtype), v_span).astype(jnp.float32)
     out = acc / jnp.maximum(l[..., None], 1e-30)
     return out.astype(q.dtype).reshape(t, hq * hd)
+
+
+# ---------------------------------------------------------------------------
+# Paged-native execution path: per-tile block-table gather, no [B, nb*bs]
+# materialized view (docs/memory.md §Paged-native execution)
+# ---------------------------------------------------------------------------
+# The oracles above gather each row's whole table into a contiguous view
+# before attending; these natives fetch exactly one kv tile per scan step
+# straight through the table, mirroring what the paged Pallas kernels do
+# per grid cell in VMEM.  The tile VALUES (and every downstream shape,
+# mask, and reduction) are identical to the gather-then-attend path, so
+# the natives are bit-exact to the oracles — and hence to the contiguous
+# layout, since masked slots contribute exp(NEG_INF - m) == 0.0 exactly.
+
+
+def _paged_tile(flat: jax.Array, tab_rows: jax.Array, offs: jax.Array,
+                bs: int) -> jax.Array:
+    """One kv tile through the block table: logical slot p of packed token
+    t is ``flat[tab_rows[t, p // bs] * bs + p %% bs]``.  flat is the
+    physical cache with its block axes flattened ([n_blocks*bs, ...]);
+    offs [kb] are the tile's logical slots.  Returns [T, kb, ...]."""
+    idx = tab_rows[:, offs // bs] * bs + (offs % bs)[None, :]
+    return flat[idx]
+
+
+def paged_span_attention_native(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    block_tables: jax.Array,
+    positions: jax.Array,
+    seq_idx: jax.Array,
+    *,
+    window: int = 0,
+    kv_block: int = 512,
+) -> jax.Array:
+    """:func:`packed_span_attention` reading straight through the block
+    table — no [B, nb*bs] gathered view is ever materialized; each scan
+    step gathers one [T, kv_block] tile of K and V from the physical
+    cache.  Bit-exact to :func:`paged_span_attention` (the gather-then-
+    attend oracle).  q [T,Hq,hd]; caches [n_blocks,bs,Kv,hd];
+    block_tables [B,nb]; positions/seq_idx [T]."""
+    t, hq, hd = q.shape
+    bs, n_kv = k_cache.shape[1], k_cache.shape[2]
+    s = block_tables.shape[1] * bs
+    g = hq // n_kv
+    kv_block = min(kv_block, s)
+    while s % kv_block:
+        kv_block //= 2
+    nb = s // kv_block
+    qg = q.reshape(t, n_kv, g, hd)
+    scale = hd ** -0.5
+    kf = k_cache.reshape(-1, n_kv, hd)
+    vf = v_cache.reshape(-1, n_kv, hd)
+    tab = block_tables[seq_idx].astype(jnp.int32)       # [T, nb_t]
+    span = jnp.arange(kv_block)
+
+    def body(carry, i):
+        m, l, acc = carry
+        kpos = i * kv_block + span
+        kt = _paged_tile(kf, tab, kpos, bs)             # [T, kb, Kv, hd]
+        vt = _paged_tile(vf, tab, kpos, bs)
+        sc = jnp.einsum("tngd,tknd->tngk", qg, kt).astype(jnp.float32) * scale
+        mask = kpos[None, :] <= positions[:, None]
+        if window:
+            mask &= kpos[None, :] > positions[:, None] - window
+        sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
+        mn = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - mn[..., None])
+        corr = jnp.exp(m - mn)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "tngk,tknd->tngd", p.astype(q.dtype), vt).astype(jnp.float32)
+        return (mn, l, acc), None
+
+    m0 = jnp.full((t, n_kv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((t, n_kv, g), jnp.float32)
+    a0 = jnp.zeros((t, n_kv, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nb))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype).reshape(t, hq * hd)
+
+
+def paged_span_attention_quant_native(
+    q: jax.Array,
+    k8: jax.Array, ks: jax.Array,
+    v8: jax.Array, vs: jax.Array,
+    block_tables: jax.Array,
+    positions: jax.Array,
+    seq_idx: jax.Array,
+    *,
+    kv_block: int = 512,
+) -> jax.Array:
+    """:func:`packed_span_attention_quant` through the block table (int8
+    cache, per-tile gather, no materialized view).  Bit-exact to
+    :func:`paged_span_attention_quant`."""
+    t, hq, hd = q.shape
+    bs, n_kv = k8.shape[1], k8.shape[2]
+    s = block_tables.shape[1] * bs
+    g = hq // n_kv
+    kv_block = min(kv_block, s)
+    while s % kv_block:
+        kv_block //= 2
+    nb = s // kv_block
+    qg = q.reshape(t, n_kv, g, hd)
+    q8, qs = quantize_kv(qg)
+    scale = hd ** -0.5
+    kf = k8.reshape(-1, n_kv, hd)
+    vf = v8.reshape(-1, n_kv, hd)
+    ksf = ks.reshape(-1, n_kv)
+    vsf = vs.reshape(-1, n_kv)
+    tab = block_tables[seq_idx].astype(jnp.int32)
+    span = jnp.arange(kv_block)
+
+    def body(carry, i):
+        m, l, acc = carry
+        kpos = i * kv_block + span
+        kt = _paged_tile(kf, tab, kpos, bs)
+        vt = _paged_tile(vf, tab, kpos, bs)
+        kst = _paged_tile(ksf, tab, kpos, bs).transpose(0, 2, 1)[:, :, None, :]
+        vst = _paged_tile(vsf, tab, kpos, bs).transpose(0, 2, 1)[:, :, None, :]
+        s32 = jnp.einsum("tngd,tknd->tngk", q8, kt,
+                         preferred_element_type=jnp.int32)
+        sc = s32.astype(jnp.float32) * qs[..., None].astype(jnp.float32) \
+            * kst.astype(jnp.float32) * scale
+        mask = kpos[None, :] <= positions[:, None]
+        sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
+        mn = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - mn[..., None])
+        corr = jnp.exp(m - mn)
+        l = l * corr + p.sum(-1)
+        pv = p * vst.astype(jnp.float32)
+        p8, ps = quantize_kv(pv)
+        o32 = jnp.einsum("tngk,tknd->tngd", p8, vt,
+                         preferred_element_type=jnp.int32)
+        acc = acc * corr[..., None] + \
+            o32.astype(jnp.float32) * ps[..., None].astype(jnp.float32)
+        return (mn, l, acc), None
+
+    m0 = jnp.full((t, n_kv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((t, n_kv, g), jnp.float32)
+    a0 = jnp.zeros((t, n_kv, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nb))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype).reshape(t, hq * hd)
+
+
+def paged_span_attention_rolling_native(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    k_span: jax.Array,
+    v_span: jax.Array,
+    block_tables: jax.Array,
+    positions: jax.Array,
+    seq_idx: jax.Array,
+    offsets: jax.Array,
+    n_valid: jax.Array,
+    *,
+    window: int,
+    kv_block: int = 512,
+) -> jax.Array:
+    """:func:`packed_span_attention_rolling` through the block table.
+    The stored-position modulus is the table's logical width ``nb * bs``
+    (== W once a row's table covers the full window); bit-exact to
+    :func:`paged_span_attention_rolling`."""
+    t, hq, hd = q.shape
+    bs, n_kv = k_cache.shape[1], k_cache.shape[2]
+    w_slots = block_tables.shape[1] * bs
+    g = hq // n_kv
+    kv_block = min(kv_block, w_slots)
+    while w_slots % kv_block:
+        kv_block //= 2
+    nb = w_slots // kv_block
+    qg = q.reshape(t, n_kv, g, hd)
+    scale = hd ** -0.5
+    kf = k_cache.reshape(-1, n_kv, hd)
+    vf = v_cache.reshape(-1, n_kv, hd)
+    tab = block_tables[seq_idx].astype(jnp.int32)
+    span = jnp.arange(kv_block)
+
+    def cache_body(carry, i):
+        m, l, acc = carry
+        slot = i * kv_block + span
+        kt = _paged_tile(kf, tab, slot, bs)
+        vt = _paged_tile(vf, tab, slot, bs)
+        stored = offsets[:, None] - 1 - (
+            (offsets[:, None] - 1 - slot[None, :]) % w_slots)
+        mask = (offsets[:, None] >= 1) & (stored >= 0) & (
+            stored > positions[:, None] - window)
+        sc = jnp.einsum("tngd,tknd->tngk", qg, kt).astype(jnp.float32) * scale
+        sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
+        mn = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - mn[..., None])
+        corr = jnp.exp(m - mn)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "tngk,tknd->tngd", p.astype(q.dtype), vt).astype(jnp.float32)
+        return (mn, l, acc), None
+
+    m0 = jnp.full((t, n_kv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((t, n_kv, g), jnp.float32)
+    a0 = jnp.zeros((t, n_kv, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(cache_body, (m0, l0, a0), jnp.arange(nb))
+
+    sc = jnp.einsum("tngd,und->tngu", qg, k_span).astype(jnp.float32) * scale
+    upos, useq = positions, seq_idx
+    mask = (useq[None, :] == seq_idx[:, None]) \
+        & (upos[None, :] <= positions[:, None]) \
+        & (upos[None, :] > positions[:, None] - window) \
+        & (jnp.arange(t)[None, :] < n_valid)
+    sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
+    mn = jnp.maximum(m, sc.max(-1))
+    p = jnp.exp(sc - mn[..., None])
+    corr = jnp.exp(m - mn)
+    l = l * corr + p.sum(-1)
+    acc = acc * corr[..., None] + jnp.einsum(
+        "tngu,und->tngd", p.astype(q.dtype), v_span).astype(jnp.float32)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype).reshape(t, hq * hd)
+
+
+def paged_span_attention_rolling_quant_native(
+    q: jax.Array,
+    k8: jax.Array, ks: jax.Array,
+    v8: jax.Array, vs: jax.Array,
+    k_span: jax.Array,
+    v_span: jax.Array,
+    block_tables: jax.Array,
+    positions: jax.Array,
+    seq_idx: jax.Array,
+    offsets: jax.Array,
+    n_valid: jax.Array,
+    *,
+    window: int,
+    kv_block: int = 512,
+) -> jax.Array:
+    """:func:`packed_span_attention_rolling_quant` through the block table
+    (int8 old-cache source + bf16 intra-span source, per-tile gather).
+    Bit-exact to :func:`paged_span_attention_rolling_quant`."""
+    t, hq, hd = q.shape
+    bs, n_kv = k8.shape[1], k8.shape[2]
+    w_slots = block_tables.shape[1] * bs
+    g = hq // n_kv
+    kv_block = min(kv_block, w_slots)
+    while w_slots % kv_block:
+        kv_block //= 2
+    nb = w_slots // kv_block
+    qg = q.reshape(t, n_kv, g, hd)
+    q8, qs = quantize_kv(qg)
+    scale = hd ** -0.5
+    kf = k8.reshape(-1, n_kv, hd)
+    vf = v8.reshape(-1, n_kv, hd)
+    ksf = ks.reshape(-1, n_kv)
+    vsf = vs.reshape(-1, n_kv)
+    tab = block_tables[seq_idx].astype(jnp.int32)
+    span = jnp.arange(kv_block)
+
+    def cache_body(carry, i):
+        m, l, acc = carry
+        slot = i * kv_block + span
+        kt = _paged_tile(kf, tab, slot, bs)
+        vt = _paged_tile(vf, tab, slot, bs)
+        kst = _paged_tile(ksf, tab, slot, bs).transpose(0, 2, 1)[:, :, None, :]
+        vst = _paged_tile(vsf, tab, slot, bs).transpose(0, 2, 1)[:, :, None, :]
+        stored = offsets[:, None] - 1 - (
+            (offsets[:, None] - 1 - slot[None, :]) % w_slots)
+        mask = (offsets[:, None] >= 1) & (stored >= 0) & (
+            stored > positions[:, None] - window)
+        s32 = jnp.einsum("tngd,tknd->tngk", q8, kt,
+                         preferred_element_type=jnp.int32)
+        sc = s32.astype(jnp.float32) * qs[..., None].astype(jnp.float32) \
+            * kst.astype(jnp.float32) * scale
+        sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
+        mn = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - mn[..., None])
+        corr = jnp.exp(m - mn)
+        l = l * corr + p.sum(-1)
+        pv = p * vst.astype(jnp.float32)
+        p8, ps = quantize_kv(pv)
+        o32 = jnp.einsum("tngk,tknd->tngd", p8, vt,
+                         preferred_element_type=jnp.int32)
+        acc = acc * corr[..., None] + \
+            o32.astype(jnp.float32) * ps[..., None].astype(jnp.float32)
+        return (mn, l, acc), None
+
+    m0 = jnp.full((t, n_kv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((t, n_kv, g), jnp.float32)
+    a0 = jnp.zeros((t, n_kv, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(cache_body, (m0, l0, a0), jnp.arange(nb))
+
+    sc = jnp.einsum("tngd,und->tngu", qg, k_span).astype(jnp.float32) * scale
+    mask = (seq_idx[None, :] == seq_idx[:, None]) \
+        & (positions[None, :] <= positions[:, None]) \
+        & (positions[None, :] > positions[:, None] - window) \
+        & (jnp.arange(t)[None, :] < n_valid)
+    sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
+    mn = jnp.maximum(m, sc.max(-1))
+    p = jnp.exp(sc - mn[..., None])
+    corr = jnp.exp(m - mn)
+    l = l * corr + p.sum(-1)
+    acc = acc * corr[..., None] + jnp.einsum(
+        "tngu,und->tngd", p.astype(q.dtype), v_span).astype(jnp.float32)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype).reshape(t, hq * hd)
+
+
+def use_pallas_paged() -> bool:
+    """Backend choice for the paged execution path: the Pallas kernels
+    (:mod:`repro.kernels.span_attention` paged twins) compile natively on
+    TPU; everywhere else interpret-mode Pallas is orders of magnitude too
+    slow for a hot path, so the bit-exact jnp natives above run instead.
+    ``REPRO_PAGED_KERNELS=pallas|native`` overrides the autodetection."""
+    mode = os.environ.get("REPRO_PAGED_KERNELS", "auto")
+    if mode == "pallas":
+        return True
+    if mode in ("native", "jnp"):
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def paged_span_attention_exec(q, k_cache, v_cache, block_tables, positions,
+                              seq_idx, *, window=0, kv_block=512):
+    """Dispatch :func:`paged_span_attention` semantics to the execution
+    backend (Pallas kernel on TPU, jnp native elsewhere)."""
+    if use_pallas_paged():
+        from repro.kernels import span_attention as ksa
+        return ksa.paged_span_attention(
+            q, k_cache, v_cache, positions, seq_idx, block_tables,
+            window=window, interpret=False)
+    return paged_span_attention_native(
+        q, k_cache, v_cache, block_tables, positions, seq_idx,
+        window=window, kv_block=kv_block)
+
+
+def paged_span_attention_quant_exec(q, k8, ks, v8, vs, block_tables,
+                                    positions, seq_idx, *, kv_block=512):
+    if use_pallas_paged():
+        from repro.kernels import span_attention as ksa
+        return ksa.paged_span_attention_quant(
+            q, k8, ks, v8, vs, positions, seq_idx, block_tables,
+            interpret=False)
+    return paged_span_attention_quant_native(
+        q, k8, ks, v8, vs, block_tables, positions, seq_idx,
+        kv_block=kv_block)
+
+
+def paged_span_attention_rolling_exec(q, k_cache, v_cache, k_span, v_span,
+                                      block_tables, positions, seq_idx,
+                                      offsets, n_valid, *, window,
+                                      kv_block=512):
+    if use_pallas_paged():
+        from repro.kernels import span_attention as ksa
+        return ksa.paged_span_attention_rolling(
+            q, k_cache, v_cache, k_span, v_span, positions, seq_idx,
+            offsets, n_valid, block_tables, window=window, interpret=False)
+    return paged_span_attention_rolling_native(
+        q, k_cache, v_cache, k_span, v_span, block_tables, positions,
+        seq_idx, offsets, n_valid, window=window, kv_block=kv_block)
+
+
+def paged_span_attention_rolling_quant_exec(q, k8, ks, v8, vs, k_span,
+                                            v_span, block_tables, positions,
+                                            seq_idx, offsets, n_valid, *,
+                                            window, kv_block=512):
+    if use_pallas_paged():
+        from repro.kernels import span_attention as ksa
+        return ksa.paged_span_attention_rolling_quant(
+            q, k8, ks, v8, vs, k_span, v_span, positions, seq_idx,
+            offsets, n_valid, block_tables, window=window, interpret=False)
+    return paged_span_attention_rolling_quant_native(
+        q, k8, ks, v8, vs, k_span, v_span, block_tables, positions,
+        seq_idx, offsets, n_valid, window=window, kv_block=kv_block)
 
 
 def fill_rolling_cache(k: jax.Array, window: int) -> jax.Array:

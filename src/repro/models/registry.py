@@ -155,14 +155,15 @@ def build_model(cfg: ArchConfig, shard: Optional[ShardCtx] = None,
     uses_rope = cfg.family not in ("ssm", "audio")
 
     def make_ctx(mode, positions, patches=None, enc_out=None,
-                 seq_idx=None, span_starts=None, n_valid=None, seq_lens=None):
+                 seq_idx=None, span_starts=None, n_valid=None, seq_lens=None,
+                 block_tables=None):
         cos = sin = None
         if uses_rope:
             cos, sin = rope_tables(positions, hd, cfg.rope_theta)
         return Ctx(mode=mode, shard=shard, positions=positions,
                    rope_cos=cos, rope_sin=sin, patches=patches, enc_out=enc_out,
                    seq_idx=seq_idx, span_starts=span_starts, n_valid=n_valid,
-                   seq_lens=seq_lens,
+                   seq_lens=seq_lens, block_tables=block_tables,
                    kv_block=options.kv_block, triangular=options.triangular,
                    fuse_shared_expert=options.fuse_shared_expert,
                    seq_shard=options.seq_shard, kv_quant=options.kv_quant)

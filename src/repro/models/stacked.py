@@ -39,6 +39,10 @@ class Ctx:
     seq_lens: Optional[jax.Array] = None
     patches: Optional[jax.Array] = None    # vlm cross-attn memory [B, P, d]
     enc_out: Optional[jax.Array] = None    # whisper encoder output [B, Se, d]
+    # paged KV layout (decode/chunk): per-row physical block ids [B, nb];
+    # when set, cache leaves are block-major [n_blocks, block_size, ...] and
+    # attention reads/writes through the table (docs/memory.md)
+    block_tables: Optional[jax.Array] = None
     kv_block: int = 512
     triangular: bool = False
     fuse_shared_expert: bool = False

@@ -107,6 +107,41 @@ def self_attn_block(p, x, ctx: Ctx, cache, cfg: ArchConfig, *, causal=True,
             q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
         b = x.shape[0]
         slot = ctx.positions % w if w else ctx.positions
+        if ctx.block_tables is not None:
+            # paged KV: cache leaves are block-major [n_blocks, bs, ...].
+            # Scatter ONLY the new token's physical (block, offset) slot —
+            # the dirty-slot write-back — then attend the per-row gathered
+            # view (decode's full softmax reads every slot anyway; XLA
+            # fuses the gather, and masked trash contributes exactly 0.0).
+            tables = ctx.block_tables                    # [B, nb]
+            bs = cache["k"].shape[1]
+            blk = jnp.minimum(slot // bs, tables.shape[1] - 1)
+            phys = tables[jnp.arange(b), blk]
+            off = slot % bs
+            if "ks" in cache:
+                k8, ks1 = attn.quantize_kv(k)
+                v8, vs1 = attn.quantize_kv(v)
+                new_cache = {
+                    "k": cache["k"].at[phys, off].set(k8),
+                    "v": cache["v"].at[phys, off].set(v8),
+                    "ks": cache["ks"].at[phys, off].set(ks1),
+                    "vs": cache["vs"].at[phys, off].set(vs1),
+                }
+                o = attn.decode_attention_quant(
+                    q,
+                    attn.gather_paged_cache(new_cache["k"], tables),
+                    attn.gather_paged_cache(new_cache["ks"], tables),
+                    attn.gather_paged_cache(new_cache["v"], tables),
+                    attn.gather_paged_cache(new_cache["vs"], tables),
+                    ctx.positions, rolling_window=w)
+                return x + o @ p["wo"], new_cache
+            kc = cache["k"].at[phys, off].set(k)
+            vc = cache["v"].at[phys, off].set(v)
+            o = attn.decode_attention(
+                q, attn.gather_paged_cache(kc, tables),
+                attn.gather_paged_cache(vc, tables),
+                ctx.positions, rolling_window=w)
+            return x + o @ p["wo"], {"k": kc, "v": vc}
         rows = jnp.arange(b)
         if "ks" in cache:  # §Perf C1: int8 cache, s8xs8 attention dots
             k8, ks1 = attn.quantize_kv(k)
@@ -153,6 +188,37 @@ def self_attn_block(p, x, ctx: Ctx, cache, cfg: ArchConfig, *, causal=True,
             # earlier span tokens still need (see attention.py docstrings).
             offs = ctx.span_starts[si]                   # [T] row span start
             n_valid = ctx.n_valid if ctx.n_valid is not None else x.shape[0]
+            if ctx.block_tables is not None:
+                # paged rolling: attend the old physical cache through the
+                # block table (plus the span's fresh K/V), THEN scatter
+                # only the touched (block, offset) slots — scatter-first
+                # would overwrite window entries earlier span tokens need.
+                tables = ctx.block_tables
+                bs = cache["k"].shape[1]
+                slot = ctx.positions % w
+                blk = jnp.minimum(slot // bs, tables.shape[1] - 1)
+                phys = tables[si, blk]
+                off = slot % bs
+                if "ks" in (cache or {}):
+                    o = attn.paged_span_attention_rolling_quant_exec(
+                        q, cache["k"], cache["ks"], cache["v"], cache["vs"],
+                        k, v, tables, ctx.positions, si, offs, n_valid,
+                        window=w)
+                    k8, ks1 = attn.quantize_kv(k)
+                    v8, vs1 = attn.quantize_kv(v)
+                    new_cache = {
+                        "k": cache["k"].at[phys, off].set(k8),
+                        "v": cache["v"].at[phys, off].set(v8),
+                        "ks": cache["ks"].at[phys, off].set(ks1),
+                        "vs": cache["vs"].at[phys, off].set(vs1),
+                    }
+                    return x + o @ p["wo"], new_cache
+                o = attn.paged_span_attention_rolling_exec(
+                    q, cache["k"], cache["v"], k, v, tables, ctx.positions,
+                    si, offs, n_valid, window=w)
+                kc = cache["k"].at[phys, off].set(k)
+                vc = cache["v"].at[phys, off].set(v)
+                return x + o @ p["wo"], {"k": kc, "v": vc}
             if "ks" in (cache or {}):
                 o = attn.packed_span_attention_rolling_quant(
                     q, cache["k"], cache["ks"], cache["v"], cache["vs"],
@@ -176,6 +242,34 @@ def self_attn_block(p, x, ctx: Ctx, cache, cfg: ArchConfig, *, causal=True,
             slot = ctx.positions % w
             kc = shard.constrain(cache["k"].at[si, slot].set(k), ca)
             vc = shard.constrain(cache["v"].at[si, slot].set(v), ca)
+            return x + o @ p["wo"], {"k": kc, "v": vc}
+        if ctx.block_tables is not None:
+            # paged full-cache chunk: dirty-slot scatter into the physical
+            # blocks the span touches, then attend straight through the
+            # table (per-tile gather, no [B, nb*bs] view).  Bucket-padding
+            # duplicates write identical (block, offset, value) triples.
+            tables = ctx.block_tables
+            bs = cache["k"].shape[1]
+            blk = jnp.minimum(ctx.positions // bs, tables.shape[1] - 1)
+            phys = tables[si, blk]
+            off = ctx.positions % bs
+            if "ks" in (cache or {}):
+                k8, ks1 = attn.quantize_kv(k)
+                v8, vs1 = attn.quantize_kv(v)
+                new_cache = {
+                    "k": cache["k"].at[phys, off].set(k8),
+                    "v": cache["v"].at[phys, off].set(v8),
+                    "ks": cache["ks"].at[phys, off].set(ks1),
+                    "vs": cache["vs"].at[phys, off].set(vs1),
+                }
+                o = attn.paged_span_attention_quant_exec(
+                    q, new_cache["k"], new_cache["ks"], new_cache["v"],
+                    new_cache["vs"], tables, ctx.positions, si)
+                return x + o @ p["wo"], new_cache
+            kc = cache["k"].at[phys, off].set(k)
+            vc = cache["v"].at[phys, off].set(v)
+            o = attn.paged_span_attention_exec(q, kc, vc, tables,
+                                               ctx.positions, si)
             return x + o @ p["wo"], {"k": kc, "v": vc}
         if "ks" in (cache or {}):
             k8, ks1 = attn.quantize_kv(k)

@@ -147,10 +147,23 @@ class BlockSpaceManager:
     ``slot_cap`` bounds the logical slots per sequence for sliding-window
     models with rolling caches (slot = pos %% W): a sequence never needs
     more than ``ceil(W / block_size)`` blocks regardless of length.
+
+    ``max_slots``/``max_table_buckets`` shape the *ladder* of padded
+    table widths ``padded_tables`` may emit.  Each distinct width is one
+    XLA compile of the whole stage function, so the engine wants a
+    handful of steady-state widths, not one per pow2 growth step.  The
+    ladder is the powers of two strictly below the per-sequence block
+    ceiling plus the exact ceiling itself (``slot_cap // block_size``
+    for rolling models — the rolling kernels' stored-position modulus
+    requires a wrapped row's width to be *exactly* the window), and
+    ``max_table_buckets`` keeps only the largest N rungs.  With neither
+    bound set the ladder is unbounded pow2s (the pre-capping behavior).
     """
 
     def __init__(self, n_blocks: int, block_size: int,
-                 slot_cap: Optional[int] = None):
+                 slot_cap: Optional[int] = None, *,
+                 max_slots: Optional[int] = None,
+                 max_table_buckets: Optional[int] = None):
         if slot_cap is not None and slot_cap % block_size:
             raise ValueError(
                 f"block_size {block_size} must divide the sliding window "
@@ -159,6 +172,28 @@ class BlockSpaceManager:
         self.slot_cap = slot_cap
         self.alloc = PagedAllocator(n_blocks, block_size)
         self._lock = threading.Lock()
+        if slot_cap is not None:
+            cap = slot_cap // block_size
+        elif max_slots is not None:
+            cap = -(-max_slots // block_size)
+        else:
+            cap = None
+        self._ladder: Optional[List[int]] = None
+        if cap is not None:
+            ladder = []
+            w = 1
+            while w < cap:
+                ladder.append(w)
+                w <<= 1
+            ladder.append(cap)
+            if max_table_buckets is not None and max_table_buckets >= 1:
+                ladder = ladder[-max_table_buckets:]
+            self._ladder = ladder
+
+    @property
+    def table_widths(self) -> Optional[List[int]]:
+        """The padded-table width ladder (None = unbounded pow2s)."""
+        return list(self._ladder) if self._ladder is not None else None
 
     # -- budget arithmetic ---------------------------------------------------
     @property
@@ -221,22 +256,26 @@ class BlockSpaceManager:
     def padded_tables(self, seq_ids: Sequence[int]) -> np.ndarray:
         """[B, nb] int32 block tables padded with the trash block.
 
-        ``nb`` is the batch's max table length rounded up to a power of two
-        (capped at the full-window block count) so the engine's gathered
-        cache view compiles one executable per (batch, nb) pair instead of
-        one per token-growth step.  A sequence with no table (released
-        between schedule and prepare — e.g. preempted with an iteration in
-        flight) pads to an all-trash row: its writes land in the trash
-        block and its sampled token is discarded by the scheduler."""
+        ``nb`` is the smallest rung of the width ladder covering the
+        batch's longest table (unbounded pow2 rounding when no ladder is
+        configured), so the engine compiles one executable per
+        (batch, nb) pair — and with ``max_table_buckets`` set, only a
+        capped handful of nb values ever occur.  A sequence with no
+        table (released between schedule and prepare — e.g. preempted
+        with an iteration in flight) pads to an all-trash row: its
+        writes land in the trash block and its sampled token is
+        discarded by the scheduler."""
         with self._lock:
             tables = [self.alloc.table(sid) if self.alloc.has(sid) else []
                       for sid in seq_ids]
             nb = max(1, max((len(t) for t in tables), default=1))
-            nbp = 1
-            while nbp < nb:
-                nbp <<= 1
-            if self.slot_cap is not None:
-                nbp = min(nbp, self.slot_cap // self.block_size)
+            if self._ladder is not None:
+                nbp = next((w for w in self._ladder if w >= nb),
+                           self._ladder[-1])
+            else:
+                nbp = 1
+                while nbp < nb:
+                    nbp <<= 1
             nbp = max(nbp, nb)
             out = np.full((len(tables), nbp), self.pad_block, np.int32)
             for i, t in enumerate(tables):

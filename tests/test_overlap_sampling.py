@@ -1,0 +1,97 @@
+"""Overlapped CPU sampling (sampling iteration n on a host worker while
+the device runs n+1): the FIFO worker must preserve sampler-call order —
+token streams are IDENTICAL with the overlap on or off — and must surface
+sampler crashes to the serving thread instead of hanging the gate."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import EngineConfig, NaivePPEngine, SiPipeEngine
+from repro.core.sampler import SamplingWorker
+from repro.core.sampling_params import SamplingParams
+from repro.models import ShardCtx, build_model
+
+
+# ---------------------------------------------------------------------------
+# SamplingWorker unit behavior
+# ---------------------------------------------------------------------------
+
+def test_worker_preserves_submission_order():
+    seen = []
+    w = SamplingWorker(lambda sched, logits: seen.append(sched))
+    for i in range(64):
+        w.submit(i, None)
+    w.stop()
+    assert seen == list(range(64))
+
+
+def test_worker_surfaces_crashes():
+    def boom(sched, logits):
+        raise ValueError("bad sampler")
+
+    w = SamplingWorker(boom)
+    w.submit(0, None)
+    deadline = time.monotonic() + 5
+    while time.monotonic() < deadline:
+        try:
+            w.check()
+            time.sleep(0.005)
+        except RuntimeError as e:
+            assert isinstance(e.__cause__, ValueError)
+            break
+    else:
+        pytest.fail("worker crash never surfaced")
+    # later submissions drain without re-raising inside the thread
+    w.submit(1, None)
+    w.stop()
+
+
+# ---------------------------------------------------------------------------
+# Engine: token-identical streams with the overlap on/off
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_config("stablelm-1.6b-smoke")
+    model = build_model(cfg, ShardCtx.single())
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _run(model, params, vocab, *, overlap, engine_cls=SiPipeEngine,
+         chunk=None):
+    rng = np.random.default_rng(5)
+    prompts = [list(rng.integers(2, vocab, size=n)) for n in (11, 6, 9)]
+    eng = engine_cls(model, params, EngineConfig(
+        pp_degree=2, max_batch=2, max_seq_len=64, n_samplers=2,
+        prefill_chunk_tokens=chunk, overlap_sampling=overlap, seed=7))
+    sp = SamplingParams(temperature=0.8, top_k=12, top_p=0.9,
+                        frequency_penalty=0.2, max_new_tokens=6)
+    for p in prompts:
+        eng.add_request(p, sp)
+    done = sorted(eng.run(), key=lambda s: s.seq_id)
+    return [s.output_ids for s in done], eng
+
+
+@pytest.mark.parametrize("chunk", [None, 8])
+def test_overlap_token_identical(model_and_params, chunk):
+    cfg, model, params = model_and_params
+    on, eng_on = _run(model, params, cfg.vocab_size, overlap=True,
+                      chunk=chunk)
+    off, eng_off = _run(model, params, cfg.vocab_size, overlap=False,
+                        chunk=chunk)
+    assert eng_on.sampling_worker is not None
+    assert eng_off.sampling_worker is None
+    assert on == off
+    assert all(o for o in on)
+
+
+def test_naive_engine_forces_overlap_off(model_and_params):
+    cfg, model, params = model_and_params
+    _, eng = _run(model, params, cfg.vocab_size, overlap=True,
+                  engine_cls=NaivePPEngine)
+    assert eng.cfg.overlap_sampling is False
+    assert eng.sampling_worker is None
