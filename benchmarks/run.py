@@ -757,6 +757,128 @@ def bench_paged() -> None:
 
 
 # ---------------------------------------------------------------------------
+# Prefix caching + CoW forks (shared-prefix traffic on the real engine)
+# ---------------------------------------------------------------------------
+
+def bench_prefix() -> None:
+    """Shared-prefix KV reuse priced on the real engine, recorded in
+    BENCH_prefix.json.  Two stories:
+
+    TTFT COLLAPSE: a warm request whose prompt shares its leading full
+    blocks with a cached prefix prefills only the unshared tail — its
+    TTFT drops to roughly tail/prompt of the cold TTFT.  Measured
+    cold-vs-warm on the SAME engine after a shape-warmup run, so XLA
+    compiles pollute neither number.
+
+    SUBLINEAR BLOCKS: K concurrent requests over one shared prefix hold
+    the prefix blocks ONCE (refcounted) plus per-request unique tails,
+    not K full copies.  Peak live blocks are tracked per step
+    (pin-only cached blocks excluded: they are reclaimable capacity,
+    not working set) against the naive K * blocks_for(len) footprint.
+    A parallel-sampling (n=K) request is priced the same way: one
+    prompt, CoW-forked decode tails."""
+    import json
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.engine import EngineConfig, SiPipeEngine
+    from repro.core.sampling_params import SamplingParams
+    from repro.models import ShardCtx, build_model
+
+    ARCH, PP, MSL, BS, CHUNK, N_NEW = "stablelm-1.6b-smoke", 2, 64, 8, 8, 6
+    BASE, TAIL, K = 48, 4, 4          # 6 shared full blocks + unique tails
+    cfg = get_config(ARCH)
+    model = build_model(cfg, ShardCtx.single())
+    params = model.init(jax.random.key(1))
+    rng = np.random.default_rng(2)
+
+    def mk(n):
+        return list(map(int, rng.integers(2, cfg.vocab_size, size=n)))
+
+    base_a, base_b = mk(BASE), mk(BASE)
+    eng = SiPipeEngine(model, params, EngineConfig(
+        pp_degree=PP, max_batch=K, max_seq_len=MSL, n_samplers=2,
+        prefill_chunk_tokens=CHUNK, scheduling_policy="chunked",
+        kv_layout="paged", kv_block_size=BS))
+    kvm = eng.kv_manager
+
+    def drive(reqs):
+        """Run to drain; returns (rids, peak live blocks)."""
+        rids = [eng.add_request(p, sp) for p, sp in reqs]
+        peak = 0
+        while eng.has_work:
+            eng.step()
+            live = (kvm.n_blocks - kvm.alloc.free_blocks
+                    - kvm.reclaimable_cached_blocks)
+            peak = max(peak, live)
+        return rids, peak
+
+    def ttft(rid):
+        return eng.metrics()["requests"][rid]["ttft_s"]
+
+    sp = SamplingParams(greedy=True, max_new_tokens=N_NEW)
+    drive([(base_a + mk(TAIL), sp)])          # shape warmup + seeds base_a
+    [cold], _ = drive([(base_b + mk(TAIL), sp)])   # fresh prefix: cold
+    warm_rids = []
+    for _ in range(3):                        # warm: base_b is now cached
+        [r], _ = drive([(base_b + mk(TAIL), sp)])
+        warm_rids.append(r)
+    cold_ttft = ttft(cold)
+    warm_ttft = float(np.mean([ttft(r) for r in warm_rids]))
+    emit("prefix/cold_ttft", cold_ttft * 1e6, f"prompt={BASE + TAIL}")
+    emit("prefix/warm_ttft", warm_ttft * 1e6,
+         f"ratio={warm_ttft / cold_ttft:.3f} cached_tokens={BASE}")
+
+    # -- sublinear blocks: K concurrent shared-prefix requests
+    naive = K * kvm.blocks_for(BASE + TAIL + N_NEW)
+    reqs, shared_peak = drive([(base_b + mk(TAIL), sp) for _ in range(K)])
+    emit("prefix/shared_blocks_peak", 0.0,
+         f"peak={shared_peak} naive={naive} "
+         f"ratio={shared_peak / naive:.2f}")
+    # -- same shape via parallel sampling: one prompt, n=K fork tails
+    [fr], fork_peak = drive([(base_a + mk(TAIL),
+                              SamplingParams(greedy=True,
+                                             max_new_tokens=N_NEW, n=K))])
+    emit("prefix/fork_blocks_peak", 0.0,
+         f"peak={fork_peak} naive={naive} ratio={fork_peak / naive:.2f}")
+
+    m = eng.metrics()
+    eng.shutdown()
+    with open("BENCH_prefix.json", "w") as f:
+        json.dump({
+            "workload": {"arch": ARCH, "pp": PP, "max_seq_len": MSL,
+                         "block_size": BS, "chunk_tokens": CHUNK,
+                         "base_tokens": BASE, "tail_tokens": TAIL,
+                         "max_new_tokens": N_NEW, "k": K,
+                         "policy": "chunked"},
+            "ttft": {"cold_s": cold_ttft, "warm_s": warm_ttft,
+                     "warm_over_cold": warm_ttft / cold_ttft},
+            "blocks": {"naive_k_times_full": naive,
+                       "shared_prefix_peak": shared_peak,
+                       "fork_n_peak": fork_peak,
+                       "shared_over_naive": shared_peak / naive,
+                       "fork_over_naive": fork_peak / naive},
+            "counters": {k: v for k, v in m.items()
+                         if k.startswith(("kv_prefix", "kv_cow",
+                                          "kv_fork", "kv_blocks"))},
+            "note": "warm TTFT gate < 0.5x cold: a cache-hit request "
+                    "prefills only its unshared tail.  blocks gates "
+                    "< 0.7x naive: K streams over one prefix hold the "
+                    "shared blocks once (refcounted), unique tails per "
+                    "stream — sublinear in K.",
+        }, f, indent=2)
+    assert m["kv_prefix_hits"] >= K + 3, "warm admissions missed the cache"
+    assert warm_ttft < 0.5 * cold_ttft, \
+        f"warm TTFT {warm_ttft:.4f}s not < 0.5x cold {cold_ttft:.4f}s"
+    assert shared_peak < 0.7 * naive, \
+        f"shared-prefix peak {shared_peak} not sublinear vs naive {naive}"
+    assert fork_peak < 0.7 * naive, \
+        f"fork peak {fork_peak} not sublinear vs naive {naive}"
+    emit("prefix/bench_json", 0.0, "wrote BENCH_prefix.json")
+
+
+# ---------------------------------------------------------------------------
 # Real-engine end-to-end (CPU-scale, structural validation)
 # ---------------------------------------------------------------------------
 
@@ -832,6 +954,8 @@ def main() -> None:
         bench_serving()
     if want("paged"):
         bench_paged()
+    if want("prefix"):
+        bench_prefix()
     if want("engine"):
         bench_engine_e2e()
     if want("kernels"):

@@ -241,6 +241,12 @@ class EngineConfig:
     # (each width is one XLA compile of the stage step — see
     # BlockSpaceManager's ladder); None = unbounded pow2 widths
     max_table_buckets: Optional[int] = 2
+    # hash-based prompt-prefix caching (paged layout, non-rolling caches
+    # only — silently off otherwise): new requests whose leading full
+    # prompt blocks hash-match cached blocks share them by refcount and
+    # prefill only the unshared tail; see docs/memory.md "Prefix caching
+    # & CoW forks"
+    enable_prefix_caching: bool = True
     # sample iteration n on a host-side worker thread while the device
     # runs n+1 (SiPipe: sampling off the critical path); token streams
     # are identical to synchronous sampling (single FIFO worker + the
@@ -326,9 +332,24 @@ class _StageWorker:
                              else len(sched.seq_ids))
 
     # -- device executor side -----------------------------------------------
+    def apply_copies(self, copies: np.ndarray):
+        """Apply queued CoW block copies [K, 2] (src, dst) to this stage's
+        physical cache.  Runs on the stage's device thread immediately
+        before the iteration that drained them: per-stage FIFO puts it
+        after every in-flight write to ``src`` (shared blocks are never
+        written, so src content is stable) and before any reader of
+        ``dst``.  CoW is rare (fork divergence, growth into a shared
+        tail), so the un-jitted gather/scatter is fine here."""
+        src = jnp.asarray(copies[:, 0])
+        dst = jnp.asarray(copies[:, 1])
+        self.cache = jax.tree.map(lambda c: c.at[:, dst].set(c[:, src]),
+                                  self.cache)
+
     def _execute(self, desc: ModelInputDescriptor, bufs: Dict[str, np.ndarray]):
         t0 = time.monotonic()
         stage, eng = self.stage, self.engine
+        if eng.paged and desc.sched.block_copies is not None:
+            self.apply_copies(desc.sched.block_copies)
         x_in = ((jnp.asarray(bufs["pack_tokens"]) if desc.width > 1
                  else jnp.asarray(bufs["tokens"])) if stage.is_first
                 else eng.recv_hidden(stage.index, desc.iteration))
@@ -476,19 +497,28 @@ class PPEngineBase:
             self.kv_manager = BlockSpaceManager(
                 n_blocks, cfg.kv_block_size, slot_cap=window,
                 max_slots=cfg.max_seq_len,
-                max_table_buckets=cfg.max_table_buckets)
+                max_table_buckets=cfg.max_table_buckets,
+                # rolling caches index slots by pos % window, so a block's
+                # content is position-dependent — not shareable
+                prefix_cache=cfg.enable_prefix_caching and window is None)
             if n_blocks < self.kv_manager.blocks_for(cfg.max_seq_len):
                 raise ValueError(
                     f"kv_blocks={n_blocks} x block_size={cfg.kv_block_size}"
                     " cannot hold even one max_seq_len sequence — "
                     "preemption could never free enough")
+        # the id allocator doubles as the scheduler's fork-child id source
+        # (SamplingParams.n > 1): child seq ids draw from the same
+        # monotonic space as request ids, so they can never collide with
+        # a future request's worker-side state
+        self._alloc = RequestIdAllocator()
         self.scheduler = Scheduler(max_batch=cfg.max_batch, pp_degree=cfg.pp_degree,
                                    max_seq_len=cfg.max_seq_len,
                                    token_budget=cfg.prefill_chunk_tokens,
                                    policy=cfg.scheduling_policy,
                                    hysteresis_tokens=cfg.phase_hysteresis_tokens,
                                    tpot_slo_s=cfg.tpot_slo_s,
-                                   kv_manager=self.kv_manager)
+                                   kv_manager=self.kv_manager,
+                                   seq_id_fn=self._alloc.next)
         if self.scheduler.chunked and self.arch.family not in ("dense", "moe"):
             raise NotImplementedError(
                 "span scheduling policies (chunked/disaggregated) require "
@@ -539,7 +569,6 @@ class PPEngineBase:
         self._t_last_done = 0.0
         self.t_start = 0.0
         # -- continuous-serving request layer (docs/serving.md) ------------
-        self._alloc = RequestIdAllocator()
         self.requests: Dict[int, Request] = {}        # active only
         self._request_stats: Deque[RequestMetrics] = deque(
             maxlen=cfg.keep_recent_requests)
@@ -676,6 +705,12 @@ class PPEngineBase:
         arrival for latency accounting — trace replays pass the nominal
         arrival time so TTFT/queue-delay include time spent waiting
         outside the engine (e.g. behind a long blocking step)."""
+        if params.n < 1:
+            raise ValueError(f"SamplingParams.n must be >= 1, got {params.n}")
+        if params.n > 1 and not self.paged:
+            raise ValueError(
+                "SamplingParams.n > 1 (parallel sampling) forks the prompt "
+                "KV copy-on-write, which requires kv_layout='paged'")
         rid = self._alloc.next()
         seq = Sequence(rid, list(prompt_ids), params,
                        arrival_t=arrival_t or 0.0)
@@ -684,7 +719,7 @@ class PPEngineBase:
         self._n_submitted += 1
         return rid
 
-    def abort(self, request_id: int) -> bool:
+    def abort(self, request_id: int, fork: Optional[int] = None) -> bool:
         """Cancel a request.  QUEUED requests are dropped immediately;
         RUNNING ones stop decoding at once (in-flight iterations discard
         their sampled column) and their KV row + sampler penalty columns
@@ -692,19 +727,34 @@ class PPEngineBase:
         surviving sequences' tokens are never perturbed.  The final
         ABORTED RequestOutput (with any tokens produced so far) is
         delivered by the next ``step()``.  Returns False when the id is
-        unknown or already finished."""
+        unknown or already finished.
+
+        With parallel sampling the abort covers the primary AND every
+        fork child; ``fork=i`` (1-based completion index) instead aborts
+        only that one fork — its refcounted blocks are released (shared
+        ones by refcount decrement only) while siblings keep decoding
+        undisturbed."""
         req = self.requests.get(request_id)
         if req is None:
             return False
-        seq = self.scheduler.abort(request_id)
-        if seq is None:                      # already finished/aborted
-            return False
-        if any(request_id in d.seq_ids for d in self._inflight):
-            self._pending_release.add(request_id)
+        if fork is not None:
+            if fork < 1 or fork > len(req.forks):
+                return False
+            targets = [req.forks[fork - 1]]
         else:
-            self._release_worker_state(request_id)
+            targets = req.all_seqs
+        any_aborted = False
+        for seq in targets:
+            if self.scheduler.abort(seq.seq_id) is None:
+                continue      # already finished (or never entered: a
+            any_aborted = True  # finished-at-spawn fork child)
+            sid = seq.seq_id
+            if any(sid in d.seq_ids for d in self._inflight):
+                self._pending_release.add(sid)
+            else:
+                self._release_worker_state(sid)
         self._reap_aborted()
-        return True
+        return any_aborted
 
     @property
     def has_work(self) -> bool:
@@ -751,14 +801,30 @@ class PPEngineBase:
 
     def _admit_and_prefill(self, sched: SchedulingOutput):
         """Prefill newly admitted sequences through all stages."""
+        if self.paged and sched.block_copies is not None:
+            # CoW copies ride the admitting sched; the monolithic path
+            # drained every in-flight iteration before this call, so the
+            # inline application cannot race the device threads
+            for w in self.stages:
+                w.apply_copies(sched.block_copies)
+        # fork children skip the prefill pass entirely: their prompt KV
+        # already lives in the shared blocks (the lazy seq-cache admission
+        # in step() registers their worker-side handles)
         new = [sid for sid in sched.seq_ids
-               if self.seq_cache.lookup(sid) is None]
+               if self.seq_cache.lookup(sid) is None
+               and not self.scheduler.seqs[sid].forked]
         if not new:
             return
         seqs = [self.scheduler.seqs[s] for s in new]
         rows = np.array([self.seq_cache.admit(s.seq_id, len(s.prompt_ids)).cache_row
                          for s in seqs], np.int32)
-        tables = self.kv_manager.padded_tables(new) if self.paged else None
+        # mask_shared: the monolithic prefill recomputes the WHOLE prompt
+        # (prefill_fn cannot resume mid-prompt from cache), so a
+        # prefix-cache hit's shared blocks — and any fork-shared block —
+        # are write-masked to the trash block; the recomputed values are
+        # bit-identical to the cached ones, only the write is suppressed
+        tables = (self.kv_manager.padded_tables(new, mask_shared=True)
+                  if self.paged else None)
         max_len = max(s.length for s in seqs)
         toks = np.zeros((len(seqs), max_len), np.int32)
         for i, s in enumerate(seqs):
@@ -889,19 +955,54 @@ class PPEngineBase:
         self._it = it + 1
         return self._drain_outputs()
 
+    def _attach_forks(self):
+        """Adopt the fork children the scheduler spawned since the last
+        step into their parent requests (per-fork output streams)."""
+        for child in self.scheduler.drain_spawned_forks():
+            req = self.requests.get(child.fork_parent)
+            if req is None:
+                # parent request already retired — defensive: abort the
+                # orphan and reclaim whatever it holds
+                if child.status not in (SeqStatus.FINISHED,
+                                        SeqStatus.ABORTED):
+                    self.scheduler.abort(child.seq_id)
+                self._release_worker_state(child.seq_id)
+                continue
+            req.forks.append(child)
+            req.fork_streamed.append(0)
+
     def _drain_outputs(self) -> List[RequestOutput]:
         """Emit the incremental output of every request that progressed;
         retire requests whose final increment is being delivered."""
+        from repro.core.request import ForkOutput
+
+        self._attach_forks()
         outs: List[RequestOutput] = []
         for rid in list(self.requests):
             req = self.requests[rid]
             seq = req.seq
             status = seq.status
-            finished = status in (SeqStatus.FINISHED, SeqStatus.ABORTED)
-            if finished and rid in self._pending_release:
+            primary_done = status in (SeqStatus.FINISHED, SeqStatus.ABORTED)
+            # the request closes when the primary AND every fork are done
+            # — and, for n > 1, only once the spawned children have been
+            # attached (the spawn happens with the primary's first token;
+            # a pre-first-token abort legitimately closes fork-less)
+            if primary_done and seq.forks_spawned \
+                    and len(req.forks) < seq.params.n - 1:
+                closed = False           # spawned, not yet drained
+            else:
+                closed = primary_done and all(
+                    f.status in (SeqStatus.FINISHED, SeqStatus.ABORTED)
+                    for f in req.forks)
+            if closed and any(s.seq_id in self._pending_release
+                              for s in req.all_seqs):
                 continue     # aborted but still in flight; emit post-reap
             n = len(seq.output_ids)
-            if n == req.streamed and not finished:
+            fns = [len(f.output_ids) for f in req.forks]
+            progressed = (n > req.streamed
+                          or any(fn > st for fn, st
+                                 in zip(fns, req.fork_streamed)))
+            if not progressed and not closed:
                 continue
             # delta-only emission: copy just the new tokens; the
             # cumulative stream is a zero-copy TokenStream view bounded at
@@ -910,14 +1011,25 @@ class PPEngineBase:
             new = seq.output_ids[req.streamed:n]
             cum = TokenStream(seq.output_ids, n)
             req.streamed = n
-            if not finished:
+            forks = None
+            if req.forks:
+                forks = []
+                for i, (f, fn) in enumerate(zip(req.forks, fns)):
+                    forks.append(ForkOutput(
+                        i + 1, f.output_ids[req.fork_streamed[i]:fn],
+                        TokenStream(f.output_ids, fn),
+                        f.status in (SeqStatus.FINISHED, SeqStatus.ABORTED),
+                        f.finish_reason, f))
+                    req.fork_streamed[i] = fn
+            if not closed:
                 outs.append(RequestOutput(
                     rid, new, cum, False, RequestState.of(seq),
-                    None, None, seq))
+                    None, None, seq, forks=forks))
                 continue
             rm = RequestMetrics.of(seq)
             outs.append(RequestOutput(
-                rid, new, cum, True, rm.state, seq.finish_reason, rm, seq))
+                rid, new, cum, True, rm.state, seq.finish_reason, rm, seq,
+                forks=forks))
             self._retire(rid, req, rm)
         return outs
 
@@ -925,13 +1037,15 @@ class PPEngineBase:
         """Final bookkeeping once a request's last output is delivered."""
         self.requests.pop(rid, None)
         self._request_stats.append(rm)
+        for s in req.all_seqs:
+            if s.status == SeqStatus.FINISHED:
+                self._tokens_finished += len(s.output_ids)
+            # finished sequences released their KV in _on_sampled; strip
+            # sampler penalty columns too so long-run state stays bounded
+            # by the live batch (idempotent with the abort-path release)
+            self._drop_sampler_state(s.seq_id)
         if req.seq.status == SeqStatus.FINISHED:
             self._n_finished += 1
-            self._tokens_finished += len(req.seq.output_ids)
-            # finished sequences released their KV row in _on_sampled;
-            # strip their sampler penalty columns too so long-run state
-            # stays bounded by the live batch
-            self._drop_sampler_state(rid)
         else:
             self._n_aborted += 1
 
@@ -1068,9 +1182,19 @@ class PPEngineBase:
         if self.paged:
             out["kv_block_size"] = self.cfg.kv_block_size
             out["kv_blocks_total"] = self.kv_manager.n_blocks
-            out["kv_blocks_free"] = self.kv_manager.free_blocks
+            # "free" counts reclaimable capacity: the free list PLUS
+            # cached prefix blocks held only by their pin (admission and
+            # growth evict those on demand) — so an idle engine with a
+            # warm prefix cache still reports blocks_free == blocks_total
+            cached = self.kv_manager.reclaimable_cached_blocks
+            out["kv_blocks_free"] = self.kv_manager.free_blocks + cached
+            out["kv_blocks_cached"] = cached
             out["kv_preemptions"] = self.scheduler.n_preemptions
+            out["kv_fork_children"] = self.scheduler.n_forks
+            out["kv_fork_demotions"] = self.scheduler.n_fork_demotions
             out["kv_table_widths"] = self.kv_manager.table_widths
+            for k, v in self.kv_manager.prefix_stats().items():
+                out[f"kv_{k}"] = v
         out.update(self.compile_stats())
         for k, v in self.scheduler.policy.metrics().items():
             out[f"policy_{k}"] = v

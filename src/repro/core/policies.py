@@ -109,9 +109,18 @@ class MonolithicPolicy(SchedulingPolicy):
             seq = s.waiting.popleft()
             seq.mark_running()
             s.kv_admit(seq)                       # paged: reserve blocks
+            # a fork child admits with its prefill already satisfied (its
+            # prompt KV lives in the shared blocks) — it joins as a pure
+            # decode member, no is_prefill pass.  A prefix-cache-hit seq
+            # still runs the full monolithic prefill (prefill_fn is pure
+            # self-attention, it cannot resume mid-prompt from cache); its
+            # recompute is write-masked so shared blocks are never touched
+            # (engine passes mask_shared tables) — memory sharing only.
+            needs_prefill = not seq.prefill_done
             seq.prefilled = seq.prefill_len       # monolithic: all at once
             members.append(seq.seq_id)
-            new_prefill.append(seq.seq_id)
+            if needs_prefill:
+                new_prefill.append(seq.seq_id)
             recomposed = True
         s.slot_members[slot] = members
         if not members:
@@ -178,6 +187,11 @@ class ChunkedPolicy(SchedulingPolicy):
         for sid in members:
             if not emit(s.seqs[sid]):
                 deferred = True
+        # fork children and prefix-cache hits need no special casing here:
+        # kv_admit leaves them prefill_done (fork) or with ``prefilled``
+        # advanced past the cached blocks (hit), and ``emit`` naturally
+        # produces a decode span or a tail-only chunk starting at the
+        # first unshared (block-aligned) token
         while (s.waiting and len(members) < s.max_batch
                and budget_left > 0 and s.can_admit_next()):
             seq = s.waiting.popleft()
@@ -326,7 +340,10 @@ class DisaggregatedPolicy(SchedulingPolicy):
         # prompts (FIFO admission) — a deep queue behind one free seat
         # must not fire the threshold, pause every decode slot, and then
         # flip straight back (phase thrash)
-        waiting_tokens = sum(q.prefill_len
+        # remaining (not total) prefill tokens: a prefix-cache hit's shared
+        # prefix and a fork child's whole prompt cost no prefill compute,
+        # so they must not inflate the pause-the-decodes threshold
+        waiting_tokens = sum(max(0, q.prefill_len - q.prefilled)
                              for q, _ in zip(s.waiting, range(space)))
 
         if self.phase == self.PREFILL:
@@ -371,6 +388,17 @@ class DisaggregatedPolicy(SchedulingPolicy):
         members, recomposed = self._alive_members(s, slot)
 
         if self.phase == self.DECODE:
+            # fork children carry zero prefill tokens — admitting them
+            # mid-decode-phase keeps the pure-1-token invariant (they join
+            # as decode members) and lets parallel-sampling children start
+            # without waiting for the next prefill phase
+            while (s.waiting and s.waiting[0].forked
+                   and len(members) < s.max_batch and s.can_admit_next()):
+                seq = s.waiting.popleft()
+                seq.mark_running()
+                s.kv_admit(seq)
+                members.append(seq.seq_id)
+                recomposed = True
             s.slot_members[slot] = members
             batch_ids = [sid for sid in members if s.seqs[sid].prefill_done]
             if not batch_ids:

@@ -10,8 +10,12 @@ scheduler releases finished sequence state), moves through the
 
 lifecycle, and streams :class:`RequestOutput` increments from
 ``engine.step()`` / ``engine.generate()``.  The underlying ``Sequence``
-remains the unit the scheduler, KV cache and sampler operate on; exactly
-one sequence backs each request (``request_id == seq_id``).
+remains the unit the scheduler, KV cache and sampler operate on; the
+request's *primary* sequence shares its id (``request_id == seq_id``),
+and parallel sampling (``SamplingParams.n > 1``) attaches ``n - 1``
+CoW-forked sibling sequences whose streams ride along as
+:class:`ForkOutput` entries on every increment (docs/memory.md "Prefix
+caching & CoW forks").
 """
 from __future__ import annotations
 
@@ -159,10 +163,18 @@ class Request:
     request_id: int
     seq: Sequence
     streamed: int = 0       # output tokens already emitted via RequestOutput
+    # parallel sampling: the n-1 fork children (scheduler-spawned when the
+    # primary's first token lands) and their per-fork streamed watermarks
+    forks: List[Sequence] = dataclasses.field(default_factory=list)
+    fork_streamed: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def state(self) -> RequestState:
         return RequestState.of(self.seq)
+
+    @property
+    def all_seqs(self) -> List[Sequence]:
+        return [self.seq] + self.forks
 
 
 @dataclasses.dataclass
@@ -186,3 +198,21 @@ class RequestOutput:
     finish_reason: Optional[str] = None
     metrics: Optional[RequestMetrics] = None
     seq: Optional[Sequence] = None      # underlying sequence (offline compat)
+    # parallel sampling (SamplingParams.n > 1): one entry per fork child,
+    # in spawn order — index 0 is the SECOND completion (the primary
+    # sequence's stream stays in the top-level fields, so n == 1 callers
+    # see no change).  ``finished`` above flips only when the primary AND
+    # every fork are done.
+    forks: Optional[List["ForkOutput"]] = None
+
+
+@dataclasses.dataclass
+class ForkOutput:
+    """One fork child's slice of a :class:`RequestOutput` increment."""
+
+    index: int                          # 1-based completion index
+    new_token_ids: List[int]
+    token_ids: Union[List[int], "TokenStream"]
+    finished: bool
+    finish_reason: Optional[str] = None
+    seq: Optional[Sequence] = None

@@ -16,6 +16,10 @@ class SamplingParams:
     max_new_tokens: int = 64
     eos_token_id: int = -1    # -1 = never stop on EOS
     greedy: bool = False
+    # parallel sampling: n completions from one prompt prefill.  n-1
+    # children are CoW-forked off the parent's KV when its first token
+    # lands (docs/memory.md "Prefix caching & CoW forks"); paged KV only.
+    n: int = 1
 
     def needs_penalties(self) -> bool:
         return (

@@ -86,6 +86,13 @@ class SchedulingOutput:
     # a rung of the BlockSpaceManager's capped width ladder, so only a
     # handful of (batch, nb) stage-fn shapes ever compile (docs/memory.md)
     block_tables: Optional[np.ndarray] = None
+    # [K, 2] int32 (src, dst) device-side block copies queued by CoW since
+    # the previous schedule (fork tail-block copies, growth-time CoW of a
+    # shared block).  Every stage applies them to its physical cache
+    # BEFORE executing this iteration: per-stage FIFO puts the copy after
+    # all in-flight writes to ``src`` (shared blocks are never written, so
+    # src content is stable) and before any reader of ``dst``
+    block_copies: Optional[np.ndarray] = None
     # per-seq preemption generation at schedule time: ``complete`` drops a
     # sampled token whose sequence was preempted (and possibly already
     # re-admitted) after this iteration was scheduled — the resumed
@@ -151,7 +158,8 @@ class Scheduler:
                  hysteresis_tokens: Optional[int] = None,
                  tpot_slo_s: Optional[float] = None,
                  keep_finished: int = 1024,
-                 kv_manager=None):
+                 kv_manager=None,
+                 seq_id_fn=None):
         from repro.core.policies import make_policy
 
         self.max_batch = max_batch
@@ -171,6 +179,15 @@ class Scheduler:
         # contiguous row layout, no block accounting)
         self.kv = kv_manager
         self.n_preemptions = 0
+        # parallel sampling (SamplingParams.n > 1): fresh seq ids for fork
+        # children come from the engine's RequestIdAllocator so they can
+        # never collide with future requests; the fallback counter only
+        # serves schedulers constructed without an engine (unit tests)
+        self._seq_id_fn = seq_id_fn
+        self._fallback_id = 1 << 20
+        self.n_forks = 0
+        self.n_fork_demotions = 0
+        self._spawned_forks: List[Sequence] = []  # for the engine to adopt
         self._preempted_pending: List[int] = []   # for the engine to reap
         self._preempt_hold: set = set()   # no re-admission within the call
         self.waiting: Deque[Sequence] = deque()
@@ -222,13 +239,32 @@ class Scheduler:
         head = self.waiting[0]
         if head.seq_id in self._preempt_hold:
             return False       # never re-admit within the evicting call
-        return self.kv.can_admit(head.length)
+        if head.forked and self.kv.has(head.seq_id):
+            return True        # fork child: blocks materialized at spawn
+        return self.kv.can_admit(head.length,
+                                 token_ids=head.prompt_ids + head.output_ids)
 
     def kv_admit(self, seq: Sequence):
         """Reserve KV blocks for an admitted sequence (covers its full
-        prefill target — prompt, or post-preemption token history)."""
-        if self.kv is not None:
-            self.kv.admit(seq.seq_id, seq.length)
+        prefill target — prompt, or post-preemption token history).
+
+        Prefix caching (docs/memory.md): the manager maps the sequence's
+        leading full blocks onto cached physical blocks when their token
+        hashes match — those tokens need no prefill compute, so
+        ``prefilled`` starts past them and span policies chunk only the
+        unshared tail.  A fork child whose blocks were materialized at
+        spawn skips block reservation entirely (its prompt KV already
+        lives in the shared blocks)."""
+        if self.kv is None:
+            return
+        if seq.forked and self.kv.has(seq.seq_id):
+            seq.prefilled = seq.prefill_len
+            return
+        cached = self.kv.admit(seq.seq_id, seq.length,
+                               token_ids=seq.prompt_ids + seq.output_ids)
+        seq.cached_prefix = cached
+        if cached > seq.prefilled:
+            seq.prefilled = cached
 
     def _lowest_priority_running(self) -> Optional[int]:
         """Preemption victim: the latest-arrived RUNNING sequence that
@@ -250,6 +286,10 @@ class Scheduler:
         seq.prefilled = 0
         seq.prefill_target = seq.length
         seq.preemptions += 1
+        # losing the blocks voids any shared placement: the resume is a
+        # plain recompute (re-admission may still prefix-cache-hit)
+        seq.forked = False
+        seq.cached_prefix = 0
         self.kv.release(victim)
         for m in self.slot_members:
             if victim in m:
@@ -273,6 +313,11 @@ class Scheduler:
             if seq.status != SeqStatus.RUNNING:
                 continue       # evicted as a victim earlier in this loop
             while not self.kv.ensure(sid, seq.length):
+                # cheapest relief first: demote a not-yet-admitted fork
+                # child back to recompute (frees its CoW tail block and
+                # drops shared refs) before evicting a RUNNING sequence
+                if self._demote_waiting_fork():
+                    continue
                 victim = self._lowest_priority_running()
                 if victim is None:
                     break
@@ -280,11 +325,88 @@ class Scheduler:
                 if victim == sid:
                     break
 
+    def _demote_fork(self, seq: Sequence):
+        """Un-fork a child: release its (mostly shared) block table and
+        fall back to the preemption-style recompute path — on admission it
+        prefills its full history (prompt + first token) from scratch,
+        bit-exact under greedy.  Keeps its queue position."""
+        if self.kv is not None:
+            self.kv.release(seq.seq_id)
+        seq.forked = False
+        seq.cached_prefix = 0
+        seq.prefilled = 0
+        seq.prefill_target = seq.length
+        self.n_fork_demotions += 1
+
+    def _demote_waiting_fork(self) -> bool:
+        """Demote the most recently spawned WAITING fork child, if any."""
+        for seq in reversed(self.waiting):
+            if seq.forked and seq.status == SeqStatus.WAITING:
+                self._demote_fork(seq)
+                return True
+        return False
+
     def drain_preempted(self) -> List[int]:
         """Hand the engine the sequences preempted since the last drain
         (it drops their worker-side handles; blocks are already free)."""
         out, self._preempted_pending = self._preempted_pending, []
         return out
+
+    # -- parallel sampling (SamplingParams.n > 1) ----------------------------
+    def _spawn_forks(self, parent: Sequence, tok: int, now: float):
+        """Materialize ``n - 1`` CoW fork children off the parent's prompt
+        KV (called under ``_mutex`` from ``complete`` when the parent's
+        first token lands).  Each child adopts the parent's block table by
+        refcount (``kv.fork``) and immediately CoWs its tail block
+        (``kv.ensure`` — the child's first decode writes slot
+        ``prompt_len``, which lives in a shared block): after spawn no
+        decode ever writes a block another sequence reads.  When even the
+        one CoW block cannot be found, the child is demoted to
+        resume-by-recompute instead of failing.  Children enter the FRONT
+        of the waiting queue; a child whose single sampled token already
+        finishes it (``max_new_tokens == 1`` or instant EOS) never touches
+        the allocator at all."""
+        parent.forks_spawned = True
+        for _ in range(parent.params.n - 1):
+            if self._seq_id_fn is not None:
+                cid = self._seq_id_fn()
+            else:
+                self._fallback_id = max(self._fallback_id,
+                                        max(self.seqs, default=0) + 1)
+                cid = self._fallback_id
+                self._fallback_id += 1
+            child = Sequence(seq_id=cid,
+                             prompt_ids=list(parent.prompt_ids),
+                             params=parent.params,
+                             arrival_t=parent.arrival_t,
+                             fork_parent=parent.seq_id)
+            child.first_sched_t = parent.first_sched_t
+            self.n_forks += 1
+            if child.append(tok, now):       # finished on its first token
+                self.finished.append(child)
+                self._spawned_forks.append(child)
+                continue
+            child.prefilled = parent.prompt_len
+            if self.kv is not None and self.kv.fork(parent.seq_id, cid):
+                child.forked = True
+                child.cached_prefix = parent.prompt_len
+                if not self.kv.ensure(cid, child.length):
+                    self._demote_fork(child)
+            else:
+                # contiguous layout / parent blocks already gone: full
+                # recompute of the (prompt + first token) history
+                child.prefilled = 0
+                child.prefill_target = child.length
+            self.seqs[cid] = child
+            self.waiting.appendleft(child)
+            self._spawned_forks.append(child)
+
+    def drain_spawned_forks(self) -> List[Sequence]:
+        """Hand the engine the fork children spawned since the last drain
+        (it attaches them to the parent's Request for per-fork streams)."""
+        with self._mutex:
+            out, self._spawned_forks = self._spawned_forks, []
+            return out
 
     # -- iteration dispatch ---------------------------------------------------
     def schedule(self, iteration: Optional[int] = None) -> Optional[SchedulingOutput]:
@@ -295,6 +417,17 @@ class Scheduler:
         if self.kv is not None:
             self._preempt_hold.clear()
             with self._mutex:      # vs complete() appending on device threads
+                if self.kv.prefix_enabled:
+                    # publish full prompt blocks whose KV writes were
+                    # issued in STRICTLY EARLIER iterations into the
+                    # prefix index: per-stage FIFO means those writes
+                    # execute on every stage before any iteration
+                    # scheduled from here on can read the shared blocks
+                    for sid, q in self.seqs.items():
+                        if q.status == SeqStatus.RUNNING and not q.forked:
+                            self.kv.register_prefix(
+                                sid, q.prompt_ids,
+                                min(q.prefilled, q.prompt_len))
                 self._ensure_block_capacity(it % self.p)
         out = self.policy.schedule(self, it)
         if out is not None:
@@ -307,6 +440,7 @@ class Scheduler:
                 # member's preemption generation, so completions of
                 # iterations scheduled before an eviction are dropped
                 out.block_tables = self.kv.padded_tables(out.seq_ids)
+                out.block_copies = self.kv.drain_copies()
                 out.epochs = [self.seqs[sid].preemptions
                               for sid in out.seq_ids]
         self._purge_retired()
@@ -383,7 +517,17 @@ class Scheduler:
                     continue   # scheduled before an eviction: stale token
                 if seq.last_token_t is not None:
                     self.tpot_samples.append(now - seq.last_token_t)
-                if seq.append(int(tok), now) or seq.length >= self.max_seq_len:
+                finished_now = (seq.append(int(tok), now)
+                                or seq.length >= self.max_seq_len)
+                # parallel sampling: the parent's FIRST token is the
+                # moment every stage provably holds its full prompt KV
+                # (the token only exists because the prefill traversed
+                # the whole pipeline) — fork the n-1 children here,
+                # BEFORE any finish-time block release below
+                if (seq.params.n > 1 and not seq.forks_spawned
+                        and seq.fork_parent is None):
+                    self._spawn_forks(seq, int(tok), now)
+                if finished_now:
                     seq.status = SeqStatus.FINISHED
                     seq.finish_t = seq.finish_t or now
                     seq.finish_reason = seq.finish_reason or "length"

@@ -43,6 +43,17 @@ class Sequence:
     # None = an ordinary sequence, prefill covers the prompt only.
     prefill_target: Optional[int] = None
     preemptions: int = 0
+    # parallel sampling (SamplingParams.n > 1, docs/memory.md): a fork
+    # child shares its parent's prompt KV via refcounted block tables.
+    # ``forked`` marks a child whose KV is already materialized (no
+    # prefill compute needed — admission is bookkeeping only); it is
+    # cleared on preemption/demotion, falling back to recompute.
+    fork_parent: Optional[int] = None
+    forked: bool = False
+    forks_spawned: bool = False       # parent: children already created
+    # prompt-prefix caching: leading tokens whose KV was mapped onto
+    # cached blocks at admission (prefill may start past them).
+    cached_prefix: int = 0
 
     @property
     def length(self) -> int:

@@ -36,6 +36,7 @@ def _build_engine(arch: str, *, engine: str, pp: int, max_batch: int,
                   policy: str, hysteresis_tokens: int, tpot_slo_ms: float,
                   kv_layout: str = "auto", block_size: int = 16,
                   kv_blocks: int = 0, overlap_sampling: bool = True,
+                  prefix_caching: bool = True,
                   keep_recent: int = 2048, seed: int = 0, prebuilt=None):
     """``prebuilt`` = (cfg, model, params) skips the model build — callers
     comparing several engine configs on one model (benchmarks) reuse it."""
@@ -55,6 +56,7 @@ def _build_engine(arch: str, *, engine: str, pp: int, max_batch: int,
                         kv_layout=kv_layout, kv_block_size=block_size,
                         kv_blocks=kv_blocks or None,
                         overlap_sampling=overlap_sampling,
+                        enable_prefix_caching=prefix_caching,
                         keep_recent_requests=keep_recent, seed=seed)
     eng = (SiPipeEngine if engine == "sipipe" else NaivePPEngine)(
         model, params, ecfg)
@@ -66,7 +68,8 @@ def run(arch: str, *, engine: str = "sipipe", pp: int = 2, requests: int = 8,
         n_samplers: int = 2, chunk_tokens: int = 0, policy: str = "auto",
         hysteresis_tokens: int = 0, tpot_slo_ms: float = 0.0,
         kv_layout: str = "auto", block_size: int = 16,
-        kv_blocks: int = 0, seed: int = 0,
+        kv_blocks: int = 0, n_samples: int = 1,
+        prefix_caching: bool = True, seed: int = 0,
         verbose: bool = True) -> dict:
     """Offline batch mode: enqueue every prompt, blocking run()."""
     cfg, eng = _build_engine(arch, engine=engine, pp=pp, max_batch=max_batch,
@@ -75,7 +78,7 @@ def run(arch: str, *, engine: str = "sipipe", pp: int = 2, requests: int = 8,
                              hysteresis_tokens=hysteresis_tokens,
                              tpot_slo_ms=tpot_slo_ms, kv_layout=kv_layout,
                              block_size=block_size, kv_blocks=kv_blocks,
-                             seed=seed)
+                             prefix_caching=prefix_caching, seed=seed)
     wl = ShareGPTLike(cfg.vocab_size, n_requests=requests, seed=seed,
                       prompt_len_median=12, max_prompt=max_seq_len // 4,
                       output_len_median=max_new_tokens,
@@ -84,7 +87,8 @@ def run(arch: str, *, engine: str = "sipipe", pp: int = 2, requests: int = 8,
                              frequency_penalty=0.2, presence_penalty=0.1)
     for prompt, budget in wl.requests():
         eng.add_request(prompt, SamplingParams(
-            **{**sp_base.__dict__, "max_new_tokens": min(budget, max_new_tokens)}))
+            **{**sp_base.__dict__, "n": n_samples,
+               "max_new_tokens": min(budget, max_new_tokens)}))
     done = eng.run()
     m = eng.metrics()
     m["engine"] = engine
@@ -101,6 +105,7 @@ def run_online(arch: str, *, engine: str = "sipipe", pp: int = 2,
                hysteresis_tokens: int = 0, tpot_slo_ms: float = 0.0,
                kv_layout: str = "auto", block_size: int = 16,
                kv_blocks: int = 0, overlap_sampling: bool = True,
+               prefix_caching: bool = True,
                arrival_rate: float = 4.0, abort_every: int = 0,
                seed: int = 0, verbose: bool = True, prebuilt=None) -> dict:
     """Online continuous serving: replay a Poisson arrival trace through
@@ -118,6 +123,7 @@ def run_online(arch: str, *, engine: str = "sipipe", pp: int = 2,
                              tpot_slo_ms=tpot_slo_ms, kv_layout=kv_layout,
                              block_size=block_size, kv_blocks=kv_blocks,
                              overlap_sampling=overlap_sampling,
+                             prefix_caching=prefix_caching,
                              seed=seed, prebuilt=prebuilt)
     wl = ShareGPTLike(cfg.vocab_size, n_requests=requests, seed=seed,
                       prompt_len_median=12, max_prompt=max_seq_len // 4,
@@ -217,6 +223,13 @@ def main():
     ap.add_argument("--kv-blocks", type=int, default=0,
                     help="paged layout: total physical blocks (0 = the "
                          "slot budget contiguous rows would reserve)")
+    ap.add_argument("--no-prefix-caching", action="store_true",
+                    help="disable hash-based prompt-prefix block sharing "
+                         "(paged layout; docs/memory.md)")
+    ap.add_argument("-n", "--n-samples", type=int, default=1,
+                    help="parallel sampling: completions per request "
+                         "(n > 1 CoW-forks the prompt KV; paged layout, "
+                         "offline mode)")
     ap.add_argument("--online", action="store_true",
                     help="continuous serving: Poisson arrivals replayed "
                          "through the step-driven request API "
@@ -232,12 +245,13 @@ def main():
                   n_samplers=args.samplers, chunk_tokens=args.chunk_tokens,
                   policy=args.policy, hysteresis_tokens=args.hysteresis_tokens,
                   tpot_slo_ms=args.tpot_slo_ms, kv_layout=args.kv_layout,
-                  block_size=args.block_size, kv_blocks=args.kv_blocks)
+                  block_size=args.block_size, kv_blocks=args.kv_blocks,
+                  prefix_caching=not args.no_prefix_caching)
     if args.online:
         run_online(args.arch, arrival_rate=args.arrival_rate,
                    abort_every=args.abort_every, **common)
     else:
-        run(args.arch, **common)
+        run(args.arch, n_samples=args.n_samples, **common)
 
 
 if __name__ == "__main__":

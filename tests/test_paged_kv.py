@@ -180,6 +180,225 @@ def test_property_cow_forks_free_correctly(n_forks, writes, seed):
     assert a.free_blocks == 32
 
 
+@settings(max_examples=40, deadline=None)
+@given(ops=st.lists(st.tuples(st.sampled_from(["alloc", "free", "append",
+                                               "fork"]),
+                              st.integers(0, 7)), min_size=1, max_size=60),
+       n_blocks=st.integers(4, 24))
+def test_property_append_never_writes_shared_block(ops, n_blocks):
+    """Shared-block write hazard (satellite): under interleaved
+    fork/append/free churn, the block an appended token lands in is
+    always exclusively owned afterwards — growth CoWs a shared tail
+    instead of writing through it."""
+    a = PagedAllocator(n_blocks, 4)
+    lens = {}
+    next_id = 0
+    for op, arg in ops:
+        try:
+            if op == "alloc":
+                sid, next_id = next_id, next_id + 1
+                a.allocate(sid, arg % 8 + 1)
+                lens[sid] = arg % 8 + 1
+            elif op == "free" and lens:
+                sid = sorted(lens)[arg % len(lens)]
+                a.free(sid)
+                del lens[sid]
+            elif op == "fork" and lens:
+                src = sorted(lens)[arg % len(lens)]
+                a.fork(src, next_id)
+                lens[next_id] = lens[src]
+                next_id += 1
+            elif op == "append" and lens:
+                sid = sorted(lens)[arg % len(lens)]
+                a.append_token(sid, lens[sid] + 1)
+                lens[sid] += 1
+                wb = a._tables[sid][(lens[sid] - 1) // 4]
+                assert a._refs[wb] == 1, "append wrote into a shared block"
+        except MemoryError:
+            pass
+        a.check_invariants()
+
+
+def test_grow_to_all_or_nothing_includes_cow():
+    """grow_to must count the CoW of a shared write block against the
+    free list together with growth: when the pool cannot cover both, it
+    returns False having allocated and copied nothing."""
+    a = PagedAllocator(3, 4)
+    a.allocate(0, 8)                       # 2 blocks, 1 free
+    a.fork(0, 1)
+    # growth (1 block) + CoW of the shared write block = 2 > 1 free
+    assert not a.grow_to(1, 9, write_slot=7)
+    assert len(a.table(1)) == 2 and a.free_blocks == 1
+    assert not a._pending_copies           # nothing copied on failure
+    a.check_invariants()
+    # CoW alone fits: write slot 7 is block 1, shared -> diverges
+    assert a.grow_to(1, 8)
+    assert a.table(1)[0] == a.table(0)[0]
+    assert a.table(1)[1] != a.table(0)[1]
+    assert a.drain_copies() == [(a.table(0)[1], a.table(1)[1])]
+    assert a.free_blocks == 0
+    # now growth alone cannot fit
+    assert not a.grow_to(0, 9)
+    assert len(a.table(0)) == 2
+    a.free(1)
+    assert a.grow_to(0, 9) and len(a.table(0)) == 3
+    a.check_invariants()
+
+
+def test_manager_fork_cow_on_growth_drains_copies():
+    from repro.runtime.paged_kv import BlockSpaceManager
+
+    m = BlockSpaceManager(8, 4)
+    m.admit(0, 8)                          # 2 blocks
+    assert m.fork(0, 1)
+    assert not m.fork(0, 1)                # dst exists
+    assert not m.fork(9, 2)                # unknown src
+    assert m.prefix_stats()["forks"] == 1
+    # the fork's first decode writes slot 7 -> shared block 1 -> CoW
+    assert m.ensure(1, 8)
+    t0, t1 = m.table(0), m.table(1)
+    assert t0[0] == t1[0] and t0[1] != t1[1]
+    copies = m.drain_copies()
+    assert copies is not None and copies.shape == (1, 2)
+    assert list(copies[0]) == [t0[1], t1[1]]
+    assert m.drain_copies() is None        # drained exactly once
+    assert m.prefix_stats()["cow_copies"] == 1
+    m.alloc.check_invariants()
+    m.release(0)
+    m.release(1)
+    assert m.free_blocks == 8
+
+
+def test_manager_ensure_cow_exhaustion_returns_false_then_recovers():
+    """Satellite: CoW exhaustion is a recoverable admission-style failure
+    (ensure -> False -> the scheduler preempts and retries), not a raised
+    MemoryError."""
+    from repro.runtime.paged_kv import BlockSpaceManager
+
+    m = BlockSpaceManager(4, 4)
+    m.admit(0, 8)                          # 2 blocks
+    m.fork(0, 1)
+    m.admit(2, 8)                          # pool now full
+    assert m.free_blocks == 0
+    assert not m.ensure(1, 8)              # CoW needs a block; none free
+    assert m.table(1) == m.table(0)        # nothing taken, still shared
+    m.alloc.check_invariants()
+    m.release(2)                           # preemption frees the victim
+    assert m.ensure(1, 8)                  # retry succeeds
+    assert m.table(1)[1] != m.table(0)[1]
+    m.alloc.check_invariants()
+
+
+def test_prefix_cache_admit_register_hit_and_eviction():
+    from repro.runtime.paged_kv import BlockSpaceManager
+
+    m = BlockSpaceManager(8, 4, prefix_cache=True)
+    toks = list(range(100, 116))           # 16 tokens = 4 full blocks
+    assert m.admit(0, 16, token_ids=toks) == 0          # cold miss
+    assert m.prefix_stats()["prefix_misses"] == 1
+    m.register_prefix(0, toks, 16)
+    m.register_prefix(0, toks, 16)                      # idempotent
+    assert m.prefix_stats()["prefix_cached_blocks"] == 4
+    m.release(0)
+    # cached blocks survive release, pinned by the cache
+    assert m.free_blocks == 4
+    assert m.reclaimable_cached_blocks == 4
+    m.alloc.check_invariants()
+    # warm admission: match capped at (16-1)//4 = 3 blocks, so the last
+    # prompt token is always computed (the seq needs its logits)
+    assert m.admit(1, 16, token_ids=toks) == 12
+    assert m.prefix_stats()["prefix_hits"] == 1
+    assert m.prefix_stats()["prefix_tokens_served"] == 12
+    # divergent tail matches only the common leading blocks
+    toks2 = toks[:8] + [999] * 8
+    assert m.admit(2, 16, token_ids=toks2) == 8
+    m.alloc.check_invariants()
+    m.release(1)
+    m.release(2)
+    # admission under pressure evicts LRU cached blocks on demand
+    assert m.free_blocks == 4
+    cold = [7] * 24                        # 6 blocks > 4 free
+    assert m.can_admit(24, token_ids=cold)
+    assert m.admit(3, 24, token_ids=cold) == 0
+    st = m.prefix_stats()
+    assert st["prefix_evictions"] == 2
+    assert st["prefix_cached_blocks"] == 2
+    m.alloc.check_invariants()
+    m.release(3)
+
+
+def test_prefix_cache_collision_degrades_to_miss():
+    """A content-mismatched hash collision must never serve wrong K/V:
+    the entry stays as-is and the new chain stops registering."""
+    from repro.runtime.paged_kv import BlockSpaceManager, PrefixCache
+
+    px = PrefixCache(4)
+    k1, created = px.register(None, (1, 2, 3, 4), 0)
+    assert created
+    # force a colliding key with different content
+    px._entries[px._key(None, (9, 9, 9, 9))] = px._entries[k1]
+    assert px.match([9, 9, 9, 9]) == []    # token-verify rejects it
+
+    m = BlockSpaceManager(8, 4, prefix_cache=True)
+    toks = list(range(8))
+    m.admit(0, 8, token_ids=toks)
+    m.register_prefix(0, toks, 8)
+    # simulate a collision on seq 1's first block: registration bails
+    m.admit(1, 8, token_ids=[5] * 8)
+    m._prefix._entries[m._prefix._key(None, (5, 5, 5, 5))] = \
+        m._prefix._entries[m._prefix._key(None, tuple(toks[:4]))]
+    m.register_prefix(1, [5] * 8, 8)
+    from repro.runtime.paged_kv import _CHAIN_BROKEN
+    assert m._reg[1][1] is _CHAIN_BROKEN   # chain stops, never corrupts
+    m.alloc.check_invariants()
+
+
+def test_prefix_cache_rejects_rolling_window():
+    from repro.runtime.paged_kv import BlockSpaceManager
+
+    with pytest.raises(ValueError, match="rolling"):
+        BlockSpaceManager(8, 4, slot_cap=16, prefix_cache=True)
+
+
+def test_padded_tables_ladder_extends_deterministically():
+    """Satellite: a table wider than the capped ladder extends it with
+    the next power-of-two rung (recorded in table_widths) instead of
+    emitting a one-off off-ladder width."""
+    from repro.runtime.paged_kv import BlockSpaceManager
+
+    m = BlockSpaceManager(16, 8, max_slots=32, max_table_buckets=2)
+    assert m.table_widths == [2, 4]
+    m.admit(0, 8)
+    assert m.padded_tables([0]).shape == (1, 2)     # smallest rung
+    m.admit(1, 40)                                  # 5 blocks > cap 4
+    t = m.padded_tables([0, 1])
+    assert t.shape == (2, 8)                        # next pow2, on-ladder
+    assert m.table_widths == [2, 4, 8]
+    assert m.ladder_extensions == 1
+    m.padded_tables([1])
+    assert m.ladder_extensions == 1                 # extended exactly once
+    # every emitted width is on the ladder
+    for ids in ([0], [1], [0, 1]):
+        assert m.padded_tables(ids).shape[1] in m.table_widths
+
+
+def test_padded_tables_mask_shared_blocks():
+    from repro.runtime.paged_kv import BlockSpaceManager
+
+    m = BlockSpaceManager(8, 4)
+    m.admit(0, 8)
+    m.fork(0, 1)
+    assert m.ensure(1, 8)          # write slot 7 -> shared tail CoW'd
+    assert m.ensure(1, 9)          # then a fresh 3rd block
+    m.drain_copies()
+    t = m.padded_tables([1], mask_shared=True)[0]
+    assert t[0] == m.pad_block                      # shared -> trash
+    assert t[1] == m.table(1)[1] != m.pad_block     # CoW'd -> writable
+    assert t[2] == m.table(1)[2]
+    plain = m.padded_tables([1])[0]
+    assert list(plain[:3]) == m.table(1)
+
+
 def test_block_space_manager_slots_cap_and_growth():
     from repro.runtime.paged_kv import BlockSpaceManager
 

@@ -1,0 +1,246 @@
+"""Shared-prefix KV reuse and CoW parallel sampling (docs/memory.md
+"Prefix caching & CoW forks"): n > 1 fork streams bit-equal to solo
+runs, warm prefix admissions bit-equal to cold, abort isolation,
+bit-exactness under CoW/fork memory pressure, and on-ladder table
+widths."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import EngineConfig, SiPipeEngine
+from repro.core.sampling_params import SamplingParams
+from repro.core.sequence import SeqStatus
+from repro.models import ModelOptions, ShardCtx, build_model
+
+
+def _model(arch="stablelm-1.6b-smoke", key=0):
+    cfg = get_config(arch)
+    model = build_model(cfg, ShardCtx.single(), ModelOptions())
+    return cfg, model, model.init(jax.random.key(key))
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [list(map(int, rng.integers(2, cfg.vocab_size, size=n)))
+            for n in lens]
+
+
+def _engine(model, params, *, policy="chunked", chunk=6, max_batch=2,
+            max_seq_len=64, block_size=8, kv_blocks=None,
+            prefix_caching=True):
+    return SiPipeEngine(model, params, EngineConfig(
+        pp_degree=2, max_batch=max_batch, max_seq_len=max_seq_len,
+        n_samplers=2, prefill_chunk_tokens=chunk, scheduling_policy=policy,
+        kv_layout="paged", kv_block_size=block_size, kv_blocks=kv_blocks,
+        enable_prefix_caching=prefix_caching))
+
+
+def _drive(eng, max_iterations=10_000):
+    """Step until idle; returns {request_id: final RequestOutput}."""
+    finals = {}
+    for _ in range(max_iterations):
+        for out in eng.step():
+            if out.finished:
+                finals[out.request_id] = out
+        if not eng.has_work:
+            break
+    return finals
+
+
+def _solo_ref(model, params, prompts, n_new, *, policy, chunk):
+    eng = _engine(model, params, policy=policy, chunk=chunk)
+    rids = [eng.add_request(p, SamplingParams(greedy=True,
+                                              max_new_tokens=n_new))
+            for p in prompts]
+    finals = _drive(eng)
+    eng.shutdown()
+    return [finals[r].token_ids.to_list() for r in rids]
+
+
+# ---------------------------------------------------------------------------
+# Parallel sampling: n > 1 forks, greedy-bit-equal to solo runs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,chunk", [("chunked", 6),
+                                          ("monolithic", None)])
+def test_parallel_sampling_forks_bit_equal_solo(policy, chunk):
+    """Every fork of a greedy n=3 request must emit exactly the solo
+    (n=1) output — the forks share the prompt K/V, so any divergence
+    means a shared block was written through."""
+    cfg, model, params = _model()
+    prompts = _prompts(cfg, (13, 7), seed=3)
+    ref = _solo_ref(model, params, prompts, 8, policy=policy, chunk=chunk)
+    eng = _engine(model, params, policy=policy, chunk=chunk)
+    rids = [eng.add_request(p, SamplingParams(greedy=True, max_new_tokens=8,
+                                              n=3))
+            for p in prompts]
+    finals = _drive(eng)
+    m = eng.metrics()
+    eng.shutdown()
+    for rid, r in zip(rids, ref):
+        out = finals[rid]
+        assert out.token_ids.to_list() == r
+        assert out.forks is not None and len(out.forks) == 2
+        for f in out.forks:
+            assert f.finished and f.token_ids.to_list() == r
+    assert m["kv_fork_children"] == 4
+    # everything (incl. CoW'd fork tails) released at the end
+    assert m["kv_blocks_free"] == m["kv_blocks_total"]
+    eng.kv_manager.alloc.check_invariants()
+
+
+def test_n_requires_paged_layout():
+    cfg, model, params = _model()
+    eng = SiPipeEngine(model, params, EngineConfig(
+        pp_degree=1, max_batch=1, max_seq_len=32, kv_layout="contiguous"))
+    with pytest.raises(ValueError, match="paged"):
+        eng.add_request([1, 2, 3], SamplingParams(greedy=True, n=2))
+    eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Prefix caching: warm admissions bit-equal to cold, hits counted
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,chunk", [("chunked", 6),
+                                          ("monolithic", None)])
+def test_prefix_cache_hit_bit_equal_cold(policy, chunk):
+    """A warm request whose prompt shares a long prefix with a finished
+    one maps the cached blocks instead of recomputing them — and its
+    output must be bit-equal to a cold run of the same prompt."""
+    cfg, model, params = _model()
+    base = _prompts(cfg, (24,), seed=5)[0]      # 3 full blocks of 8
+    t1, t2 = _prompts(cfg, (4, 4), seed=6)
+    p1, p2 = base + t1, base + t2
+    ref = _solo_ref(model, params, [p1, p2], 6, policy=policy, chunk=chunk)
+
+    eng = _engine(model, params, policy=policy, chunk=chunk)
+    r1 = eng.add_request(p1, SamplingParams(greedy=True, max_new_tokens=6))
+    f1 = _drive(eng)
+    r2 = eng.add_request(p2, SamplingParams(greedy=True, max_new_tokens=6))
+    f2 = _drive(eng)
+    m = eng.metrics()
+    eng.shutdown()
+    assert f1[r1].token_ids.to_list() == ref[0]
+    assert f2[r2].token_ids.to_list() == ref[1]      # warm == cold
+    assert m["kv_prefix_hits"] >= 1
+    assert m["kv_prefix_tokens_served"] >= 24
+    # the pinned cache still counts as reclaimable capacity: no leak
+    assert m["kv_blocks_free"] == m["kv_blocks_total"]
+    assert m["kv_blocks_cached"] > 0
+    eng.kv_manager.alloc.check_invariants()
+
+
+def test_prefix_caching_can_be_disabled():
+    cfg, model, params = _model()
+    p = _prompts(cfg, (20,), seed=5)[0]
+    eng = _engine(model, params, prefix_caching=False)
+    r1 = eng.add_request(p, SamplingParams(greedy=True, max_new_tokens=4))
+    _drive(eng)
+    r2 = eng.add_request(p, SamplingParams(greedy=True, max_new_tokens=4))
+    _drive(eng)
+    m = eng.metrics()
+    eng.shutdown()
+    assert "kv_prefix_hits" not in m
+    assert m["kv_blocks_cached"] == 0
+    assert m["kv_blocks_free"] == m["kv_blocks_total"]
+
+
+# ---------------------------------------------------------------------------
+# Abort isolation: killing one fork leaves its siblings bit-exact
+# ---------------------------------------------------------------------------
+
+def test_fork_abort_leaves_siblings_intact():
+    cfg, model, params = _model()
+    [prompt] = _prompts(cfg, (13,), seed=3)
+    [ref] = _solo_ref(model, params, [prompt], 10, policy="chunked", chunk=6)
+
+    eng = _engine(model, params)
+    rid = eng.add_request(prompt, SamplingParams(greedy=True,
+                                                 max_new_tokens=10, n=3))
+    aborted = False
+    final = None
+    for _ in range(10_000):
+        for out in eng.step():
+            if (not aborted and out.request_id == rid and out.forks
+                    and len(out.forks) == 2):
+                assert eng.abort(rid, fork=1)    # kill the first fork only
+                aborted = True
+            if out.finished and out.request_id == rid:
+                final = out
+        if not eng.has_work:
+            break
+    m = eng.metrics()
+    eng.shutdown()
+    assert aborted and final is not None
+    assert final.token_ids.to_list() == ref          # primary unharmed
+    k1, k2 = final.forks
+    assert k1.seq.status == SeqStatus.ABORTED
+    assert k2.seq.status == SeqStatus.FINISHED
+    assert k2.token_ids.to_list() == ref             # sibling unharmed
+    # the aborted fork's blocks came back; shared blocks survived it
+    assert m["kv_blocks_free"] == m["kv_blocks_total"]
+    eng.kv_manager.alloc.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# CoW exhaustion under pressure: demote/preempt, resume bit-exact
+# ---------------------------------------------------------------------------
+
+def test_fork_pressure_bit_exact_with_demotion_or_preemption():
+    """A pool too small for every fork's CoW growth forces fork demotion
+    (resume-by-recompute) and/or preemption; all streams must still
+    finish bit-exact vs an unpressured run."""
+    cfg, model, params = _model()
+    prompts = _prompts(cfg, (20, 16, 12), seed=7)
+    ref = _solo_ref(model, params, prompts, 12, policy="chunked", chunk=8)
+
+    eng = _engine(model, params, chunk=8, max_seq_len=48, block_size=4,
+                  kv_blocks=14)
+    rids = [eng.add_request(p, SamplingParams(greedy=True,
+                                              max_new_tokens=12, n=2))
+            for p in prompts]
+    finals = _drive(eng, max_iterations=20_000)
+    m = eng.metrics()
+    eng.shutdown()
+    assert m["kv_preemptions"] + m["kv_fork_demotions"] > 0
+    for rid, r in zip(rids, ref):
+        out = finals[rid]
+        assert out.token_ids.to_list() == r, "primary diverged"
+        assert len(out.forks) == 1
+        assert out.forks[0].token_ids.to_list() == r, "fork diverged"
+    assert m["kv_blocks_free"] == m["kv_blocks_total"]
+    eng.kv_manager.alloc.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Compile-shape discipline: realized table widths stay on the ladder
+# ---------------------------------------------------------------------------
+
+def test_realized_table_widths_stay_on_ladder():
+    """Every padded block-table width the engine realizes — across
+    prefix-cached admissions, forks and decode growth — must be a rung
+    of the (possibly extended) width ladder, never an off-ladder one-off
+    (each distinct width is one XLA compile)."""
+    cfg, model, params = _model()
+    prompts = _prompts(cfg, (24, 13), seed=1)
+    eng = _engine(model, params)
+    widths = []
+    orig = eng.kv_manager.padded_tables
+
+    def recording(seq_ids, *a, **kw):
+        t = orig(seq_ids, *a, **kw)
+        widths.append(t.shape[1])
+        return t
+
+    eng.kv_manager.padded_tables = recording
+    for p in prompts:
+        eng.add_request(p, SamplingParams(greedy=True, max_new_tokens=6,
+                                          n=2))
+    _drive(eng)
+    m = eng.metrics()
+    eng.shutdown()
+    assert widths
+    assert set(widths) <= set(m["kv_table_widths"]), \
+        f"off-ladder widths: {sorted(set(widths))} vs {m['kv_table_widths']}"
