@@ -742,7 +742,16 @@ class PPEngineBase:
                 return False
             targets = [req.forks[fork - 1]]
         else:
-            targets = req.all_seqs
+            targets = list(req.all_seqs)
+            # children spawned by the scheduler (first token landed) but
+            # not yet adopted by _attach_forks live only in scheduler
+            # state — an abort in that window must cover them too, or
+            # they keep decoding as orphans holding blocks the request
+            # believes it released (tests/test_http.py regression)
+            known = {s.seq_id for s in targets}
+            for child in self.scheduler.fork_children_of(request_id):
+                if child.seq_id not in known:
+                    targets.append(child)
         any_aborted = False
         for seq in targets:
             if self.scheduler.abort(seq.seq_id) is None:
@@ -1129,6 +1138,25 @@ class PPEngineBase:
                     pass
         return {"jit_executables": total}
 
+    def load(self) -> Dict[str, int]:
+        """Cheap load snapshot for routing decisions (serving/router.py):
+        live request count, waiting-queue depth, and KV block occupancy.
+        Unlike :meth:`metrics` this allocates nothing proportional to
+        history — safe to poll per-request."""
+        if self.paged:
+            total = self.kv_manager.n_blocks
+            free = (self.kv_manager.free_blocks
+                    + self.kv_manager.reclaimable_cached_blocks)
+        else:
+            total = self.seq_cache.max_rows
+            free = self.seq_cache.free_rows
+        return {
+            "active_requests": len(self.requests),
+            "queue_depth": len(self.scheduler.waiting),
+            "kv_blocks_total": total,
+            "kv_blocks_free": free,
+        }
+
     # -- metrics ----------------------------------------------------------------
     def metrics(self) -> Dict[str, Any]:
         t_end = max([self._t_last_done, *list(self.iter_done_t.values())]) \
@@ -1170,6 +1198,7 @@ class PPEngineBase:
             "requests_finished": self._n_finished,
             "requests_aborted": self._n_aborted,
             "requests_active": len(self.requests),
+            "queue_depth": len(self.scheduler.waiting),
             # per-request latency records over the retained window
             "requests": {r.request_id: r.as_dict() for r in stats},
             "sample_s": self.sample_time,

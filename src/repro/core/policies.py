@@ -106,9 +106,7 @@ class MonolithicPolicy(SchedulingPolicy):
         members, recomposed = self._alive_members(s, slot)
         new_prefill: List[int] = []
         while s.waiting and len(members) < s.max_batch and s.can_admit_next():
-            seq = s.waiting.popleft()
-            seq.mark_running()
-            s.kv_admit(seq)                       # paged: reserve blocks
+            seq = s.admit_next()                  # paged: reserves blocks
             # a fork child admits with its prefill already satisfied (its
             # prompt KV lives in the shared blocks) — it joins as a pure
             # decode member, no is_prefill pass.  A prefix-cache-hit seq
@@ -194,9 +192,7 @@ class ChunkedPolicy(SchedulingPolicy):
         # first unshared (block-aligned) token
         while (s.waiting and len(members) < s.max_batch
                and budget_left > 0 and s.can_admit_next()):
-            seq = s.waiting.popleft()
-            seq.mark_running()
-            s.kv_admit(seq)
+            seq = s.admit_next()
             members.append(seq.seq_id)
             recomposed = True
             emit(seq)
@@ -394,9 +390,7 @@ class DisaggregatedPolicy(SchedulingPolicy):
             # without waiting for the next prefill phase
             while (s.waiting and s.waiting[0].forked
                    and len(members) < s.max_batch and s.can_admit_next()):
-                seq = s.waiting.popleft()
-                seq.mark_running()
-                s.kv_admit(seq)
+                seq = s.admit_next()
                 members.append(seq.seq_id)
                 recomposed = True
             s.slot_members[slot] = members
@@ -443,9 +437,7 @@ class DisaggregatedPolicy(SchedulingPolicy):
         while (s.waiting and len(members) < s.max_batch
                and budget_left > 0 and not self._capped()
                and s.can_admit_next()):
-            seq = s.waiting.popleft()
-            seq.mark_running()
-            s.kv_admit(seq)
+            seq = s.admit_next()
             members.append(seq.seq_id)
             recomposed = True
             emit_chunk(seq)

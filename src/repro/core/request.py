@@ -173,6 +173,11 @@ class Request:
         return RequestState.of(self.seq)
 
     @property
+    def priority(self) -> int:
+        """Scheduling priority (from SamplingParams, docs/http.md)."""
+        return self.seq.params.priority
+
+    @property
     def all_seqs(self) -> List[Sequence]:
         return [self.seq] + self.forks
 

@@ -20,6 +20,14 @@ class SamplingParams:
     # children are CoW-forked off the parent's KV when its first token
     # lands (docs/memory.md "Prefix caching & CoW forks"); paged KV only.
     n: int = 1
+    # request priority (docs/http.md): higher values are served first.
+    # Threaded through Sequence into the scheduler — admission orders the
+    # waiting queue priority-then-FIFO, and the paged preemption victim
+    # choice is lowest-priority-then-latest-arrival, so under block
+    # pressure low-priority requests are evicted before high-priority
+    # ones.  0 is the neutral default; negative values mark best-effort
+    # background work (e.g. offline batch traffic).
+    priority: int = 0
 
     def needs_penalties(self) -> bool:
         return (

@@ -223,7 +223,38 @@ class Scheduler:
                 f"max_seq_len={self.max_seq_len} (need >= 1 output slot)")
         seq.arrival_t = seq.arrival_t or time.monotonic()
         self.seqs[seq.seq_id] = seq
-        self.waiting.append(seq)
+        self._enqueue_waiting(seq)
+
+    def _enqueue_waiting(self, seq: Sequence):
+        """Insert a NEW request into the waiting queue in admission order:
+        priority first, FIFO within a priority (monotonic ids = arrival
+        order).  Resume entries at the queue FRONT — PREEMPTED sequences
+        awaiting re-admission and spawned fork children — are never
+        jumped: they already hold tokens/blocks and resume first
+        regardless of a newcomer's priority (docs/http.md)."""
+        w = self.waiting
+        if not w or w[-1].priority >= seq.priority:
+            w.append(seq)                      # fast path: uniform priority
+            return
+        i = 0
+        while i < len(w) and (w[i].status == SeqStatus.PREEMPTED
+                              or w[i].forked):
+            i += 1
+        while i < len(w) and w[i].priority >= seq.priority:
+            i += 1
+        w.insert(i, seq)
+
+    def admit_next(self) -> Sequence:
+        """Pop the waiting-queue head and admit it: WAITING -> RUNNING plus
+        paged block reservation.  Policies call this inside their admission
+        loops (gated on :meth:`can_admit_next`), so every policy shares one
+        admission order — priority, then FIFO (the queue's insertion
+        order); per-tenant fair share is enforced a layer up, by
+        ``serving.admission`` (docs/http.md)."""
+        seq = self.waiting.popleft()
+        seq.mark_running()
+        self.kv_admit(seq)
+        return seq
 
     @property
     def has_work(self) -> bool:
@@ -266,12 +297,17 @@ class Scheduler:
         if cached > seq.prefilled:
             seq.prefilled = cached
 
-    def _lowest_priority_running(self) -> Optional[int]:
-        """Preemption victim: the latest-arrived RUNNING sequence that
-        still holds blocks (monotonic ids make arrival order = id order)."""
-        cands = [sid for sid, q in self.seqs.items()
-                 if q.status == SeqStatus.RUNNING and self.kv.has(sid)]
-        return max(cands) if cands else None
+    def _preemption_victim(self) -> Optional[int]:
+        """Preemption victim: the lowest-priority RUNNING sequence that
+        still holds blocks; latest arrival breaks priority ties (monotonic
+        ids make arrival order = id order, so ``-sid`` prefers the newest).
+        Candidates are sorted first so the choice is a pure function of
+        the candidate set — never of ``seqs`` dict insertion order."""
+        cands = sorted(sid for sid, q in self.seqs.items()
+                       if q.status == SeqStatus.RUNNING and self.kv.has(sid))
+        if not cands:
+            return None
+        return min(cands, key=lambda sid: (self.seqs[sid].priority, -sid))
 
     def _preempt(self, victim: int):
         """Evict a RUNNING sequence under memory pressure: free its blocks,
@@ -318,7 +354,7 @@ class Scheduler:
                 # drops shared refs) before evicting a RUNNING sequence
                 if self._demote_waiting_fork():
                     continue
-                victim = self._lowest_priority_running()
+                victim = self._preemption_victim()
                 if victim is None:
                     break
                 self._preempt(victim)
@@ -407,6 +443,18 @@ class Scheduler:
         with self._mutex:
             out, self._spawned_forks = self._spawned_forks, []
             return out
+
+    def fork_children_of(self, parent_id: int) -> List[Sequence]:
+        """Live fork children of ``parent_id`` known to the scheduler —
+        including ones spawned by ``complete`` that the engine has not yet
+        attached to the parent Request.  ``engine.abort`` folds these into
+        its target set so a request aborted inside the spawn→attach window
+        cannot leave orphaned children decoding against freed parents."""
+        with self._mutex:
+            return [q for q in self.seqs.values()
+                    if q.fork_parent == parent_id
+                    and q.status in (SeqStatus.WAITING, SeqStatus.RUNNING,
+                                     SeqStatus.PREEMPTED)]
 
     # -- iteration dispatch ---------------------------------------------------
     def schedule(self, iteration: Optional[int] = None) -> Optional[SchedulingOutput]:

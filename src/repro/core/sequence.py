@@ -64,6 +64,12 @@ class Sequence:
         return len(self.prompt_ids)
 
     @property
+    def priority(self) -> int:
+        """Scheduling priority (from SamplingParams): higher serves first,
+        lower preempts first under KV block pressure."""
+        return self.params.priority
+
+    @property
     def prefill_len(self) -> int:
         """Tokens the prefill phase must cover before sampling resumes:
         the prompt, or — after a preemption — the full token history at

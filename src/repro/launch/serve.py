@@ -178,6 +178,177 @@ def run_online(arch: str, *, engine: str = "sipipe", pp: int = 2,
     return m
 
 
+def build_http_server(arch: str, *, engine: str = "sipipe", replicas: int = 1,
+                      pp: int = 2, max_batch: int = 4, max_seq_len: int = 128,
+                      n_samplers: int = 2, chunk_tokens: int = 16,
+                      policy: str = "auto", kv_layout: str = "auto",
+                      block_size: int = 16, kv_blocks: int = 0,
+                      max_queue: int = 64, max_active: int = 0,
+                      host: str = "127.0.0.1", port: int = 0,
+                      seed: int = 0, prebuilt=None):
+    """Build (but don't start) the HTTP front-end: one model, N engine
+    replicas behind a least-loaded-KV router, admission control, and the
+    OpenAI-style completions server (docs/http.md)."""
+    from repro.serving import CompletionServer, EngineReplica, Router
+
+    if prebuilt is None:
+        cfg = get_config(arch + "-smoke" if not arch.endswith("-smoke")
+                         else arch)
+        model = build_model(cfg, ShardCtx.single(), ModelOptions())
+        params = model.init(jax.random.key(0))
+        prebuilt_full = (cfg, model, params)
+    else:
+        prebuilt_full = prebuilt
+        cfg = prebuilt_full[0]
+    reps = []
+    for i in range(replicas):
+        _, eng = _build_engine(arch, engine=engine, pp=pp,
+                               max_batch=max_batch, max_seq_len=max_seq_len,
+                               n_samplers=n_samplers,
+                               chunk_tokens=chunk_tokens, policy=policy,
+                               hysteresis_tokens=0, tpot_slo_ms=0.0,
+                               kv_layout=kv_layout, block_size=block_size,
+                               kv_blocks=kv_blocks, seed=seed,
+                               prebuilt=prebuilt_full)
+        reps.append(EngineReplica(f"r{i}", eng))
+    server = CompletionServer(Router(reps), vocab_size=cfg.vocab_size,
+                              model_name=arch, max_queue=max_queue,
+                              max_active=max_active or None,
+                              host=host, port=port)
+    return cfg, server
+
+
+def run_http(arch: str, *, port: int = 8000, replicas: int = 1,
+             smoke: bool = False, **kw) -> int:
+    """Serve over HTTP until interrupted; ``smoke=True`` instead runs the
+    in-process stdlib-client checks (streaming + 429 + /metrics) against
+    a tiny-cap server and returns an exit code (the CI gate)."""
+    if smoke:
+        # the 429 case needs deterministically tiny caps: one active
+        # stream holds the dispatch window, one ticket fills the queue
+        kw["max_queue"], kw["max_active"] = 1, 1
+        port = 0                       # ephemeral: parallel CI jobs
+    _, server = build_http_server(arch, replicas=replicas, port=port, **kw)
+    server.start()
+    host, bound = server.address
+    print(f"serving on http://{host}:{bound} "
+          f"(replicas={replicas}, smoke={smoke})", flush=True)
+    if smoke:
+        try:
+            _http_smoke(host, bound)
+            print("HTTP smoke OK", flush=True)
+            return 0
+        except Exception as e:     # noqa: BLE001 — exit-code gate
+            import traceback
+            traceback.print_exc()
+            print(f"HTTP smoke FAILED: {e}", flush=True)
+            return 1
+        finally:
+            server.close()
+    try:
+        while True:
+            time.sleep(1.0)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.close()
+    return 0
+
+
+def _http_smoke(host: str, port: int):
+    """Stdlib-client smoke against a live server with max_active=1,
+    max_queue=1: (1) a streamed greedy completion produces SSE chunks and
+    [DONE]; (2) with the single active slot held by a live stream and the
+    queue full, a third request gets 429 + Retry-After while the held
+    stream keeps producing; (3) /metrics scrapes as Prometheus text."""
+    import http.client
+
+    def post(body, extra_headers=None):
+        c = http.client.HTTPConnection(host, port, timeout=120)
+        c.request("POST", "/v1/completions", json.dumps(body),
+                  {"Content-Type": "application/json",
+                   **(extra_headers or {})})
+        return c, c.getresponse()
+
+    # 1) plain streamed completion end-to-end
+    c, r = post({"prompt": [5, 9, 13], "max_tokens": 4,
+                 "temperature": 0.0, "stream": True})
+    assert r.status == 200, r.status
+    events = _read_sse(r)
+    assert events and events[-1] == "[DONE]", events[-2:]
+    toks = []
+    for ev in events[:-1]:
+        toks += json.loads(ev)["choices"][0]["token_ids"]
+    assert len(toks) == 4, toks
+    c.close()
+
+    # 2) hold the active slot with a long stream, fill the queue, expect
+    #    429 on the next arrival — while the held stream stays live
+    hold_c, hold_r = post({"prompt": [2, 3], "max_tokens": 48,
+                           "temperature": 0.0, "stream": True})
+    assert hold_r.status == 200
+    first = _read_sse(hold_r, max_events=1)    # it is actively decoding
+    assert first and first[0] != "[DONE]"
+    import threading as _t
+    queued_done = _t.Event()
+
+    def queued():
+        c2, r2 = post({"prompt": [4, 5], "max_tokens": 2,
+                       "temperature": 0.0, "stream": True})
+        _read_sse(r2)
+        c2.close()
+        queued_done.set()
+
+    qt = _t.Thread(target=queued, daemon=True)
+    qt.start()
+    deadline = time.monotonic() + 30
+    while time.monotonic() < deadline:   # wait until it occupies the queue
+        c3 = http.client.HTTPConnection(host, port, timeout=30)
+        c3.request("GET", "/metrics")
+        pending = [ln for ln in c3.getresponse().read().decode().splitlines()
+                   if ln.startswith("repro_admission_pending")]
+        c3.close()
+        if pending and pending[0].endswith(" 1"):
+            break
+        time.sleep(0.05)
+    c4, r4 = post({"prompt": [6], "max_tokens": 2, "stream": False})
+    assert r4.status == 429, r4.status
+    assert r4.getheader("Retry-After"), "429 must carry Retry-After"
+    c4.close()
+    rest = _read_sse(hold_r)                  # held stream was not perturbed
+    assert rest and rest[-1] == "[DONE]"
+    hold_c.close()
+    assert queued_done.wait(60), "queued request never completed"
+    qt.join(5)
+
+    # 3) Prometheus scrape
+    c5 = http.client.HTTPConnection(host, port, timeout=30)
+    c5.request("GET", "/metrics")
+    r5 = c5.getresponse()
+    assert r5.status == 200
+    text = r5.read().decode()
+    c5.close()
+    assert 'repro_requests_finished{replica="r0"}' in text, text[:400]
+    assert "repro_admission_rejected_total 1" in text, text[:400]
+
+
+def _read_sse(resp, max_events: int = 0):
+    """Read SSE ``data:`` payloads off an http.client response (until
+    [DONE]/EOF, or the first ``max_events`` if set)."""
+    events = []
+    while True:
+        line = resp.fp.readline()
+        if not line:
+            return events
+        line = line.decode().strip()
+        if not line.startswith("data: "):
+            continue
+        events.append(line[len("data: "):])
+        if events[-1] == "[DONE]" or (max_events and
+                                      len(events) >= max_events):
+            return events
+
+
 def _print_metrics(m: dict):
     print(json.dumps({k: v for k, v in m.items()
                       if k not in ("stages", "requests")},
@@ -234,6 +405,23 @@ def main():
                     help="continuous serving: Poisson arrivals replayed "
                          "through the step-driven request API "
                          "(docs/serving.md)")
+    ap.add_argument("--http", action="store_true",
+                    help="serve the OpenAI-style HTTP completions API "
+                         "over N engine replicas (docs/http.md)")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="HTTP mode: listen port (0 = ephemeral)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="HTTP mode: in-process engine replicas behind "
+                         "the least-loaded-KV router")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="HTTP mode: admission queue cap (full = 429)")
+    ap.add_argument("--max-active", type=int, default=0,
+                    help="HTTP mode: dispatched-request window "
+                         "(0 = unbounded)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="HTTP mode: run the stdlib-client smoke checks "
+                         "(streaming + 429 + /metrics) and exit with a "
+                         "status code — the CI gate")
     ap.add_argument("--arrival-rate", type=float, default=4.0,
                     help="online mode: Poisson arrival rate (requests/s)")
     ap.add_argument("--abort-every", type=int, default=0,
@@ -247,6 +435,15 @@ def main():
                   tpot_slo_ms=args.tpot_slo_ms, kv_layout=args.kv_layout,
                   block_size=args.block_size, kv_blocks=args.kv_blocks,
                   prefix_caching=not args.no_prefix_caching)
+    if args.http:
+        raise SystemExit(run_http(
+            args.arch, port=args.port, replicas=args.replicas,
+            smoke=args.smoke, engine=args.engine, pp=args.pp,
+            max_batch=args.max_batch, n_samplers=args.samplers,
+            chunk_tokens=args.chunk_tokens, policy=args.policy,
+            kv_layout=args.kv_layout, block_size=args.block_size,
+            kv_blocks=args.kv_blocks, max_queue=args.max_queue,
+            max_active=args.max_active))
     if args.online:
         run_online(args.arch, arrival_rate=args.arrival_rate,
                    abort_every=args.abort_every, **common)

@@ -1,0 +1,153 @@
+"""Server-side admission control (docs/http.md §Admission).
+
+Sits between the HTTP handler threads and the router: every completion
+request takes a :class:`Ticket` here BEFORE touching any engine.  The
+controller enforces
+
+  * a queue cap — more than ``max_queue`` undispatched tickets rejects
+    with :class:`QueueFull` (the server maps it to HTTP 429 +
+    ``Retry-After``) without perturbing anything already running;
+  * a dispatch window — at most ``max_active`` tickets are dispatched
+    (= submitted to an engine) at once, so the engines' own waiting
+    queues stay shallow and priority reordering happens HERE, where the
+    full picture (tenant, priority, arrival) is visible;
+  * dispatch order: priority desc, then per-tenant fair share (fewest
+    in-flight requests first — a tenant flooding the queue cannot starve
+    others at equal priority), then FIFO arrival.
+
+The scheduler below repeats the priority-then-FIFO ordering for
+whatever does reach an engine queue, and its preemption victim choice
+is lowest-priority-then-latest-arrival — so priorities hold end to end:
+admission, engine queueing, and block-pressure eviction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, List, Optional
+
+
+class QueueFull(Exception):
+    """Admission queue at capacity; carries the Retry-After hint (s)."""
+
+    def __init__(self, retry_after: int = 1):
+        super().__init__(f"admission queue full; retry after {retry_after}s")
+        self.retry_after = retry_after
+
+
+class Closed(Exception):
+    """Controller draining/shut down; server maps it to HTTP 503."""
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One request's admission handle (created by ``submit``)."""
+
+    seq: int                      # arrival order (monotonic)
+    priority: int
+    tenant: str
+    dispatched: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+    cancelled: bool = False
+    released: bool = False
+
+
+class AdmissionController:
+    def __init__(self, max_queue: int = 64,
+                 max_active: Optional[int] = None,
+                 retry_after_s: int = 1):
+        self.max_queue = max_queue
+        self.max_active = max_active           # None = unbounded dispatch
+        self.retry_after_s = retry_after_s
+        self._lock = threading.Lock()
+        self._pending: List[Ticket] = []       # undispatched, arrival order
+        self._inflight: Dict[str, int] = {}    # tenant -> dispatched count
+        self._active = 0
+        self._seq = 0
+        self._closed = False
+        self.n_admitted = 0
+        self.n_rejected = 0
+        self.n_dispatched = 0
+
+    # -- client side --------------------------------------------------------
+    def submit(self, *, priority: int = 0,
+               tenant: str = "anonymous") -> Ticket:
+        """Take a ticket; raises :class:`QueueFull` when the undispatched
+        queue is at capacity, :class:`Closed` while draining."""
+        with self._lock:
+            if self._closed:
+                raise Closed()
+            if len(self._pending) >= self.max_queue:
+                self.n_rejected += 1
+                raise QueueFull(self.retry_after_s)
+            t = Ticket(seq=self._seq, priority=priority, tenant=tenant)
+            self._seq += 1
+            self._pending.append(t)
+            self.n_admitted += 1
+            self._pump()
+        return t
+
+    def wait(self, ticket: Ticket, timeout: Optional[float] = None) -> bool:
+        """Block until the ticket is dispatched (True) or timeout."""
+        return ticket.dispatched.wait(timeout)
+
+    def release(self, ticket: Ticket):
+        """Return the ticket's dispatch slot (request finished, aborted,
+        or client gone); idempotent.  Cancels instead if undispatched."""
+        with self._lock:
+            if ticket.released:
+                return
+            ticket.released = True
+            if not ticket.dispatched.is_set():
+                ticket.cancelled = True
+                try:
+                    self._pending.remove(ticket)
+                except ValueError:
+                    pass
+                return
+            self._active -= 1
+            n = self._inflight.get(ticket.tenant, 1) - 1
+            if n:
+                self._inflight[ticket.tenant] = n
+            else:
+                self._inflight.pop(ticket.tenant, None)
+            self._pump()
+
+    # -- dispatch ------------------------------------------------------------
+    def _pump(self):
+        """Dispatch pending tickets while the window has room (caller
+        holds the lock).  Order: priority desc, least tenant in-flight,
+        FIFO arrival — see the module docstring."""
+        while self._pending and (self.max_active is None
+                                 or self._active < self.max_active):
+            best = min(self._pending,
+                       key=lambda t: (-t.priority,
+                                      self._inflight.get(t.tenant, 0),
+                                      t.seq))
+            self._pending.remove(best)
+            self._active += 1
+            self._inflight[best.tenant] = \
+                self._inflight.get(best.tenant, 0) + 1
+            self.n_dispatched += 1
+            best.dispatched.set()
+
+    # -- lifecycle / introspection -------------------------------------------
+    def close(self):
+        """Stop admitting; pending undispatched tickets are cancelled
+        (their waiters see ``cancelled`` after a spurious dispatch)."""
+        with self._lock:
+            self._closed = True
+            for t in self._pending:
+                t.cancelled = True
+                t.dispatched.set()     # wake waiters; they check cancelled
+            self._pending.clear()
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "admission_pending": len(self._pending),
+                "admission_active": self._active,
+                "admission_admitted_total": self.n_admitted,
+                "admission_rejected_total": self.n_rejected,
+                "admission_dispatched_total": self.n_dispatched,
+            }

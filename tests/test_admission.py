@@ -1,0 +1,130 @@
+"""Server-side admission control (docs/http.md §Admission): queue caps,
+the dispatch window, and the priority -> per-tenant-fair-share -> FIFO
+dispatch order.  Pure threading-level tests, no engine anywhere."""
+import pytest
+
+from repro.serving.admission import AdmissionController, Closed, QueueFull
+
+
+def _drain(ac, *tickets):
+    for t in tickets:
+        ac.release(t)
+
+
+def test_rejects_when_queue_full_without_touching_dispatched():
+    ac = AdmissionController(max_queue=2, max_active=1)
+    a = ac.submit()                      # dispatched (window of 1)
+    b = ac.submit()                      # pending 1/2
+    c = ac.submit()                      # pending 2/2
+    with pytest.raises(QueueFull) as ei:
+        ac.submit()
+    assert ei.value.retry_after == 1
+    # the running ticket and the queue are unperturbed by the reject
+    assert a.dispatched.is_set()
+    assert not b.dispatched.is_set() and not c.dispatched.is_set()
+    s = ac.snapshot()
+    assert s["admission_rejected_total"] == 1
+    assert s["admission_pending"] == 2 and s["admission_active"] == 1
+
+
+def test_dispatch_window_caps_active_and_release_refills():
+    ac = AdmissionController(max_queue=8, max_active=2)
+    t = [ac.submit() for _ in range(4)]
+    assert [x.dispatched.is_set() for x in t] == [True, True, False, False]
+    ac.release(t[0])
+    assert t[2].dispatched.is_set() and not t[3].dispatched.is_set()
+    assert ac.wait(t[2], timeout=0)
+
+
+def test_priority_beats_arrival_order():
+    ac = AdmissionController(max_queue=8, max_active=1)
+    hold = ac.submit()
+    low = ac.submit(priority=0)
+    high = ac.submit(priority=5)
+    ac.release(hold)
+    assert high.dispatched.is_set() and not low.dispatched.is_set()
+
+
+def test_tenant_fair_share_at_equal_priority():
+    """Window of 2 filled by tenant A; at release time B's request wins
+    over A's earlier-arrived third request (fewest in-flight first)."""
+    ac = AdmissionController(max_queue=8, max_active=2)
+    a1 = ac.submit(tenant="A")
+    a2 = ac.submit(tenant="A")
+    a3 = ac.submit(tenant="A")           # arrived before b1
+    b1 = ac.submit(tenant="B")
+    assert not a3.dispatched.is_set() and not b1.dispatched.is_set()
+    ac.release(a1)
+    assert b1.dispatched.is_set() and not a3.dispatched.is_set()
+    ac.release(a2)
+    assert a3.dispatched.is_set()
+    _drain(ac, a3, b1)
+    assert ac.snapshot()["admission_active"] == 0
+
+
+def test_priority_overrides_fair_share():
+    ac = AdmissionController(max_queue=8, max_active=1)
+    a1 = ac.submit(tenant="A")
+    a2 = ac.submit(tenant="A", priority=9)
+    b1 = ac.submit(tenant="B", priority=0)
+    ac.release(a1)
+    # B has fewer in-flight, but A's ticket outranks on priority
+    assert a2.dispatched.is_set() and not b1.dispatched.is_set()
+
+
+def test_fifo_breaks_full_ties():
+    ac = AdmissionController(max_queue=8, max_active=1)
+    hold = ac.submit(tenant="A")
+    x = ac.submit(tenant="B")
+    y = ac.submit(tenant="C")
+    ac.release(hold)
+    assert x.dispatched.is_set() and not y.dispatched.is_set()
+
+
+def test_release_is_idempotent_and_cancels_undispatched():
+    ac = AdmissionController(max_queue=8, max_active=1)
+    a = ac.submit()
+    b = ac.submit()
+    ac.release(b)                        # undispatched -> cancelled
+    assert b.cancelled and not b.dispatched.is_set()
+    ac.release(b)                        # no double-decrement
+    ac.release(a)
+    ac.release(a)
+    s = ac.snapshot()
+    assert s["admission_active"] == 0 and s["admission_pending"] == 0
+
+
+def test_close_cancels_pending_and_rejects_new():
+    ac = AdmissionController(max_queue=8, max_active=1)
+    a = ac.submit()
+    b = ac.submit()
+    ac.close()
+    # waiter wakes and must check .cancelled
+    assert ac.wait(b, timeout=1.0) and b.cancelled
+    assert not a.cancelled               # dispatched work keeps running
+    with pytest.raises(Closed):
+        ac.submit()
+
+
+def test_unbounded_window_dispatches_immediately():
+    ac = AdmissionController(max_queue=4, max_active=None)
+    t = [ac.submit() for _ in range(4)]
+    assert all(x.dispatched.is_set() for x in t)
+    # pending stays empty, so the queue cap never triggers
+    u = ac.submit()
+    assert u.dispatched.is_set()
+
+
+def test_snapshot_counters():
+    ac = AdmissionController(max_queue=1, max_active=1)
+    a = ac.submit()
+    b = ac.submit()
+    with pytest.raises(QueueFull):
+        ac.submit()
+    ac.release(a)
+    s = ac.snapshot()
+    assert s["admission_admitted_total"] == 2
+    assert s["admission_rejected_total"] == 1
+    assert s["admission_dispatched_total"] == 2
+    assert s["admission_active"] == 1 and s["admission_pending"] == 0
+    ac.release(b)

@@ -1,0 +1,189 @@
+"""Engine fleet: EngineReplica loop threading + Router least-loaded-KV
+placement (docs/http.md §Router).  Runs on the deterministic MockEngine
+— no JAX compile — so the full submit/stream/abort/drain surface is
+exercised in milliseconds."""
+import threading
+import time
+
+import pytest
+
+from repro.core.sampling_params import SamplingParams
+from repro.serving.mock import MockEngine
+from repro.serving.router import EngineReplica, ReplicaUnavailable, Router
+
+
+def _params(n_new=4, n=1, priority=0):
+    return SamplingParams(greedy=True, max_new_tokens=n_new, n=n,
+                          priority=priority)
+
+
+def _drain_stream(out_q, timeout=10.0):
+    outs = []
+    while True:
+        out = out_q.get(timeout=timeout)
+        if isinstance(out, BaseException):
+            raise out
+        outs.append(out)
+        if out.finished:
+            return outs
+
+
+# ---------------------------------------------------------------------------
+# Router.pick ranking (stub replicas: pure placement logic)
+# ---------------------------------------------------------------------------
+
+class _Stub:
+    def __init__(self, name, free, depth=0, active=0, healthy=True):
+        self.name = name
+        self._snap = {"kv_blocks_free": free, "queue_depth": depth,
+                      "active_requests": active, "kv_blocks_total": 64}
+        self.healthy = healthy
+
+    def load(self):
+        return dict(self._snap)
+
+
+def test_pick_prefers_most_free_blocks():
+    r = Router([_Stub("a", free=10), _Stub("b", free=30), _Stub("c", free=20)])
+    assert r.pick().name == "b"
+
+
+def test_pick_ties_fall_to_load_then_order():
+    r = Router([_Stub("a", free=10, depth=3), _Stub("b", free=10, depth=1),
+                _Stub("c", free=10, depth=1)])
+    assert r.pick().name == "b"           # least load; order breaks b vs c
+
+
+def test_pick_skips_unhealthy_and_raises_when_none():
+    r = Router([_Stub("a", free=50, healthy=False), _Stub("b", free=1)])
+    assert r.pick().name == "b"
+    r2 = Router([_Stub("a", free=50, healthy=False)])
+    with pytest.raises(ReplicaUnavailable):
+        r2.pick()
+
+
+def test_router_requires_replicas():
+    with pytest.raises(ValueError):
+        Router([])
+
+
+# ---------------------------------------------------------------------------
+# EngineReplica loop: submit / stream / abort / drain
+# ---------------------------------------------------------------------------
+
+def test_replica_streams_deterministic_tokens():
+    rep = EngineReplica("r0", MockEngine()).start()
+    try:
+        rid, out_q = rep.submit([3, 5], _params(n_new=4))
+        outs = _drain_stream(out_q)
+        assert outs[-1].finished and outs[-1].finish_reason == "length"
+        got = [t for o in outs for t in o.new_token_ids]
+        assert got == [(8 + k) % 64 for k in range(4)]
+        assert outs[-1].metrics is not None
+    finally:
+        assert rep.drain()
+    assert not rep.healthy
+
+
+def test_replica_abort_mid_stream_reclaims():
+    eng = MockEngine()
+    rep = EngineReplica("r0", eng).start()
+    try:
+        rid, out_q = rep.submit([2], _params(n_new=10_000))
+        first = out_q.get(timeout=10.0)
+        assert not first.finished
+        rep.abort(rid)
+        outs = _drain_stream(out_q)
+        assert outs[-1].finish_reason == "abort"
+        assert eng.n_aborts == 1
+        # all KV back: nothing live on the engine after the abort lands
+        assert eng.load()["kv_blocks_free"] == eng.kv_blocks
+    finally:
+        rep.drain()
+
+
+def test_replica_fork_streams_ride_along():
+    rep = EngineReplica("r0", MockEngine()).start()
+    try:
+        rid, out_q = rep.submit([4], _params(n_new=3, n=2))
+        outs = _drain_stream(out_q)
+        assert outs[-1].forks and outs[-1].forks[0].finished
+        fork_toks = [t for o in outs for t in o.forks[0].new_token_ids]
+        assert fork_toks == [(4 + 31 + k) % 64 for k in range(3)]
+    finally:
+        rep.drain()
+
+
+def test_replica_crash_marks_unhealthy_and_fails_streams():
+    class Exploding(MockEngine):
+        def step(self):
+            raise RuntimeError("boom")
+
+    rep = EngineReplica("r0", Exploding()).start()
+    rid, out_q = rep.submit([1], _params())
+    with pytest.raises(RuntimeError, match="boom"):
+        _drain_stream(out_q)
+    rep._thread.join(5.0)
+    assert not rep.healthy and rep.error is not None
+    with pytest.raises(ReplicaUnavailable):
+        rep.submit([1], _params())
+
+
+def test_drain_finishes_inflight_work():
+    rep = EngineReplica("r0", MockEngine()).start()
+    rid, out_q = rep.submit([6], _params(n_new=8))
+    assert rep.drain()
+    outs = _drain_stream(out_q, timeout=1.0)
+    assert outs[-1].finished and len(outs[-1].token_ids) == 8
+
+
+# ---------------------------------------------------------------------------
+# Router over live replicas: spread + counters
+# ---------------------------------------------------------------------------
+
+class _Gated(MockEngine):
+    """MockEngine that holds decode until released, so KV occupancy is
+    frozen while the routing decisions under test are being made."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self.gate = threading.Event()
+
+    def step(self):
+        if not self.gate.is_set():
+            time.sleep(0.001)
+            return []
+        return super().step()
+
+
+def test_router_spreads_by_free_blocks():
+    reps = [EngineReplica(f"r{i}", _Gated(start_id=100 * i))
+            for i in range(2)]
+    router = Router(reps).start()
+    try:
+        qs = []
+        for _ in range(4):
+            _, rid, out_q = router.submit([8] * 8, _params(n_new=8))
+            qs.append((rid, out_q))
+        assert router.routed == {"r0": 2, "r1": 2}
+        for rep in reps:
+            assert rep.engine.load()["active_requests"] == 2
+        for rep in reps:
+            rep.engine.gate.set()
+        for rid, out_q in qs:
+            _drain_stream(out_q)
+    finally:
+        router.shutdown(drain=True)
+
+
+def test_router_health_and_metrics_views():
+    reps = [EngineReplica("r0", MockEngine())]
+    router = Router(reps).start()
+    try:
+        h = router.health()
+        assert h["r0"]["healthy"] and "kv_blocks_free" in h["r0"]
+        m = router.metrics()
+        assert m["r0"]["requests_finished"] == 0
+    finally:
+        router.shutdown(drain=True)
+    assert not router.health()["r0"]["healthy"]
