@@ -185,6 +185,12 @@ class MixedWorkloadResult:
     bubble_ticks: int         # (stage, iteration) events where a stage idled
     prefill_block_s: float    # wall time spent in pipeline-blocking prefills
     iteration_tokens: List[int]
+    # hybrid tier accounting (docs/hybrid.md): virtual-time split of the
+    # token stream and the online tier's simulated inter-token latency
+    online_tokens: int = 0
+    offline_tokens: int = 0
+    online_tpot_mean_s: float = 0.0
+    online_tpot_p99_s: float = 0.0
 
     @property
     def bubble_fracs(self) -> List[float]:
@@ -203,6 +209,9 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
                             chunked: bool = True,
                             policy: Optional[str] = None,
                             hysteresis_tokens: Optional[int] = None,
+                            offline_prompt_lens: Optional[List[int]] = None,
+                            offline_max_new_tokens: Optional[int] = None,
+                            decode_enlarge_factor: int = 1,
                             max_iters: int = 100_000) -> MixedWorkloadResult:
     """Drive the REAL continuous-batching scheduler (repro.core.scheduler)
     through a discrete-event pipeline timing model.
@@ -234,6 +243,14 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
     forward-end and sampling latency gates only the same slot's next
     iteration — the engine's per-slot autoregressive gate — so other
     slots stream through the freed stage and the bubble closes.
+
+    ``offline_prompt_lens`` adds a tier="offline" batch workload
+    (docs/hybrid.md) riding in the scheduler's slack;
+    ``decode_enlarge_factor`` enables the disaggregated policy's
+    decode-phase batch enlargement.  The result then carries per-tier
+    token totals and the online tier's virtual-time TPOT — the
+    deterministic basis for the hybrid bench's "offline traffic must
+    not degrade online latency" gate.
     """
     from repro.core.sampling_params import SamplingParams
     from repro.core.scheduler import Scheduler
@@ -243,15 +260,26 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
 
     if policy is None:
         policy = "chunked" if chunked else "monolithic"
+    off_lens = offline_prompt_lens or []
+    off_new = offline_max_new_tokens or max_new_tokens
+    all_lens = list(prompt_lens) + list(off_lens)
     sched = Scheduler(max_batch=max_batch, pp_degree=p,
-                      max_seq_len=max(prompt_lens) + max_new_tokens + 4,
+                      max_seq_len=max(all_lens) + max(max_new_tokens,
+                                                      off_new) + 4,
                       token_budget=(token_budget if policy != "monolithic"
                                     else None),
-                      policy=policy, hysteresis_tokens=hysteresis_tokens)
+                      policy=policy, hysteresis_tokens=hysteresis_tokens,
+                      decode_enlarge_factor=decode_enlarge_factor)
     for i, plen in enumerate(prompt_lens):
         sched.add_request(Sequence(i, list(range(1, plen + 1)),
                                    SamplingParams(greedy=True,
                                                   max_new_tokens=max_new_tokens)))
+    online_ids = set(range(len(prompt_lens)))
+    for j, plen in enumerate(off_lens):
+        sched.add_request(Sequence(
+            len(prompt_lens) + j, list(range(1, plen + 1)),
+            SamplingParams(greedy=True, max_new_tokens=off_new,
+                           tier="offline")))
 
     def stage_dur(s: int, tokens: int) -> float:
         d = t_fixed + t_token * tokens
@@ -265,6 +293,9 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
     bubble_ticks = 0
     prefill_block = 0.0
     iter_tokens: List[int] = []
+    online_toks = offline_toks = 0
+    online_last_t: Dict[int, float] = {}     # seq -> last sample (virtual s)
+    online_tpots: List[float] = []
     wall = 0.0
     it = 0
     while it < max_iters and sched.has_work:
@@ -295,6 +326,12 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
                 continue
         tokens = out.total_tokens
         iter_tokens.append(tokens)
+        for i, sid in enumerate(out.seq_ids):
+            n = out.spans[i][1] if out.spans is not None else 1
+            if sid in online_ids:
+                online_toks += n
+            else:
+                offline_toks += n
         dep = slot_prev_end.get(out.slot, 0.0)
         for s in range(p):
             dur = stage_dur(s, tokens)
@@ -321,6 +358,13 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
             dep += t_sample
         wall = max(wall, dep)
         ids = [out.seq_ids[i] for i in cols]
+        for sid in ids:
+            # virtual-time online inter-token latency: each sampled token
+            # lands at ``dep`` (iteration end incl. the sampling gate)
+            if sid in online_ids:
+                if sid in online_last_t:
+                    online_tpots.append(dep - online_last_t[sid])
+                online_last_t[sid] = dep
         sched.complete(it, ids, np.full(len(ids), 7, np.int32))
         it += 1
 
@@ -331,7 +375,12 @@ def simulate_mixed_workload(*, p: int = 2, max_batch: int = 4,
     return MixedWorkloadResult(
         iterations=len(iter_tokens), wall_s=wall, tokens_total=toks,
         stage_busy=stage_busy, occupancy=occ, bubble_ticks=bubble_ticks,
-        prefill_block_s=prefill_block, iteration_tokens=iter_tokens)
+        prefill_block_s=prefill_block, iteration_tokens=iter_tokens,
+        online_tokens=online_toks, offline_tokens=offline_toks,
+        online_tpot_mean_s=(float(np.mean(online_tpots))
+                            if online_tpots else 0.0),
+        online_tpot_p99_s=(float(np.percentile(online_tpots, 99))
+                           if online_tpots else 0.0))
 
 
 def simulate_disaggregated(*, p: int = 2, max_batch: int = 4,

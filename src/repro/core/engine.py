@@ -217,6 +217,14 @@ class EngineConfig:
     # adaptive policy: target mean inter-token latency (None = the policy
     # self-calibrates from the first observed window)
     tpot_slo_s: Optional[float] = None
+    # hybrid serving (docs/hybrid.md): in the disaggregated policy's
+    # DECODE phase, offline-tier decodes may enlarge the batch beyond
+    # max_batch up to max_batch * factor, but only at pow2 rungs (2x, 4x,
+    # ...) so each rung is exactly one extra XLA compile shape — the same
+    # discipline max_table_buckets applies to block-table widths.  1
+    # (default) disables enlargement; > 1 requires the paged KV layout
+    # and the disaggregated policy.
+    decode_enlarge_factor: int = 1
     # bound on retained per-request latency records (the window online
     # metrics percentiles are computed over)
     keep_recent_requests: int = 2048
@@ -511,6 +519,13 @@ class PPEngineBase:
         # monotonic space as request ids, so they can never collide with
         # a future request's worker-side state
         self._alloc = RequestIdAllocator()
+        if cfg.decode_enlarge_factor > 1 and not self.paged:
+            # enlargement admits offline members beyond max_batch whose
+            # eviction must free KV capacity on demand — only the paged
+            # layout's preemption-by-recompute supports that (contiguous
+            # SequenceCache rows leak on drop_entry)
+            raise ValueError(
+                "decode_enlarge_factor > 1 requires the paged KV layout")
         self.scheduler = Scheduler(max_batch=cfg.max_batch, pp_degree=cfg.pp_degree,
                                    max_seq_len=cfg.max_seq_len,
                                    token_budget=cfg.prefill_chunk_tokens,
@@ -518,6 +533,7 @@ class PPEngineBase:
                                    hysteresis_tokens=cfg.phase_hysteresis_tokens,
                                    tpot_slo_s=cfg.tpot_slo_s,
                                    kv_manager=self.kv_manager,
+                                   decode_enlarge_factor=cfg.decode_enlarge_factor,
                                    seq_id_fn=self._alloc.next)
         if self.scheduler.chunked and self.arch.family not in ("dense", "moe"):
             raise NotImplementedError(
@@ -711,6 +727,13 @@ class PPEngineBase:
             raise ValueError(
                 "SamplingParams.n > 1 (parallel sampling) forks the prompt "
                 "KV copy-on-write, which requires kv_layout='paged'")
+        if params.tier == "offline" and not self.paged:
+            # offline sequences are preempted-by-recompute the moment
+            # online traffic needs their seats; contiguous SequenceCache
+            # rows have no recompute path (drop_entry leaks the row)
+            raise ValueError(
+                "tier='offline' (hybrid serving, docs/hybrid.md) relies on "
+                "preemption-by-recompute, which requires kv_layout='paged'")
         rid = self._alloc.next()
         seq = Sequence(rid, list(prompt_ids), params,
                        arrival_t=arrival_t or 0.0)
@@ -1152,7 +1175,11 @@ class PPEngineBase:
             free = self.seq_cache.free_rows
         return {
             "active_requests": len(self.requests),
+            # online waiting only — the router balances SLO traffic; the
+            # offline backlog is reported separately so it never repels
+            # online placements from an engine with deep batch work
             "queue_depth": len(self.scheduler.waiting),
+            "offline_queue_depth": len(self.scheduler.waiting_offline),
             "kv_blocks_total": total,
             "kv_blocks_free": free,
         }
@@ -1175,9 +1202,16 @@ class PPEngineBase:
                 "bubble_frac": max(0.0, 1.0 - busy / wall),
             })
         stats = list(self._request_stats)
-        tpots = [r.tpot_s for r in stats if r.tpot_s is not None]
-        ttfts = [r.ttft_s for r in stats if r.ttft_s is not None]
-        queues = [r.queue_s for r in stats if r.queue_s is not None]
+        # latency percentiles are ONLINE-tier only (docs/hybrid.md):
+        # offline rows would drag the SLO metrics the admission layer and
+        # the adaptive policy steer by; they get their own offline_* keys
+        online = [r for r in stats if r.tier != "offline"]
+        offline = [r for r in stats if r.tier == "offline"]
+        tpots = [r.tpot_s for r in online if r.tpot_s is not None]
+        ttfts = [r.ttft_s for r in online if r.ttft_s is not None]
+        queues = [r.queue_s for r in online if r.queue_s is not None]
+        off_tpots = [r.tpot_s for r in offline if r.tpot_s is not None]
+        off_ttfts = [r.ttft_s for r in offline if r.ttft_s is not None]
 
         def pct(vals, q):
             return float(np.percentile(vals, q)) if vals else 0.0
@@ -1194,11 +1228,24 @@ class PPEngineBase:
             "ttft_p99_s": pct(ttfts, 99),
             "queue_mean_s": float(np.mean(queues)) if queues else 0.0,
             "queue_p99_s": pct(queues, 99),
+            # hybrid tier (docs/hybrid.md): offline latency tracked apart
+            # from the online SLO percentiles above, plus the slack ledger
+            # (bubble seats offered / sold) and offline preemption count
+            "offline_tpot_mean_s": float(np.mean(off_tpots)) if off_tpots else 0.0,
+            "offline_tpot_p99_s": pct(off_tpots, 99),
+            "offline_ttft_mean_s": float(np.mean(off_ttfts)) if off_ttfts else 0.0,
+            "offline_ttft_p99_s": pct(off_ttfts, 99),
+            "offline_requests_seen": len(offline),
+            "slack_seats_seen": self.scheduler.slack.seats_seen,
+            "slack_tokens_sold": self.scheduler.slack.tokens_sold,
+            "slack_offers": self.scheduler.slack.offers,
+            "offline_preemptions": self.scheduler.n_offline_preemptions,
             "requests_submitted": self._n_submitted,
             "requests_finished": self._n_finished,
             "requests_aborted": self._n_aborted,
             "requests_active": len(self.requests),
             "queue_depth": len(self.scheduler.waiting),
+            "offline_queue_depth": len(self.scheduler.waiting_offline),
             # per-request latency records over the retained window
             "requests": {r.request_id: r.as_dict() for r in stats},
             "sample_s": self.sample_time,

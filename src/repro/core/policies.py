@@ -90,6 +90,25 @@ class SchedulingPolicy:
                    if s.seqs[sid].status == SeqStatus.RUNNING]
         return members, len(members) != len(s.slot_members[slot])
 
+    @staticmethod
+    def _tier_split(s: "Scheduler",
+                    members: List[int]) -> Tuple[List[int], List[int]]:
+        """Partition slot members by tier, preserving order.  Policies
+        schedule the online sublist FIRST and exactly as an online-only
+        run would (docs/hybrid.md): offline members ride behind it in
+        batch order, so the online sub-trace of every iteration is
+        bit-identical with or without offline traffic."""
+        online = [sid for sid in members if s.seqs[sid].is_online]
+        offline = [sid for sid in members if not s.seqs[sid].is_online]
+        return online, offline
+
+    @staticmethod
+    def _prune_running(s: "Scheduler", ids: List[int]) -> List[int]:
+        """Drop members preempted mid-schedule (the online admission
+        gate reclaims offline holdings as a side effect)."""
+        return [sid for sid in ids
+                if s.seqs[sid].status == SeqStatus.RUNNING]
+
 
 class MonolithicPolicy(SchedulingPolicy):
     """Seed behavior: admit waiters as whole-prompt ``is_prefill`` batches
@@ -104,9 +123,10 @@ class MonolithicPolicy(SchedulingPolicy):
 
         slot = it % s.p
         members, recomposed = self._alive_members(s, slot)
+        online, offline = self._tier_split(s, members)
         new_prefill: List[int] = []
-        while s.waiting and len(members) < s.max_batch and s.can_admit_next():
-            seq = s.admit_next()                  # paged: reserves blocks
+
+        def admit(seq: Sequence, into: List[int]):
             # a fork child admits with its prefill already satisfied (its
             # prompt KV lives in the shared blocks) — it joins as a pure
             # decode member, no is_prefill pass.  A prefix-cache-hit seq
@@ -116,13 +136,34 @@ class MonolithicPolicy(SchedulingPolicy):
             # (engine passes mask_shared tables) — memory sharing only.
             needs_prefill = not seq.prefill_done
             seq.prefilled = seq.prefill_len       # monolithic: all at once
-            members.append(seq.seq_id)
+            into.append(seq.seq_id)
             if needs_prefill:
                 new_prefill.append(seq.seq_id)
+
+        while s.waiting and len(online) < s.max_batch and s.can_admit_next():
+            offline = self._prune_running(s, offline)
+            # online always gets its seat: an offline member occupying
+            # the last one is preempted-by-recompute (docs/hybrid.md)
+            if (len(online) + len(offline) >= s.max_batch
+                    and not s.preempt_offline_seat(offline)):
+                break
+            admit(s.admit_next(), online)         # paged: reserves blocks
             recomposed = True
+        # ---- offline tier: only seats the online tier left unclaimed ----
+        offline = self._prune_running(s, offline)
+        s.slack.see(s.max_batch - len(online))
+        while (not s.waiting and s.waiting_offline
+               and len(online) + len(offline) < s.max_batch
+               and s.can_admit_next_offline()):
+            admit(s.admit_next_offline(), offline)
+            recomposed = True
+        new_members = online + offline
+        recomposed = recomposed or new_members != members
+        members = new_members
         s.slot_members[slot] = members
         if not members:
             return None
+        s.slack.sell(len(offline))    # one decode token per offline member
 
         tokens = np.array([s.seqs[sid].last_token for sid in members], np.int32)
         positions = np.array([s.seqs[sid].length - 1 for sid in members], np.int32)
@@ -151,8 +192,11 @@ class ChunkedPolicy(SchedulingPolicy):
     def schedule(self, s: "Scheduler", it: int) -> Optional["SchedulingOutput"]:
         slot = it % s.p
         members, recomposed = self._alive_members(s, slot)
+        online, offline = self._tier_split(s, members)
 
-        n_decode = sum(1 for sid in members if s.seqs[sid].prefill_done)
+        # online decodes are entitled to their token; offline members get
+        # no entitlement — they draw only from the leftover budget below
+        n_decode = sum(1 for sid in online if s.seqs[sid].prefill_done)
         budget_left = s.token_budget - n_decode
 
         batch_ids: List[int] = []
@@ -182,7 +226,7 @@ class ChunkedPolicy(SchedulingPolicy):
             return True
 
         deferred = False
-        for sid in members:
+        for sid in online:
             if not emit(s.seqs[sid]):
                 deferred = True
         # fork children and prefix-cache hits need no special casing here:
@@ -190,14 +234,68 @@ class ChunkedPolicy(SchedulingPolicy):
         # advanced past the cached blocks (hit), and ``emit`` naturally
         # produces a decode span or a tail-only chunk starting at the
         # first unshared (block-aligned) token
-        while (s.waiting and len(members) < s.max_batch
+        while (s.waiting and len(online) < s.max_batch
                and budget_left > 0 and s.can_admit_next()):
+            offline = self._prune_running(s, offline)
+            if (len(online) + len(offline) >= s.max_batch
+                    and not s.preempt_offline_seat(offline)):
+                break
             seq = s.admit_next()
-            members.append(seq.seq_id)
+            online.append(seq.seq_id)
             recomposed = True
             emit(seq)
 
-        s.slot_members[slot] = members
+        # ---- offline tier (docs/hybrid.md): whatever budget and seats
+        # the online tier left this iteration.  Offline decodes are
+        # deferrable (unlike online ones) — an iteration whose online
+        # members ate the budget simply pauses them.
+        offline = self._prune_running(s, offline)
+        s.slack.see(s.max_batch - len(online))
+        sold = 0
+
+        def emit_offline(seq: Sequence) -> bool:
+            nonlocal budget_left, sold
+            if seq.prefill_done:
+                if budget_left < 1:
+                    return False
+                spans.append((seq.length - 1, 1))
+                span_tokens.append([seq.last_token])
+                needs_sample.append(True)
+                batch_ids.append(seq.seq_id)
+                budget_left -= 1
+                sold += 1
+                return True
+            c = min(seq.prefill_len - seq.prefilled, budget_left)
+            if c <= 0:
+                return False
+            off = seq.prefilled
+            spans.append((off, c))
+            span_tokens.append(seq.prefill_slice(off, c))
+            needs_sample.append(off + c >= seq.prefill_len)
+            batch_ids.append(seq.seq_id)
+            seq.prefilled = off + c
+            budget_left -= c
+            sold += c
+            return True
+
+        for sid in offline:
+            if not emit_offline(s.seqs[sid]):
+                deferred = True
+        # admit offline only when no online waiter wants the seat (an
+        # online head blocked on KV blocks would thrash: its admission
+        # gate reclaims offline holdings on its next attempt)
+        while (not s.waiting and s.waiting_offline
+               and len(online) + len(offline) < s.max_batch
+               and budget_left > 0 and s.can_admit_next_offline()):
+            seq = s.admit_next_offline()
+            offline.append(seq.seq_id)
+            recomposed = True
+            emit_offline(seq)
+        s.slack.sell(sold)
+
+        new_members = online + offline
+        recomposed = recomposed or new_members != members
+        s.slot_members[slot] = new_members
         if not batch_ids:
             return None
         # any chunked batch (or deferral gap) recomposes vs. pure decode
@@ -278,13 +376,21 @@ class DisaggregatedPolicy(SchedulingPolicy):
     MIN_TPOT_SAMPLES = 8   # live samples needed before the cap engages
 
     def __init__(self, hysteresis_tokens: Optional[int] = None,
-                 tpot_slo_s: Optional[float] = None):
+                 tpot_slo_s: Optional[float] = None,
+                 decode_enlarge_factor: int = 1):
         self.hysteresis_tokens = hysteresis_tokens   # None -> token budget
         self.tpot_slo_s = tpot_slo_s                 # None -> no phase cap
+        # TD-Pipe-style decode-phase batch enlargement (docs/hybrid.md):
+        # during pure-decode phases, offline decodes may widen the batch
+        # beyond max_batch up to max_batch * factor, but only at pow2
+        # rung totals (2*mb, 4*mb, ...) so each rung is ONE extra XLA
+        # compile shape — the same capping discipline as table widths
+        self.decode_enlarge_factor = max(1, int(decode_enlarge_factor))
         self.phase = self.PREFILL
         self.phase_switches = 0
         self.prefill_iters = 0
         self.decode_iters = 0
+        self.enlarged_decode_iters = 0   # decode batches widened past mb
         self._phase_tokens = 0      # prefill tokens issued this phase
         self._phase_cap = 0         # 0 = uncapped
         self.capped_phases = 0
@@ -295,6 +401,8 @@ class DisaggregatedPolicy(SchedulingPolicy):
             "phase_switches": self.phase_switches,
             "prefill_iters": self.prefill_iters,
             "decode_iters": self.decode_iters,
+            "enlarged_decode_iters": self.enlarged_decode_iters,
+            "decode_enlarge_factor": self.decode_enlarge_factor,
             "phase_token_cap": self._phase_cap,
             "capped_phases": self.capped_phases,
         }
@@ -324,14 +432,32 @@ class DisaggregatedPolicy(SchedulingPolicy):
         return bool(self._phase_cap) and self._phase_tokens >= self._phase_cap
 
     def _evaluate_phase(self, s: "Scheduler"):
-        running = [q for q in s.seqs.values() if q.status == SeqStatus.RUNNING]
+        # Phase decisions are a pure function of ONLINE state: offline
+        # members or backlog flipping a phase would change online
+        # scheduling vs an online-only run (docs/hybrid.md).  Only when
+        # there is no online work anywhere — nothing running, nothing
+        # queued (incl. preempted resumes) — does the offline tier drive
+        # the machine: an online-only run schedules nothing in that
+        # state, so there is no online trace to disturb.
+        tier_online = bool(s.waiting) or any(
+            q.status == SeqStatus.RUNNING and q.is_online
+            for q in s.seqs.values())
+        queue = s.waiting if tier_online else s.waiting_offline
+        running = [q for q in s.seqs.values()
+                   if q.status == SeqStatus.RUNNING
+                   and q.is_online == tier_online]
         n_decode = sum(1 for q in running if q.prefill_done)
         run_prefill = sum(q.prefill_len - q.prefilled for q in running
                           if not q.prefill_done)
         slot_alive = [sum(1 for sid in m
-                          if s.seqs[sid].status == SeqStatus.RUNNING)
+                          if s.seqs[sid].status == SeqStatus.RUNNING
+                          and s.seqs[sid].is_online == tier_online)
                       for m in s.slot_members]
-        space = sum(max(0, s.max_batch - a) for a in slot_alive)
+        # offline-driven: seats extend to the enlargement headroom, so a
+        # backlog keeps prefilling until decode phases can run enlarged
+        per_slot = (s.max_batch if tier_online
+                    else s.max_batch * self.decode_enlarge_factor)
+        space = sum(max(0, per_slot - a) for a in slot_alive)
         # only the ADMISSIBLE backlog counts: the first `space` waiting
         # prompts (FIFO admission) — a deep queue behind one free seat
         # must not fire the threshold, pause every decode slot, and then
@@ -340,7 +466,7 @@ class DisaggregatedPolicy(SchedulingPolicy):
         # prefix and a fork child's whole prompt cost no prefill compute,
         # so they must not inflate the pause-the-decodes threshold
         waiting_tokens = sum(max(0, q.prefill_len - q.prefilled)
-                             for q, _ in zip(s.waiting, range(space)))
+                             for q, _ in zip(queue, range(space)))
 
         if self.phase == self.PREFILL:
             self._refresh_cap(s)
@@ -371,6 +497,7 @@ class DisaggregatedPolicy(SchedulingPolicy):
         n_decode_slots = sum(
             1 for m in s.slot_members
             if any(s.seqs[sid].status == SeqStatus.RUNNING
+                   and s.seqs[sid].is_online == tier_online
                    and s.seqs[sid].prefill_done for sid in m))
         h = (self.hysteresis_tokens if self.hysteresis_tokens is not None
              else s.token_budget)
@@ -382,6 +509,10 @@ class DisaggregatedPolicy(SchedulingPolicy):
         self._evaluate_phase(s)
         slot = it % s.p
         members, recomposed = self._alive_members(s, slot)
+        online, offline = self._tier_split(s, members)
+        # offline membership may run up to max_batch * factor (the
+        # enlargement headroom); online always fits in max_batch
+        cap_members = s.max_batch * self.decode_enlarge_factor
 
         if self.phase == self.DECODE:
             # fork children carry zero prefill tokens — admitting them
@@ -389,12 +520,51 @@ class DisaggregatedPolicy(SchedulingPolicy):
             # as decode members) and lets parallel-sampling children start
             # without waiting for the next prefill phase
             while (s.waiting and s.waiting[0].forked
-                   and len(members) < s.max_batch and s.can_admit_next()):
+                   and len(online) < s.max_batch and s.can_admit_next()):
+                offline = self._prune_running(s, offline)
+                if (len(online) + len(offline) >= cap_members
+                        and not s.preempt_offline_seat(offline)):
+                    break
                 seq = s.admit_next()
-                members.append(seq.seq_id)
+                online.append(seq.seq_id)
                 recomposed = True
-            s.slot_members[slot] = members
-            batch_ids = [sid for sid in members if s.seqs[sid].prefill_done]
+            # offline fork children are likewise decode-ready; fresh
+            # offline prompts wait for a prefill phase
+            offline = self._prune_running(s, offline)
+            s.slack.see(s.max_batch - len(online))
+            while (s.waiting_offline and s.waiting_offline[0].forked
+                   and len(online) + len(offline) < cap_members
+                   and s.can_admit_next_offline()):
+                seq = s.admit_next_offline()
+                offline.append(seq.seq_id)
+                recomposed = True
+            new_members = online + offline
+            recomposed = recomposed or new_members != members
+            s.slot_members[slot] = new_members
+            on_ids = [sid for sid in online if s.seqs[sid].prefill_done]
+            off_ids = [sid for sid in offline if s.seqs[sid].prefill_done]
+            # enlargement ladder: batch totals beyond max_batch only at
+            # pow2 rungs (2*mb, 4*mb, ... <= mb*factor) — each rung is
+            # one extra compile shape.  Between rungs, offline decodes
+            # share the <= max_batch seats round-robin (rotation by
+            # decode_iters) so none of them starves.
+            total = len(on_ids) + len(off_ids)
+            if total > s.max_batch:
+                rung = s.max_batch
+                r = 2 * s.max_batch
+                while r <= cap_members:
+                    if r <= total:
+                        rung = r
+                    r *= 2
+                total = rung
+            n_off = max(0, total - len(on_ids))
+            if off_ids and n_off < len(off_ids):
+                start = self.decode_iters % len(off_ids)
+                off_ids = [off_ids[(start + i) % len(off_ids)]
+                           for i in range(n_off)]
+            else:
+                off_ids = off_ids[:n_off]
+            batch_ids = on_ids + off_ids
             if not batch_ids:
                 return None
             spans = []
@@ -403,8 +573,11 @@ class DisaggregatedPolicy(SchedulingPolicy):
                 seq = s.seqs[sid]
                 spans.append((seq.length - 1, 1))
                 span_tokens.append([seq.last_token])
-            recomposed = recomposed or len(batch_ids) != len(members)
+            recomposed = recomposed or len(batch_ids) != len(new_members)
             self.decode_iters += 1
+            if len(batch_ids) > s.max_batch:
+                self.enlarged_decode_iters += 1
+            s.slack.sell(len(off_ids))
             return _span_output(s, it, slot, batch_ids, spans, span_tokens,
                                 [True] * len(batch_ids), recomposed)
 
@@ -425,24 +598,63 @@ class DisaggregatedPolicy(SchedulingPolicy):
             batch_ids.append(seq.seq_id)
             seq.prefilled = off + c
             budget_left -= c
-            self._phase_tokens += c
             return True
 
-        for sid in members:
+        def emit_online_chunk(seq: Sequence) -> bool:
+            ok = emit_chunk(seq)
+            if ok:
+                # only ONLINE tokens advance the TPOT phase cap: offline
+                # tokens riding leftover budget must not end a phase
+                # earlier than an online-only run would (docs/hybrid.md)
+                self._phase_tokens += spans[-1][1]
+            return ok
+
+        for sid in online:
             seq = s.seqs[sid]
-            if seq.prefill_done or not emit_chunk(seq):
+            if seq.prefill_done or not emit_online_chunk(seq):
                 deferred = True       # decode members pause during prefill
         # a TPOT-capped phase stops admitting: in-progress prefills finish,
         # the backlog waits for the next phase (decodes get their turn)
-        while (s.waiting and len(members) < s.max_batch
+        while (s.waiting and len(online) < s.max_batch
                and budget_left > 0 and not self._capped()
                and s.can_admit_next()):
+            offline = self._prune_running(s, offline)
+            if (len(online) + len(offline) >= cap_members
+                    and not s.preempt_offline_seat(offline)):
+                break
             seq = s.admit_next()
-            members.append(seq.seq_id)
+            online.append(seq.seq_id)
             recomposed = True
-            emit_chunk(seq)
+            emit_online_chunk(seq)
 
-        s.slot_members[slot] = members
+        # ---- offline tier: leftover prefill budget (docs/hybrid.md).
+        # The phase's iteration count is a function of online state
+        # alone, and each iteration stays <= token_budget tokens, so
+        # filling the leftover costs at most what a full online prefill
+        # iteration already costs.  Batch width stays <= max_batch (no
+        # new compile shapes on the packed path).
+        offline = self._prune_running(s, offline)
+        s.slack.see(s.max_batch - len(online))
+        sold0 = budget_left
+        for sid in offline:
+            seq = s.seqs[sid]
+            if seq.prefill_done or len(batch_ids) >= s.max_batch \
+                    or not emit_chunk(seq):
+                deferred = True       # offline decodes pause during prefill
+        while (not s.waiting and s.waiting_offline
+               and len(online) + len(offline) < cap_members
+               and len(batch_ids) < s.max_batch
+               and budget_left > 0 and s.can_admit_next_offline()):
+            seq = s.admit_next_offline()
+            offline.append(seq.seq_id)
+            recomposed = True
+            if not seq.prefill_done:      # forked child: already decode-ready
+                emit_chunk(seq)
+        s.slack.sell(sold0 - budget_left)
+
+        new_members = online + offline
+        recomposed = recomposed or new_members != members
+        s.slot_members[slot] = new_members
         if not batch_ids:
             return None
         self.prefill_iters += 1
@@ -539,7 +751,8 @@ POLICIES = {
 
 def make_policy(name: Optional[str], *, token_budget: Optional[int] = None,
                 hysteresis_tokens: Optional[int] = None,
-                tpot_slo_s: Optional[float] = None) -> SchedulingPolicy:
+                tpot_slo_s: Optional[float] = None,
+                decode_enlarge_factor: int = 1) -> SchedulingPolicy:
     """Resolve a policy name against the token budget.
 
     ``None``/``"auto"`` keeps the historical contract: a token budget means
@@ -561,6 +774,14 @@ def make_policy(name: Optional[str], *, token_budget: Optional[int] = None,
             "tpot_slo_s / --tpot-slo-ms applies only to the adaptive "
             "(budget adaptation) and disaggregated (prefill-phase length "
             f"cap) policies (got policy {name!r})")
+    if decode_enlarge_factor < 1:
+        raise ValueError(
+            f"decode_enlarge_factor must be >= 1, got {decode_enlarge_factor}")
+    if decode_enlarge_factor > 1 and name != "disaggregated":
+        raise ValueError(
+            "decode_enlarge_factor > 1 applies only to the disaggregated "
+            "policy (decode-phase batch enlargement, docs/hybrid.md; got "
+            f"policy {name!r})")
     if name == "monolithic":
         if token_budget is not None:
             raise ValueError(
@@ -573,7 +794,8 @@ def make_policy(name: Optional[str], *, token_budget: Optional[int] = None,
             "(set prefill_chunk_tokens / --chunk-tokens)")
     if name == "disaggregated":
         return DisaggregatedPolicy(hysteresis_tokens=hysteresis_tokens,
-                                   tpot_slo_s=tpot_slo_s)
+                                   tpot_slo_s=tpot_slo_s,
+                                   decode_enlarge_factor=decode_enlarge_factor)
     if name == "adaptive":
         return AdaptivePolicy(tpot_slo_s=tpot_slo_s)
     return ChunkedPolicy()

@@ -130,6 +130,8 @@ class RequestMetrics:
     e2e_s: Optional[float]      # arrival -> finish
     finish_reason: Optional[str]
     state: RequestState
+    tier: str = "online"        # workload tier (docs/hybrid.md): online
+    #                             latency percentiles exclude offline rows
 
     @staticmethod
     def of(seq: Sequence) -> "RequestMetrics":
@@ -148,7 +150,7 @@ class RequestMetrics:
             request_id=seq.seq_id, prompt_tokens=seq.prompt_len,
             output_tokens=n, queue_s=queue, ttft_s=ttft, tpot_s=tpot,
             e2e_s=e2e, finish_reason=seq.finish_reason,
-            state=RequestState.of(seq))
+            state=RequestState.of(seq), tier=seq.params.tier)
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)

@@ -28,6 +28,18 @@ class SamplingParams:
     # ones.  0 is the neutral default; negative values mark best-effort
     # background work (e.g. offline batch traffic).
     priority: int = 0
+    # workload tier (docs/hybrid.md): "online" requests are foreground
+    # latency-SLO traffic; "offline" requests (evals, synthetic data,
+    # backfills) queue separately, are admitted only into measured
+    # pipeline slack, and are ALWAYS the first preemption victims — an
+    # offline sequence ranks below every online priority, including
+    # negative ones.  Priority still orders requests WITHIN a tier.
+    tier: str = "online"
+
+    def __post_init__(self):
+        if self.tier not in ("online", "offline"):
+            raise ValueError(
+                f"tier must be 'online' or 'offline', got {self.tier!r}")
 
     def needs_penalties(self) -> bool:
         return (

@@ -61,6 +61,32 @@ def bucket_width(n_tokens: int) -> int:
     return b
 
 
+class SlackAccount:
+    """Measured pipeline slack and the offline tokens sold into it
+    (docs/hybrid.md).
+
+    Every policy feeds this at schedule time: free decode seats left
+    after online admission, the leftover token budget of a prefill
+    phase, whole drain-tail iterations once online work runs out.  The
+    counters are the engine's bubble accounting — how much slack the
+    scheduler SAW (``seats_seen``) versus how much it actually SOLD to
+    offline-tier sequences (``tokens_sold``)."""
+
+    def __init__(self):
+        self.seats_seen = 0      # free online seats observed at schedule time
+        self.tokens_sold = 0     # span tokens issued to offline sequences
+        self.offers = 0          # schedule calls that observed any slack
+
+    def see(self, seats: int):
+        if seats > 0:
+            self.seats_seen += seats
+            self.offers += 1
+
+    def sell(self, tokens: int):
+        if tokens > 0:
+            self.tokens_sold += tokens
+
+
 @dataclasses.dataclass
 class SchedulingOutput:
     """Broadcast to every worker + sampler via BIC-I."""
@@ -157,6 +183,7 @@ class Scheduler:
                  policy: Optional[str] = None,
                  hysteresis_tokens: Optional[int] = None,
                  tpot_slo_s: Optional[float] = None,
+                 decode_enlarge_factor: int = 1,
                  keep_finished: int = 1024,
                  kv_manager=None,
                  seq_id_fn=None):
@@ -171,7 +198,8 @@ class Scheduler:
                              if token_budget is not None else None)
         self.policy = make_policy(policy, token_budget=self.token_budget,
                                   hysteresis_tokens=hysteresis_tokens,
-                                  tpot_slo_s=tpot_slo_s)
+                                  tpot_slo_s=tpot_slo_s,
+                                  decode_enlarge_factor=decode_enlarge_factor)
         # paged KV layout (docs/memory.md): admission switches from seat
         # counting to block-budget accounting against this
         # BlockSpaceManager, and decode growth under memory pressure
@@ -191,6 +219,14 @@ class Scheduler:
         self._preempted_pending: List[int] = []   # for the engine to reap
         self._preempt_hold: set = set()   # no re-admission within the call
         self.waiting: Deque[Sequence] = deque()
+        # hybrid serving (docs/hybrid.md): offline-tier requests queue
+        # separately so every online code path — admission loops, the
+        # disaggregated phase machine, block-budget gates — sees state
+        # IDENTICAL to an online-only run.  Policies admit from this
+        # queue only into measured slack, accounted here.
+        self.waiting_offline: Deque[Sequence] = deque()
+        self.slack = SlackAccount()
+        self.n_offline_preemptions = 0
         self.seqs: Dict[int, Sequence] = {}
         self.slot_members: List[List[int]] = [[] for _ in range(pp_degree)]
         self.iteration = 0
@@ -225,14 +261,18 @@ class Scheduler:
         self.seqs[seq.seq_id] = seq
         self._enqueue_waiting(seq)
 
+    def _queue_for(self, seq: Sequence) -> Deque[Sequence]:
+        """The waiting queue a sequence belongs to (by tier)."""
+        return self.waiting if seq.is_online else self.waiting_offline
+
     def _enqueue_waiting(self, seq: Sequence):
-        """Insert a NEW request into the waiting queue in admission order:
-        priority first, FIFO within a priority (monotonic ids = arrival
-        order).  Resume entries at the queue FRONT — PREEMPTED sequences
-        awaiting re-admission and spawned fork children — are never
-        jumped: they already hold tokens/blocks and resume first
+        """Insert a NEW request into its tier's waiting queue in admission
+        order: priority first, FIFO within a priority (monotonic ids =
+        arrival order).  Resume entries at the queue FRONT — PREEMPTED
+        sequences awaiting re-admission and spawned fork children — are
+        never jumped: they already hold tokens/blocks and resume first
         regardless of a newcomer's priority (docs/http.md)."""
-        w = self.waiting
+        w = self._queue_for(seq)
         if not w or w[-1].priority >= seq.priority:
             w.append(seq)                      # fast path: uniform priority
             return
@@ -258,13 +298,22 @@ class Scheduler:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.waiting) or any(self.slot_members)
+        return (bool(self.waiting) or bool(self.waiting_offline)
+                or any(self.slot_members))
 
     # -- paged-KV admission / growth / preemption ----------------------------
     def can_admit_next(self) -> bool:
-        """Block-budget admission gate for the waiting-queue head (FIFO:
-        a head that does not fit blocks the queue rather than being
-        skipped).  Always True under the contiguous layout."""
+        """Block-budget admission gate for the ONLINE waiting-queue head
+        (FIFO: a head that does not fit blocks the queue rather than
+        being skipped).  Always True under the contiguous layout.
+
+        Offline-tier sequences never stand between online traffic and
+        the block pool: when the head does not fit, RUNNING offline
+        sequences are preempted-by-recompute (cheapest relief first:
+        their released blocks — including any cached blocks they pinned —
+        return to the pool at once) until the head fits or no offline
+        victim remains.  An online-only run has no offline victims, so
+        its admission decisions are untouched."""
         if self.kv is None or not self.waiting:
             return True
         head = self.waiting[0]
@@ -272,8 +321,46 @@ class Scheduler:
             return False       # never re-admit within the evicting call
         if head.forked and self.kv.has(head.seq_id):
             return True        # fork child: blocks materialized at spawn
-        return self.kv.can_admit(head.length,
-                                 token_ids=head.prompt_ids + head.output_ids)
+        token_ids = head.prompt_ids + head.output_ids
+        while not self.kv.can_admit(head.length, token_ids=token_ids,
+                                    evict_cached=False):
+            if self._demote_waiting_fork(offline_only=True):
+                continue
+            victim = self._preemption_victim(offline_only=True)
+            if victim is None:
+                # the offline tier holds nothing: the free list equals
+                # the online-only baseline, so the ordinary gate (which
+                # may reclaim cached prefix blocks at admit time) makes
+                # exactly the decision an online-only run would make
+                return self.kv.can_admit(head.length, token_ids=token_ids)
+            self._preempt(victim)
+        return True
+
+    def can_admit_next_offline(self) -> bool:
+        """Block-budget gate for the OFFLINE queue head.  Unlike the
+        online gate this never reclaims anything — offline work is
+        admitted only into blocks that are genuinely free right now
+        (``evict_cached=False``, no prefix matching), so admitting it
+        cannot disturb the prefix cache or any online sequence."""
+        if not self.waiting_offline:
+            return False
+        head = self.waiting_offline[0]
+        if head.seq_id in self._preempt_hold:
+            return False
+        if self.kv is None:
+            return True
+        if head.forked and self.kv.has(head.seq_id):
+            return True
+        return self.kv.can_admit(head.length, token_ids=None,
+                                 evict_cached=False)
+
+    def admit_next_offline(self) -> Sequence:
+        """Pop and admit the offline-queue head (policies call this only
+        after online admission has taken everything it can use)."""
+        seq = self.waiting_offline.popleft()
+        seq.mark_running()
+        self.kv_admit(seq)
+        return seq
 
     def kv_admit(self, seq: Sequence):
         """Reserve KV blocks for an admitted sequence (covers its full
@@ -291,23 +378,35 @@ class Scheduler:
         if seq.forked and self.kv.has(seq.seq_id):
             seq.prefilled = seq.prefill_len
             return
-        cached = self.kv.admit(seq.seq_id, seq.length,
-                               token_ids=seq.prompt_ids + seq.output_ids)
+        # offline sequences bypass the prefix index entirely (no matches,
+        # no registrations): sharing or evicting cached blocks on behalf
+        # of best-effort work would perturb the online trace
+        token_ids = (seq.prompt_ids + seq.output_ids) if seq.is_online \
+            else None
+        cached = self.kv.admit(seq.seq_id, seq.length, token_ids=token_ids)
         seq.cached_prefix = cached
         if cached > seq.prefilled:
             seq.prefilled = cached
 
-    def _preemption_victim(self) -> Optional[int]:
+    def _preemption_victim(self, offline_only: bool = False) -> Optional[int]:
         """Preemption victim: the lowest-priority RUNNING sequence that
         still holds blocks; latest arrival breaks priority ties (monotonic
         ids make arrival order = id order, so ``-sid`` prefers the newest).
-        Candidates are sorted first so the choice is a pure function of
-        the candidate set — never of ``seqs`` dict insertion order."""
+        Offline-tier sequences are ALWAYS chosen before any online one,
+        regardless of priority (docs/hybrid.md).  ``offline_only``
+        restricts candidates to the offline tier — used when the
+        beneficiary is itself offline (growth) or when reclaiming slack
+        for online admission, so those paths can never touch online
+        state.  Candidates are sorted first so the choice is a pure
+        function of the candidate set — never of ``seqs`` dict insertion
+        order."""
         cands = sorted(sid for sid, q in self.seqs.items()
-                       if q.status == SeqStatus.RUNNING and self.kv.has(sid))
+                       if q.status == SeqStatus.RUNNING and self.kv.has(sid)
+                       and not (offline_only and q.is_online))
         if not cands:
             return None
-        return min(cands, key=lambda sid: (self.seqs[sid].priority, -sid))
+        return min(cands, key=lambda sid: (self.seqs[sid].is_online,
+                                           self.seqs[sid].priority, -sid))
 
     def _preempt(self, victim: int):
         """Evict a RUNNING sequence under memory pressure: free its blocks,
@@ -326,14 +425,36 @@ class Scheduler:
         # plain recompute (re-admission may still prefix-cache-hit)
         seq.forked = False
         seq.cached_prefix = 0
-        self.kv.release(victim)
+        if self.kv is not None:     # seat-only mode has no blocks to free
+            self.kv.release(victim)
         for m in self.slot_members:
             if victim in m:
                 m.remove(victim)
-        self.waiting.appendleft(seq)
+        self._queue_for(seq).appendleft(seq)
         self._preempted_pending.append(victim)
         self._preempt_hold.add(victim)
         self.n_preemptions += 1
+        if not seq.is_online:
+            self.n_offline_preemptions += 1
+
+    def preempt_offline_seat(self, members: List[int]) -> bool:
+        """Free one SEAT for online admission: preempt the lowest-priority
+        (then newest) RUNNING offline member of ``members`` (the list is
+        mutated in place).  Works in both seat-only mode (no KV manager,
+        e.g. pp_sim) and paged mode; returns False when no offline member
+        remains — online admission then proceeds exactly as it would in
+        an online-only run."""
+        offline = [sid for sid in members
+                   if self.seqs[sid].status == SeqStatus.RUNNING
+                   and not self.seqs[sid].is_online]
+        if not offline:
+            return False
+        victim = min(offline,
+                     key=lambda sid: (self.seqs[sid].priority, -sid))
+        self._preempt(victim)
+        if victim in members:
+            members.remove(victim)
+        return True
 
     def _ensure_block_capacity(self, slot: int):
         """Pre-schedule growth reservation: every RUNNING member of the
@@ -348,18 +469,55 @@ class Scheduler:
             seq = self.seqs[sid]
             if seq.status != SeqStatus.RUNNING:
                 continue       # evicted as a victim earlier in this loop
-            while not self.kv.ensure(sid, seq.length):
-                # cheapest relief first: demote a not-yet-admitted fork
-                # child back to recompute (frees its CoW tail block and
-                # drops shared refs) before evicting a RUNNING sequence
-                if self._demote_waiting_fork():
-                    continue
-                victim = self._preemption_victim()
-                if victim is None:
-                    break
-                self._preempt(victim)
-                if victim == sid:
-                    break
+            if seq.is_online:
+                # Baseline-equivalent growth (docs/hybrid.md): while any
+                # offline work still holds blocks, grow from genuinely
+                # free blocks only, reclaiming offline holdings (waiting
+                # offline fork CoW tails, then RUNNING offline members)
+                # when short.  Only once the offline tier holds nothing —
+                # i.e. the free list equals what an online-only run would
+                # see — fall through to the ordinary relief chain (evict
+                # cached prefix blocks, demote online forks, preempt
+                # online victims), so hybrid traffic can never change
+                # WHICH cached blocks or online sequences get evicted.
+                while not self.kv.ensure(sid, seq.length,
+                                         evict_cached=False):
+                    if self._demote_waiting_fork(offline_only=True):
+                        continue
+                    victim = self._preemption_victim(offline_only=True)
+                    if victim is None:
+                        break
+                    self._preempt(victim)
+                else:
+                    continue   # strict growth succeeded
+                while not self.kv.ensure(sid, seq.length):
+                    # cheapest relief first: demote a not-yet-admitted
+                    # fork child back to recompute (frees its CoW tail
+                    # block and drops shared refs) before evicting a
+                    # RUNNING sequence
+                    if self._demote_waiting_fork():
+                        continue
+                    victim = self._preemption_victim()
+                    if victim is None:
+                        break
+                    self._preempt(victim)
+                    if victim == sid:
+                        break
+            else:
+                # offline grower: relief strictly within its own tier —
+                # never evict cached prefix blocks, demote online forks,
+                # or preempt online sequences for best-effort growth
+                # (self-preemption when it is the only offline holder)
+                while not self.kv.ensure(sid, seq.length,
+                                         evict_cached=False):
+                    if self._demote_waiting_fork(offline_only=True):
+                        continue
+                    victim = self._preemption_victim(offline_only=True)
+                    if victim is None:
+                        break
+                    self._preempt(victim)
+                    if victim == sid:
+                        break
 
     def _demote_fork(self, seq: Sequence):
         """Un-fork a child: release its (mostly shared) block table and
@@ -374,8 +532,17 @@ class Scheduler:
         seq.prefill_target = seq.length
         self.n_fork_demotions += 1
 
-    def _demote_waiting_fork(self) -> bool:
-        """Demote the most recently spawned WAITING fork child, if any."""
+    def _demote_waiting_fork(self, offline_only: bool = False) -> bool:
+        """Demote the most recently spawned WAITING fork child, if any.
+        Offline forks go first (their CoW tails are offline holdings —
+        reclaiming them can never perturb the online trace); with
+        ``offline_only`` the online queue is not touched at all."""
+        for seq in reversed(self.waiting_offline):
+            if seq.forked and seq.status == SeqStatus.WAITING:
+                self._demote_fork(seq)
+                return True
+        if offline_only:
+            return False
         for seq in reversed(self.waiting):
             if seq.forked and seq.status == SeqStatus.WAITING:
                 self._demote_fork(seq)
@@ -426,7 +593,10 @@ class Scheduler:
             if self.kv is not None and self.kv.fork(parent.seq_id, cid):
                 child.forked = True
                 child.cached_prefix = parent.prompt_len
-                if not self.kv.ensure(cid, child.length):
+                # an offline child's CoW tail may not evict cached prefix
+                # blocks (best-effort work must not perturb online state)
+                if not self.kv.ensure(cid, child.length,
+                                      evict_cached=parent.is_online):
                     self._demote_fork(child)
             else:
                 # contiguous layout / parent blocks already gone: full
@@ -434,7 +604,7 @@ class Scheduler:
                 child.prefilled = 0
                 child.prefill_target = child.length
             self.seqs[cid] = child
-            self.waiting.appendleft(child)
+            self._queue_for(child).appendleft(child)
             self._spawned_forks.append(child)
 
     def drain_spawned_forks(self) -> List[Sequence]:
@@ -471,8 +641,12 @@ class Scheduler:
                     # prefix index: per-stage FIFO means those writes
                     # execute on every stage before any iteration
                     # scheduled from here on can read the shared blocks
+                    # offline sequences never feed the prefix index: a
+                    # cache entry that exists only because best-effort
+                    # work ran would change online hit patterns
                     for sid, q in self.seqs.items():
-                        if q.status == SeqStatus.RUNNING and not q.forked:
+                        if (q.status == SeqStatus.RUNNING and not q.forked
+                                and q.is_online):
                             self.kv.register_prefix(
                                 sid, q.prompt_ids,
                                 min(q.prefilled, q.prompt_len))
@@ -531,7 +705,7 @@ class Scheduler:
             seq.finish_reason = "abort"
             if queued:
                 try:
-                    self.waiting.remove(seq)
+                    self._queue_for(seq).remove(seq)
                 except ValueError:
                     pass
                 self.seqs.pop(seq_id, None)
@@ -563,7 +737,10 @@ class Scheduler:
                     continue   # finished/aborted while this batch was in flight
                 if epoch is not None and seq.preemptions != epoch:
                     continue   # scheduled before an eviction: stale token
-                if seq.last_token_t is not None:
+                if seq.last_token_t is not None and seq.is_online:
+                    # TPOT-SLO feedback (adaptive budget, disaggregated
+                    # phase cap) tracks ONLINE latency only — offline
+                    # tokens steering it would alter online decisions
                     self.tpot_samples.append(now - seq.last_token_t)
                 finished_now = (seq.append(int(tok), now)
                                 or seq.length >= self.max_seq_len)

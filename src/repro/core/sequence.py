@@ -70,6 +70,18 @@ class Sequence:
         return self.params.priority
 
     @property
+    def tier(self) -> str:
+        """Workload tier (docs/hybrid.md): "online" or "offline"."""
+        return self.params.tier
+
+    @property
+    def is_online(self) -> bool:
+        """False for best-effort offline-tier work: queued separately,
+        admitted only into scheduler slack, preempted before any online
+        sequence regardless of priority."""
+        return self.params.tier != "offline"
+
+    @property
     def prefill_len(self) -> int:
         """Tokens the prefill phase must cover before sampling resumes:
         the prompt, or — after a preemption — the full token history at

@@ -36,7 +36,7 @@ def _build_engine(arch: str, *, engine: str, pp: int, max_batch: int,
                   policy: str, hysteresis_tokens: int, tpot_slo_ms: float,
                   kv_layout: str = "auto", block_size: int = 16,
                   kv_blocks: int = 0, overlap_sampling: bool = True,
-                  prefix_caching: bool = True,
+                  prefix_caching: bool = True, decode_enlarge_factor: int = 1,
                   keep_recent: int = 2048, seed: int = 0, prebuilt=None):
     """``prebuilt`` = (cfg, model, params) skips the model build — callers
     comparing several engine configs on one model (benchmarks) reuse it."""
@@ -57,6 +57,7 @@ def _build_engine(arch: str, *, engine: str, pp: int, max_batch: int,
                         kv_blocks=kv_blocks or None,
                         overlap_sampling=overlap_sampling,
                         enable_prefix_caching=prefix_caching,
+                        decode_enlarge_factor=decode_enlarge_factor,
                         keep_recent_requests=keep_recent, seed=seed)
     eng = (SiPipeEngine if engine == "sipipe" else NaivePPEngine)(
         model, params, ecfg)
@@ -105,8 +106,9 @@ def run_online(arch: str, *, engine: str = "sipipe", pp: int = 2,
                hysteresis_tokens: int = 0, tpot_slo_ms: float = 0.0,
                kv_layout: str = "auto", block_size: int = 16,
                kv_blocks: int = 0, overlap_sampling: bool = True,
-               prefix_caching: bool = True,
+               prefix_caching: bool = True, decode_enlarge_factor: int = 1,
                arrival_rate: float = 4.0, abort_every: int = 0,
+               offline_requests: int = 0,
                seed: int = 0, verbose: bool = True, prebuilt=None) -> dict:
     """Online continuous serving: replay a Poisson arrival trace through
     the step-driven request API (``add_request``/``step``/``abort``),
@@ -115,6 +117,10 @@ def run_online(arch: str, *, engine: str = "sipipe", pp: int = 2,
 
     ``abort_every`` > 0 cancels every Nth request after its first
     streamed token — the online smoke's abort-path coverage.
+
+    ``offline_requests`` > 0 enqueues that many tier="offline" batch
+    requests up front (docs/hybrid.md); they run only in scheduler
+    slack and are accounted separately from the online trace.
     """
     cfg, eng = _build_engine(arch, engine=engine, pp=pp, max_batch=max_batch,
                              max_seq_len=max_seq_len, n_samplers=n_samplers,
@@ -124,6 +130,7 @@ def run_online(arch: str, *, engine: str = "sipipe", pp: int = 2,
                              block_size=block_size, kv_blocks=kv_blocks,
                              overlap_sampling=overlap_sampling,
                              prefix_caching=prefix_caching,
+                             decode_enlarge_factor=decode_enlarge_factor,
                              seed=seed, prebuilt=prebuilt)
     wl = ShareGPTLike(cfg.vocab_size, n_requests=requests, seed=seed,
                       prompt_len_median=12, max_prompt=max_seq_len // 4,
@@ -131,9 +138,21 @@ def run_online(arch: str, *, engine: str = "sipipe", pp: int = 2,
                       max_output=max_new_tokens)
     sp_base = SamplingParams(temperature=0.8, top_k=40, top_p=0.95,
                              frequency_penalty=0.2, presence_penalty=0.1)
+    offline_rids: set = set()
+    if offline_requests:
+        owl = ShareGPTLike(cfg.vocab_size, n_requests=offline_requests,
+                           seed=seed + 7919, prompt_len_median=12,
+                           max_prompt=max_seq_len // 4,
+                           output_len_median=max_new_tokens,
+                           max_output=max_new_tokens)
+        for prompt, budget in owl.requests():
+            offline_rids.add(eng.add_request(prompt, SamplingParams(
+                **{**sp_base.__dict__, "tier": "offline",
+                   "max_new_tokens": min(budget, max_new_tokens)})))
     trace = deque(wl.arrivals(arrival_rate))
     t0 = time.monotonic()
     n_submitted = n_finished = n_aborted = 0
+    offline_finished = offline_tokens = 0
     abort_armed: set = set()
     streamed_tokens = 0
     while trace or eng.has_work:
@@ -151,6 +170,11 @@ def run_online(arch: str, *, engine: str = "sipipe", pp: int = 2,
                 abort_armed.add(rid)
         outs = eng.step()
         for out in outs:
+            if out.request_id in offline_rids:
+                offline_tokens += len(out.new_token_ids)
+                if out.finished:
+                    offline_finished += 1
+                continue
             streamed_tokens += len(out.new_token_ids)
             if out.finished:
                 n_finished += out.state.name == "FINISHED"
@@ -171,8 +195,16 @@ def run_online(arch: str, *, engine: str = "sipipe", pp: int = 2,
     m["finished"] = n_finished
     m["aborted"] = n_aborted
     m["streamed_tokens"] = streamed_tokens
+    m["offline_submitted"] = len(offline_rids)
+    m["offline_finished"] = offline_finished
+    m["offline_streamed_tokens"] = offline_tokens
+    # the accounting invariant covers the ONLINE trace only; offline
+    # completions are asserted separately (the loop runs to empty, so
+    # every offline request must have finished too)
     assert n_finished + n_aborted == n_submitted == requests, \
         (n_finished, n_aborted, n_submitted)
+    assert offline_finished == len(offline_rids), \
+        (offline_finished, len(offline_rids))
     if verbose:
         _print_metrics(m)
     return m
@@ -184,6 +216,7 @@ def build_http_server(arch: str, *, engine: str = "sipipe", replicas: int = 1,
                       policy: str = "auto", kv_layout: str = "auto",
                       block_size: int = 16, kv_blocks: int = 0,
                       max_queue: int = 64, max_active: int = 0,
+                      decode_enlarge_factor: int = 1,
                       host: str = "127.0.0.1", port: int = 0,
                       seed: int = 0, prebuilt=None):
     """Build (but don't start) the HTTP front-end: one model, N engine
@@ -208,8 +241,9 @@ def build_http_server(arch: str, *, engine: str = "sipipe", replicas: int = 1,
                                chunk_tokens=chunk_tokens, policy=policy,
                                hysteresis_tokens=0, tpot_slo_ms=0.0,
                                kv_layout=kv_layout, block_size=block_size,
-                               kv_blocks=kv_blocks, seed=seed,
-                               prebuilt=prebuilt_full)
+                               kv_blocks=kv_blocks,
+                               decode_enlarge_factor=decode_enlarge_factor,
+                               seed=seed, prebuilt=prebuilt_full)
         reps.append(EngineReplica(f"r{i}", eng))
     server = CompletionServer(Router(reps), vocab_size=cfg.vocab_size,
                               model_name=arch, max_queue=max_queue,
@@ -258,9 +292,11 @@ def run_http(arch: str, *, port: int = 8000, replicas: int = 1,
 def _http_smoke(host: str, port: int):
     """Stdlib-client smoke against a live server with max_active=1,
     max_queue=1: (1) a streamed greedy completion produces SSE chunks and
-    [DONE]; (2) with the single active slot held by a live stream and the
-    queue full, a third request gets 429 + Retry-After while the held
-    stream keeps producing; (3) /metrics scrapes as Prometheus text."""
+    [DONE]; (2) with the single active slot held by a live stream, an
+    offline /v1/batches submission still completes (it bypasses the
+    online window — docs/hybrid.md), and with the queue full a further
+    online request gets 429 + Retry-After while the held stream keeps
+    producing; (3) /metrics scrapes as Prometheus text."""
     import http.client
 
     def post(body, extra_headers=None):
@@ -289,6 +325,23 @@ def _http_smoke(host: str, port: int):
     assert hold_r.status == 200
     first = _read_sse(hold_r, max_events=1)    # it is actively decoding
     assert first and first[0] != "[DONE]"
+
+    # 2a) hybrid tier (docs/hybrid.md): with max_active=1 HELD by the
+    #     live stream, an offline batch must still go through — offline
+    #     bypasses the online dispatch window and runs in engine slack
+    cb = http.client.HTTPConnection(host, port, timeout=120)
+    cb.request("POST", "/v1/batches", json.dumps({
+        "requests": [{"prompt": [7, 8, 9], "max_tokens": 3,
+                      "temperature": 0.0}]}),
+               {"Content-Type": "application/json"})
+    rb = cb.getresponse()
+    assert rb.status == 200, rb.status
+    batch = json.loads(rb.read())
+    cb.close()
+    assert batch["object"] == "batch", batch
+    assert len(batch["results"]) == 1
+    assert len(batch["results"][0]["choices"][0]["token_ids"]) == 3, batch
+
     import threading as _t
     queued_done = _t.Event()
 
@@ -330,6 +383,8 @@ def _http_smoke(host: str, port: int):
     c5.close()
     assert 'repro_requests_finished{replica="r0"}' in text, text[:400]
     assert "repro_admission_rejected_total 1" in text, text[:400]
+    assert "repro_admission_offline_admitted_total 1" in text, text[:400]
+    assert 'repro_slack_tokens_sold{replica="r0"}' in text, text[:400]
 
 
 def _read_sse(resp, max_events: int = 0):
@@ -427,6 +482,14 @@ def main():
     ap.add_argument("--abort-every", type=int, default=0,
                     help="online mode: abort every Nth request after its "
                          "first streamed token (0 = never)")
+    ap.add_argument("--offline-requests", type=int, default=0,
+                    help="online mode: tier='offline' batch requests "
+                         "enqueued up front, served only in scheduler "
+                         "slack (docs/hybrid.md; paged layout)")
+    ap.add_argument("--decode-enlarge-factor", type=int, default=1,
+                    help="disaggregated policy: decode-phase batch "
+                         "enlargement cap for offline work, pow2 rungs "
+                         "up to max_batch * factor (docs/hybrid.md)")
     args = ap.parse_args()
     common = dict(engine=args.engine, pp=args.pp, requests=args.requests,
                   max_batch=args.max_batch, max_new_tokens=args.max_new_tokens,
@@ -434,7 +497,8 @@ def main():
                   policy=args.policy, hysteresis_tokens=args.hysteresis_tokens,
                   tpot_slo_ms=args.tpot_slo_ms, kv_layout=args.kv_layout,
                   block_size=args.block_size, kv_blocks=args.kv_blocks,
-                  prefix_caching=not args.no_prefix_caching)
+                  prefix_caching=not args.no_prefix_caching,
+                  decode_enlarge_factor=args.decode_enlarge_factor)
     if args.http:
         raise SystemExit(run_http(
             args.arch, port=args.port, replicas=args.replicas,
@@ -446,8 +510,10 @@ def main():
             max_active=args.max_active))
     if args.online:
         run_online(args.arch, arrival_rate=args.arrival_rate,
-                   abort_every=args.abort_every, **common)
+                   abort_every=args.abort_every,
+                   offline_requests=args.offline_requests, **common)
     else:
+        common.pop("decode_enlarge_factor", None)
         run(args.arch, n_samples=args.n_samples, **common)
 
 

@@ -478,7 +478,13 @@ class BlockSpaceManager:
                        if self.alloc._refs.get(e.block, 0) == 1)
 
     # -- scheduler-side operations ------------------------------------------
-    def can_admit(self, length: int, token_ids=None) -> bool:
+    def can_admit(self, length: int, token_ids=None,
+                  evict_cached: bool = True) -> bool:
+        """``evict_cached=False`` counts only genuinely free blocks as
+        supply (no cached-prefix reclamation): admission that passes this
+        stricter gate is guaranteed not to evict anything from the prefix
+        cache — used for offline-tier admission and for the scheduler's
+        baseline-equivalence reclaim loop (docs/hybrid.md)."""
         with self._lock:
             need = self.blocks_for(length)
             supply = self.alloc.free_blocks
@@ -489,10 +495,11 @@ class BlockSpaceManager:
                         length, self._prefix.match(token_ids))
                 ms = set(matched)
                 need -= len(matched)
-                supply += sum(
-                    1 for e in self._prefix._entries.values()
-                    if self.alloc._refs.get(e.block, 0) == 1
-                    and e.block not in ms)
+                if evict_cached:
+                    supply += sum(
+                        1 for e in self._prefix._entries.values()
+                        if self.alloc._refs.get(e.block, 0) == 1
+                        and e.block not in ms)
             return need <= supply
 
     def admit(self, seq_id: int, length: int, token_ids=None) -> int:
@@ -527,13 +534,19 @@ class BlockSpaceManager:
                                      self._prefix.key_of(shared[-1]))
             return len(shared) * self.block_size
 
-    def ensure(self, seq_id: int, length: int) -> bool:
+    def ensure(self, seq_id: int, length: int,
+               evict_cached: bool = True) -> bool:
         """Grow ``seq_id``'s table to cover ``length`` tokens and make
         the write-target block (the decode writes slot ``length - 1``)
         exclusively owned, CoW-ing a fork-shared tail.  Cached prefix
         blocks are evicted under pressure before giving up; returns
         False (allocating nothing) only when growth + CoW still cannot
-        be covered — the caller preempts and retries."""
+        be covered — the caller preempts and retries.
+
+        ``evict_cached=False`` grows from genuinely free blocks only,
+        failing instead of touching the prefix cache — used for
+        offline-tier growth and the scheduler's baseline-equivalence
+        path (docs/hybrid.md)."""
         with self._lock:
             if not self.alloc.has(seq_id):
                 return False
@@ -541,7 +554,7 @@ class BlockSpaceManager:
             ws = ((length - 1) % self.slot_cap if self.slot_cap is not None
                   else length - 1)
             while not self.alloc.grow_to(seq_id, slots, write_slot=ws):
-                if self._evict_cached(1) == 0:
+                if not evict_cached or self._evict_cached(1) == 0:
                     return False
             return True
 

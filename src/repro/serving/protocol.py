@@ -65,6 +65,7 @@ class CompletionRequest:
     n: int = 1
     stream: bool = False
     priority: int = 0
+    tier: str = "online"    # hybrid serving (docs/hybrid.md)
     tenant: str = "anonymous"
     echo_prompt: bool = False
 
@@ -77,7 +78,7 @@ class CompletionRequest:
             temperature=self.temperature if not self.greedy else 1.0,
             top_p=self.top_p, top_k=self.top_k, greedy=self.greedy,
             max_new_tokens=self.max_tokens, n=self.n,
-            priority=self.priority)
+            priority=self.priority, tier=self.tier)
 
 
 def parse_completion_request(body: Dict[str, Any], vocab_size: int, *,
@@ -120,6 +121,10 @@ def parse_completion_request(body: Dict[str, Any], vocab_size: int, *,
     top_p = field("top_p", float, 1.0)
     if not 0.0 < top_p <= 1.0:
         raise ProtocolError("top_p must be in (0, 1]")
+    tier = field("tier", str, "online")
+    if tier not in ("online", "offline"):
+        raise ProtocolError(
+            f"tier must be 'online' or 'offline', got {tier!r}")
     return CompletionRequest(
         prompt_ids=prompt_ids,
         model=field("model", str, "repro"),
@@ -130,6 +135,7 @@ def parse_completion_request(body: Dict[str, Any], vocab_size: int, *,
         n=n,
         stream=field("stream", bool, False),
         priority=field("priority", int, 0),
+        tier=tier,
         tenant=tenant or field("user", str, "anonymous"),
     )
 

@@ -76,9 +76,21 @@ class EngineReplica:
 
     def load(self) -> Dict[str, int]:
         """Engine load snapshot plus the not-yet-ingested submit backlog.
-        Reads only counters/lens — safe from any thread."""
+        Reads only counters/lens — safe from any thread.  The backlog is
+        split by tier: offline submissions ride ``offline_queue_depth``
+        so a deep batch backlog never repels ONLINE placements
+        (docs/hybrid.md — the engine runs offline work in slack only)."""
         snap = self.engine.load()
-        snap["queue_depth"] += self._submit_q.qsize()
+        backlog_online = backlog_offline = 0
+        with self._submit_q.mutex:
+            for sub in self._submit_q.queue:
+                if getattr(sub.params, "tier", "online") == "offline":
+                    backlog_offline += 1
+                else:
+                    backlog_online += 1
+        snap["queue_depth"] += backlog_online
+        snap["offline_queue_depth"] = (
+            snap.get("offline_queue_depth", 0) + backlog_offline)
         return snap
 
     def submit(self, prompt_ids: List[int], params: SamplingParams,

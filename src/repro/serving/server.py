@@ -7,7 +7,15 @@ Endpoints (all JSON unless noted):
                          Server-Sent Events (``data: {chunk}\\n\\n`` ...
                          ``data: [DONE]\\n\\n``), else the aggregate
                          completion object.  ``n > 1`` streams every
-                         fork as its own choice index.
+                         fork as its own choice index.  ``"tier":
+                         "offline"`` marks best-effort batch traffic
+                         (docs/hybrid.md).
+  POST /v1/batches       offline batch enqueue: ``{"requests": [...]}``
+                         of completion bodies, all forced to the
+                         offline tier; blocks until every one finishes
+                         and returns their completion objects in order.
+                         Offline queue overflow is 503 + a tier body,
+                         not 429 (batch clients back off, not retry).
   GET  /v1/models        the served model list.
   GET  /health           router + replica health.
   GET  /metrics          Prometheus text of every replica's
@@ -113,9 +121,11 @@ class _Handler(BaseHTTPRequestHandler):
         self.wfile.write(body)
 
     def _error(self, code: int, message: str,
-               headers: Optional[Dict[str, str]] = None):
-        self._send_json(code, {"error": {"message": message,
-                                         "code": code}}, headers)
+               headers: Optional[Dict[str, str]] = None,
+               body_extra: Optional[Dict[str, Any]] = None):
+        err: Dict[str, Any] = {"message": message, "code": code}
+        err.update(body_extra or {})
+        self._send_json(code, {"error": err}, headers)
 
     def _tenant(self, body: Dict[str, Any]) -> Optional[str]:
         key = self.headers.get("X-API-Key")
@@ -153,8 +163,25 @@ class _Handler(BaseHTTPRequestHandler):
         else:
             self._error(404, f"no such endpoint: {self.path}")
 
-    # -- POST /v1/completions ------------------------------------------------
+    def _queue_full(self, e: "adm.QueueFull"):
+        """Map a tier's queue overflow to its status: online -> 429 +
+        Retry-After (interactive clients retry soon), offline -> 503 + a
+        tier-carrying body (batch clients should back off).  Both bodies
+        name the tier so callers can tell WHICH queue overflowed."""
+        if e.tier == "offline":
+            self._error(503, "offline admission queue full",
+                        body_extra={"tier": "offline",
+                                    "retry_after": e.retry_after})
+        else:
+            self._error(429, "admission queue full",
+                        {"Retry-After": str(e.retry_after)},
+                        body_extra={"tier": "online"})
+
+    # -- POST /v1/completions, /v1/batches -----------------------------------
     def do_POST(self):
+        if self.path == "/v1/batches":
+            self._batches()
+            return
         if self.path != "/v1/completions":
             self._error(404, f"no such endpoint: {self.path}")
             return
@@ -174,10 +201,9 @@ class _Handler(BaseHTTPRequestHandler):
 
         try:
             ticket = ctx.admission.submit(priority=req.priority,
-                                          tenant=req.tenant)
+                                          tenant=req.tenant, tier=req.tier)
         except adm.QueueFull as e:
-            self._error(429, "admission queue full",
-                        {"Retry-After": str(e.retry_after)})
+            self._queue_full(e)
             return
         except adm.Closed:
             self._error(503, "server is draining")
@@ -290,14 +316,16 @@ class _Handler(BaseHTTPRequestHandler):
                 emit(proto.SSE_DONE)
                 return
 
-    def _aggregate(self, req, replica, rid, out_q, created):
+    def _collect(self, req, replica, rid, out_q,
+                 created) -> Optional[Dict[str, Any]]:
+        """Drain a request's RequestOutputs to completion; the aggregate
+        completion payload, or None on replica failure."""
         toks: Dict[int, list] = {0: []}
         reasons: Dict[int, Optional[str]] = {}
         while True:
             out = self._next_output(replica, rid, out_q)
             if out is None:
-                self._error(500, "replica failed mid-request")
-                return
+                return None
             toks[0].extend(out.new_token_ids)
             for fo in out.forks or []:
                 toks.setdefault(fo.index, []).extend(fo.new_token_ids)
@@ -308,5 +336,90 @@ class _Handler(BaseHTTPRequestHandler):
                 break
         choices = [{"token_ids": toks[i], "finish_reason": reasons.get(i)}
                    for i in sorted(toks)]
-        self._send_json(200, proto.completion_response(
-            rid, created, req.model, choices, len(req.prompt_ids)))
+        return proto.completion_response(
+            rid, created, req.model, choices, len(req.prompt_ids))
+
+    def _aggregate(self, req, replica, rid, out_q, created):
+        payload = self._collect(req, replica, rid, out_q, created)
+        if payload is None:
+            self._error(500, "replica failed mid-request")
+        else:
+            self._send_json(200, payload)
+
+    # -- POST /v1/batches ----------------------------------------------------
+    def _batches(self):
+        """Offline batch enqueue (docs/hybrid.md): every entry of the
+        ``requests`` list is parsed as a completion body FORCED to the
+        offline tier, submitted through admission (offline cap, no
+        online window) + the router, and the response blocks until all
+        of them finish.  The engines run them only in scheduler slack —
+        a saturating batch here never delays online traffic."""
+        ctx = self.ctx
+        try:
+            length = int(self.headers.get("Content-Length", 0))
+            body = json.loads(self.rfile.read(length) or b"{}")
+            if not isinstance(body, dict):
+                raise proto.ProtocolError("request body must be a JSON object")
+            entries = body.get("requests")
+            if not isinstance(entries, list) or not entries:
+                raise proto.ProtocolError(
+                    "'requests' must be a non-empty list of completion "
+                    "request objects")
+            tenant = self._tenant(body)
+            reqs = []
+            for entry in entries:
+                if not isinstance(entry, dict):
+                    raise proto.ProtocolError(
+                        "each batch entry must be a JSON object")
+                entry = dict(entry, tier="offline", stream=False)
+                reqs.append(proto.parse_completion_request(
+                    entry, ctx.vocab_size, tenant=tenant,
+                    max_tokens_cap=ctx.max_tokens_cap))
+        except (json.JSONDecodeError, UnicodeDecodeError):
+            self._error(400, "request body is not valid JSON")
+            return
+        except proto.ProtocolError as e:
+            self._error(400, str(e))
+            return
+
+        tickets = []
+        try:
+            try:
+                for r in reqs:
+                    tickets.append(ctx.admission.submit(
+                        priority=r.priority, tenant=r.tenant,
+                        tier="offline"))
+            except adm.QueueFull as e:
+                self._queue_full(e)
+                return
+            except adm.Closed:
+                self._error(503, "server is draining")
+                return
+            created = int(time.time())
+            submitted = []
+            try:
+                for r in reqs:
+                    replica, rid, out_q = ctx.router.submit(
+                        r.prompt_ids, r.sampling_params(),
+                        arrival_t=time.monotonic())
+                    submitted.append((r, replica, rid, out_q))
+            except (ReplicaUnavailable, ValueError) as e:
+                for _, replica, rid, _ in submitted:
+                    replica.abort(rid)
+                self._error(503 if isinstance(e, ReplicaUnavailable)
+                            else 400, str(e))
+                return
+            results = []
+            for r, replica, rid, out_q in submitted:
+                payload = self._collect(r, replica, rid, out_q, created)
+                if payload is None:
+                    for _, rep2, rid2, _ in submitted:
+                        rep2.abort(rid2)
+                    self._error(500, "replica failed mid-batch")
+                    return
+                results.append(payload)
+            self._send_json(200, {"object": "batch", "created": created,
+                                  "results": results})
+        finally:
+            for t in tickets:
+                ctx.admission.release(t)

@@ -128,3 +128,125 @@ def test_snapshot_counters():
     assert s["admission_dispatched_total"] == 2
     assert s["admission_active"] == 1 and s["admission_pending"] == 0
     ac.release(b)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid tiers (docs/hybrid.md): offline bypasses the online window
+# ---------------------------------------------------------------------------
+
+def test_offline_tickets_bypass_the_online_window():
+    """Offline tickets dispatch immediately even with the online window
+    full — pacing happens in the engine's slack scheduler, not here —
+    and never consume online queue/window capacity."""
+    ac = AdmissionController(max_queue=1, max_active=1)
+    hold = ac.submit()                   # fills the online window
+    off = [ac.submit(tier="offline") for _ in range(3)]
+    assert all(t.dispatched.is_set() for t in off)
+    assert all(t.tier == "offline" for t in off)
+    # online capacity untouched by the offline traffic
+    on = ac.submit()                     # pending 1/1 — not rejected
+    assert not on.dispatched.is_set()
+    s = ac.snapshot()
+    assert s["admission_offline_live"] == 3
+    assert s["admission_offline_admitted_total"] == 3
+    assert s["admission_active"] == 1 and s["admission_pending"] == 1
+    # offline release never pumps the online window
+    _drain(ac, *off)
+    assert not on.dispatched.is_set()
+    assert ac.snapshot()["admission_offline_live"] == 0
+    ac.release(hold)
+    assert on.dispatched.is_set()
+
+
+def test_offline_cap_rejects_with_offline_tier_tag():
+    ac = AdmissionController(max_queue=1, max_active=1, max_queue_offline=2)
+    t = [ac.submit(tier="offline") for _ in range(2)]
+    with pytest.raises(QueueFull) as ei:
+        ac.submit(tier="offline")
+    assert ei.value.tier == "offline"
+    assert ei.value.retry_after >= 1
+    # the ONLINE queue is still wide open (distinct pools)
+    on = ac.submit()
+    assert on.dispatched.is_set() and on.tier == "online"
+    assert ac.snapshot()["admission_offline_rejected_total"] == 1
+    _drain(ac, *t)
+
+
+def test_online_queue_full_reports_online_tier():
+    ac = AdmissionController(max_queue=1, max_active=1)
+    ac.submit()
+    ac.submit()
+    with pytest.raises(QueueFull) as ei:
+        ac.submit()
+    assert ei.value.tier == "online"
+
+
+# ---------------------------------------------------------------------------
+# Drain-rate Retry-After (satellite: no more constant 1)
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_retry_after_reflects_measured_drain_rate():
+    """After observed releases, the 429 hint is (depth+1)/rate rounded
+    up — a queue draining one request per 4s with one waiter ahead of
+    you says 'come back in 8s', not '1s'."""
+    clk = _Clock()
+    ac = AdmissionController(max_queue=1, max_active=1, clock=clk)
+    a = ac.submit()
+    b = ac.submit()
+    ac.release(a)                        # release at t=0
+    clk.t = 4.0
+    ac.release(b)                        # second release: rate = 0.25/s
+    c = ac.submit()                      # window free again
+    ac.submit()                          # pending 1/1
+    with pytest.raises(QueueFull) as ei:
+        ac.submit()
+    assert ei.value.retry_after == 8     # ceil((1 + 1) / 0.25)
+    ac.release(c)
+
+
+def test_retry_after_clamps_to_sane_bounds():
+    clk = _Clock()
+    ac = AdmissionController(max_queue=1, max_active=1, clock=clk)
+    a = ac.submit()
+    b = ac.submit()
+    ac.release(a)
+    clk.t = 0.001                        # blistering drain -> clamp low
+    ac.release(b)
+    c = ac.submit()
+    ac.submit()
+    with pytest.raises(QueueFull) as ei:
+        ac.submit()
+    assert ei.value.retry_after == 1
+    ac.release(c)
+
+    clk2 = _Clock()
+    ac2 = AdmissionController(max_queue=1, max_active=1, clock=clk2)
+    a = ac2.submit()
+    b = ac2.submit()
+    ac2.release(a)
+    clk2.t = 500.0                       # glacial drain -> clamp at 60
+    ac2.release(b)
+    c = ac2.submit()
+    ac2.submit()
+    with pytest.raises(QueueFull) as ei:
+        ac2.submit()
+    assert ei.value.retry_after == 60
+    ac2.release(c)
+
+
+def test_retry_after_falls_back_without_history():
+    # fewer than two observed releases: keep the configured constant
+    ac = AdmissionController(max_queue=1, max_active=1, retry_after_s=3)
+    ac.submit()
+    ac.submit()
+    with pytest.raises(QueueFull) as ei:
+        ac.submit()
+    assert ei.value.retry_after == 3

@@ -1,0 +1,261 @@
+"""Hybrid online/offline serving (docs/hybrid.md).
+
+The load-bearing property: the ONLINE tier's schedule is bit-identical
+with and without a saturating offline backlog — offline traffic rides
+only in slack (leftover seats, leftover token budget, strictly
+non-evicting block admission) and is reclaimed before any online
+decision would change.  Verified here as a trace property on the real
+scheduler across policies, KV pressure and enlargement factors, plus
+an engine-level token-stream check; the victim-ordering units live in
+tests/test_priority.py and the HTTP-tier units in tests/test_admission.py.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.engine import EngineConfig, SiPipeEngine
+from repro.core.policies import make_policy
+from repro.core.sampling_params import SamplingParams
+from repro.core.scheduler import Scheduler, SlackAccount
+from repro.core.sequence import SeqStatus, Sequence
+from repro.models import ModelOptions, ShardCtx, build_model
+from repro.runtime.paged_kv import BlockSpaceManager
+
+OFFLINE_BASE = 1000          # offline seq ids: disjoint from online ids
+
+
+def _params(n_new, tier="online", priority=0):
+    return SamplingParams(greedy=True, max_new_tokens=n_new, tier=tier,
+                          priority=priority)
+
+
+def _mk_sched(policy, *, max_batch, budget, kv_blocks=None, block_size=4,
+              factor=1, max_seq_len=128):
+    kv = (BlockSpaceManager(kv_blocks, block_size, max_slots=max_seq_len)
+          if kv_blocks else None)
+    return Scheduler(max_batch=max_batch, pp_degree=2,
+                     max_seq_len=max_seq_len,
+                     token_budget=budget if policy != "monolithic" else None,
+                     policy=policy, kv_manager=kv,
+                     decode_enlarge_factor=factor)
+
+
+def _add_online(s, plens, n_new):
+    for i, pl in enumerate(plens):
+        # online token alphabet: [1, 100)
+        s.add_request(Sequence(i, [1 + (j % 99) for j in range(pl)],
+                               _params(n_new)))
+
+
+def _add_offline(s, plens, n_new):
+    for j, pl in enumerate(plens):
+        # offline token alphabet: [200, 300) — disjoint, so any leak of
+        # offline tokens into the online stream is visible
+        s.add_request(Sequence(OFFLINE_BASE + j,
+                               [200 + (k % 99) for k in range(pl)],
+                               _params(n_new, tier="offline")))
+
+
+def _drive_online_trace(s, max_iters=20_000):
+    """Run to completion; per-iteration ONLINE sub-records keyed by
+    iteration number: (online seq ids in batch order, their spans,
+    sampled online ids)."""
+    trace = {}
+    for it in range(max_iters):
+        o = s.schedule(it)
+        if o is None:
+            if not s.has_work:
+                break
+            continue
+        on = [(i, sid) for i, sid in enumerate(o.seq_ids)
+              if sid < OFFLINE_BASE]
+        cols = o.sample_indices()
+        if on:
+            spans = (tuple(o.spans[i] for i, _ in on)
+                     if o.spans is not None else None)
+            trace[it] = (tuple(sid for _, sid in on), spans,
+                         tuple(o.seq_ids[i] for i in cols
+                               if o.seq_ids[i] < OFFLINE_BASE))
+        ids = [o.seq_ids[i] for i in cols]
+        toks = np.array([7 if sid < OFFLINE_BASE else 207 for sid in ids],
+                        np.int32)
+        s.complete(it, ids, toks)
+    else:
+        pytest.fail("scheduler did not drain")
+    return trace
+
+
+# ---------------------------------------------------------------------------
+# THE property: online sub-trace invariance under a saturating offline queue
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12)
+@given(
+    policy=st.sampled_from(["monolithic", "chunked", "disaggregated"]),
+    plens=st.lists(st.integers(1, 12), min_size=1, max_size=5),
+    off_plens=st.lists(st.integers(1, 12), min_size=1, max_size=8),
+    n_new=st.integers(1, 6),
+    max_batch=st.integers(1, 3),
+    budget=st.integers(4, 16),
+    kv_blocks=st.sampled_from([None, 10, 16, 24]),
+    factor=st.sampled_from([1, 2, 4]),
+)
+def test_offline_backlog_never_perturbs_online_trace(
+        policy, plens, off_plens, n_new, max_batch, budget, kv_blocks,
+        factor):
+    """The online-only trace (batch membership, spans, sampled ids per
+    iteration) is bit-identical whether or not a saturating offline
+    backlog is enqueued — across policies, seat pressure, block
+    pressure, and decode enlargement."""
+    if policy != "disaggregated":
+        factor = 1
+    if kv_blocks is not None:
+        # every sequence must fit (same invariant the engine enforces)
+        need = -(-(max(plens + off_plens) + n_new) // 4)
+        if kv_blocks < 2 * need:
+            kv_blocks = 2 * need
+    base = _mk_sched(policy, max_batch=max_batch, budget=budget,
+                     kv_blocks=kv_blocks, factor=factor)
+    _add_online(base, plens, n_new)
+    ref = _drive_online_trace(base)
+
+    hyb = _mk_sched(policy, max_batch=max_batch, budget=budget,
+                    kv_blocks=kv_blocks, factor=factor)
+    _add_online(hyb, plens, n_new)
+    _add_offline(hyb, off_plens, n_new)
+    got = _drive_online_trace(hyb)
+    assert got == ref
+    # and the offline work actually completed (no starvation)
+    assert not hyb.waiting_offline and not hyb.has_work
+    assert hyb.slack.tokens_sold > 0
+
+
+def test_offline_only_workload_completes_with_enlargement():
+    """With no online traffic at all, the disaggregated phase machine
+    runs on the offline tier: prefill accumulates members beyond
+    max_batch, decode batches sit on pow2 rungs only, and rotation
+    drains every sequence (no starvation between rungs)."""
+    # 12 prompts over p=2 slots -> ~6 members per slot: enough to clear
+    # the first rung (2*mb = 4) with headroom below the cap (4*mb = 8)
+    s = _mk_sched("disaggregated", max_batch=2, budget=8, factor=4)
+    _add_offline(s, [6, 5, 7, 4, 6, 5, 4, 6, 5, 7, 4, 5], n_new=5)
+    widths = set()
+    for it in range(10_000):
+        o = s.schedule(it)
+        if o is None:
+            if not s.has_work:
+                break
+            continue
+        if o.spans is not None and all(c == 1 for _, c in o.spans):
+            widths.add(len(o.seq_ids))
+        ids = [o.seq_ids[i] for i in o.sample_indices()]
+        s.complete(it, ids, np.full(len(ids), 207, np.int32))
+    assert not s.has_work
+    # decode widths only at ladder rungs: <= max_batch, or 2x/4x exactly
+    assert all(w <= 2 or w in (4, 8) for w in widths), widths
+    assert any(w > 2 for w in widths), "enlargement never engaged"
+    assert s.policy.enlarged_decode_iters > 0
+    assert s.policy.metrics()["decode_enlarge_factor"] == 4
+
+
+def test_slack_account_counts_offers_and_sales():
+    a = SlackAccount()
+    a.see(0)            # empty offer: not an offer at all
+    a.see(3)
+    a.see(2)
+    a.sell(0)
+    a.sell(4)
+    assert a.offers == 2
+    assert a.seats_seen == 5
+    assert a.tokens_sold == 4
+
+
+def test_enlarge_factor_validation():
+    with pytest.raises(ValueError, match="decode_enlarge_factor"):
+        make_policy("chunked", token_budget=8, decode_enlarge_factor=2)
+    with pytest.raises(ValueError, match="decode_enlarge_factor"):
+        make_policy("disaggregated", token_budget=8, decode_enlarge_factor=0)
+    p = make_policy("disaggregated", token_budget=8, decode_enlarge_factor=4)
+    assert p.decode_enlarge_factor == 4
+
+
+def test_sampling_params_tier_validation():
+    with pytest.raises(ValueError, match="tier"):
+        SamplingParams(tier="batch")
+    assert SamplingParams(tier="offline").tier == "offline"
+
+
+def test_offline_queue_is_separate_and_priority_ordered():
+    s = _mk_sched("chunked", max_batch=2, budget=8)
+    _add_online(s, [4], 2)
+    s.add_request(Sequence(OFFLINE_BASE, [201, 202],
+                           _params(2, tier="offline", priority=0)))
+    s.add_request(Sequence(OFFLINE_BASE + 1, [203, 204],
+                           _params(2, tier="offline", priority=5)))
+    assert [q.seq_id for q in s.waiting] == [0]
+    assert [q.seq_id for q in s.waiting_offline] == [OFFLINE_BASE + 1,
+                                                     OFFLINE_BASE]
+
+
+# ---------------------------------------------------------------------------
+# Engine e2e: online token streams identical with/without offline traffic
+# ---------------------------------------------------------------------------
+
+def _model():
+    cfg = get_config("stablelm-1.6b-smoke")
+    model = build_model(cfg, ShardCtx.single(), ModelOptions())
+    return cfg, model, model.init(jax.random.key(0))
+
+
+@pytest.mark.slow
+def test_engine_online_streams_bit_exact_under_offline_load():
+    cfg, model, params = _model()
+    rng = np.random.default_rng(11)
+    online = [list(map(int, rng.integers(2, cfg.vocab_size, size=n)))
+              for n in (14, 9, 6)]
+    offline = [list(map(int, rng.integers(2, cfg.vocab_size, size=n)))
+               for n in (10, 8, 12, 7)]
+
+    def run(with_offline):
+        eng = SiPipeEngine(model, params, EngineConfig(
+            pp_degree=2, max_batch=2, max_seq_len=48, n_samplers=2,
+            prefill_chunk_tokens=8, scheduling_policy="chunked",
+            kv_layout="paged", kv_block_size=4, kv_blocks=20))
+        rids = [eng.add_request(p, _params(6)) for p in online]
+        if with_offline:
+            for p in offline:
+                eng.add_request(p, _params(5, tier="offline"))
+        while eng.has_work:
+            eng.step()
+        eng.shutdown()
+        outs = {q.seq_id: list(q.output_ids) for q in eng.scheduler.finished}
+        return [outs[r] for r in rids], eng.metrics()
+
+    ref, m0 = run(False)
+    got, m1 = run(True)
+    assert got == ref
+    assert m0["slack_tokens_sold"] == 0          # nothing to sell solo
+    assert m1["slack_tokens_sold"] > 0
+    assert m1["offline_requests_seen"] == len(offline)
+    assert m1["kv_blocks_free"] == m1["kv_blocks_total"]
+
+
+def test_engine_rejects_offline_tier_on_contiguous_layout():
+    cfg, model, params = _model()
+    eng = SiPipeEngine(model, params, EngineConfig(
+        pp_degree=2, max_batch=2, max_seq_len=48,
+        kv_layout="contiguous"))
+    with pytest.raises(ValueError, match="offline"):
+        eng.add_request([3, 4, 5], _params(2, tier="offline"))
+    eng.shutdown()
+
+
+def test_engine_rejects_enlargement_on_contiguous_layout():
+    cfg, model, params = _model()
+    with pytest.raises(ValueError, match="decode_enlarge_factor"):
+        SiPipeEngine(model, params, EngineConfig(
+            pp_degree=2, max_batch=2, max_seq_len=48,
+            kv_layout="contiguous", prefill_chunk_tokens=8,
+            scheduling_policy="disaggregated", decode_enlarge_factor=2))

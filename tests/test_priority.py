@@ -108,6 +108,73 @@ def test_preemption_victim_is_insertion_order_independent(prios, want):
         assert s._preemption_victim() == want, f"order={order}"
 
 
+# ---------------------------------------------------------------------------
+# Hybrid tiers: offline sequences are ALWAYS the first victims
+# ---------------------------------------------------------------------------
+
+def _tier_seq(sid, tier, priority=0, plen=5):
+    return Sequence(sid, list(range(1, plen + 1)),
+                    SamplingParams(greedy=True, max_new_tokens=4,
+                                   priority=priority, tier=tier))
+
+
+def _mixed_sched(rows):
+    """rows: [(sid, tier, priority), ...] inserted in every permutation
+    by the callers; here in the given order."""
+    kv = BlockSpaceManager(32, 4)
+    s = Scheduler(max_batch=8, pp_degree=1, max_seq_len=64, kv_manager=kv)
+    for sid, tier, pr in rows:
+        seq = _tier_seq(sid, tier, pr)
+        s.seqs[sid] = seq
+        seq.mark_running()
+        s.kv_admit(seq)
+    return s
+
+
+def test_offline_victim_beats_every_online_priority():
+    """An offline seq at priority 5 falls before an online seq at
+    priority -3: tier dominates the victim key (docs/hybrid.md)."""
+    for rows in itertools.permutations([(0, "online", -3), (1, "offline", 5),
+                                        (2, "online", 0)]):
+        s = _mixed_sched(rows)
+        assert s._preemption_victim() == 1, f"rows={rows}"
+
+
+def test_offline_victims_order_by_priority_then_newest():
+    s = _mixed_sched([(0, "offline", 2), (1, "offline", 0),
+                      (2, "offline", 0), (3, "online", -9)])
+    assert s._preemption_victim() == 2          # lowest offline prio, newest
+    s._preempt(2)
+    assert s._preemption_victim() == 1
+    s._preempt(1)
+    assert s._preemption_victim() == 0          # offline exhausted last
+    s._preempt(0)
+    assert s._preemption_victim() == 3          # only then online
+    assert s.n_offline_preemptions == 3
+
+
+def test_offline_only_victim_search_skips_online():
+    s = _mixed_sched([(0, "online", 0), (1, "online", 5)])
+    assert s._preemption_victim(offline_only=True) is None
+    assert s._preemption_victim() == 0          # lowest priority value
+
+
+def test_preempt_offline_seat_picks_member_victim():
+    s = _mixed_sched([(0, "online", 0), (1, "offline", 3), (2, "offline", 0)])
+    members = [0, 1, 2]
+    assert s.preempt_offline_seat(members)
+    assert members == [0, 1]                    # lowest-prio offline evicted
+    assert s.seqs[2].status == SeqStatus.PREEMPTED
+    # the evicted offline seq goes back to its OWN queue, not the online one
+    assert [q.seq_id for q in s.waiting_offline] == [2]
+    assert not s.waiting
+    assert s.preempt_offline_seat(members)
+    assert members == [0]
+    assert not s.preempt_offline_seat(members)  # online-only: refuses
+    assert s.seqs[0].status == SeqStatus.RUNNING
+    assert s.n_offline_preemptions == 2
+
+
 def test_preemption_victim_skips_blockless_and_non_running():
     s = _running_sched((0, 1, 2), (0, 0, 0))
     s.kv.release(2)                       # latest no longer holds blocks
